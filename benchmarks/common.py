@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: timed jit'd calls, CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Best-of-N wall time (seconds) of a jit'd call, sync'd."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

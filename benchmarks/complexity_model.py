@@ -1,0 +1,62 @@
+"""Paper Sec. IV: operation-count model.
+
+  C_GEMM        = M N^3            C_ne_GEMM   = 2 M N^2
+  C_conv_time   = 4 M N^2          C_ne_conv   = 2 M N
+  C_conv_freq   = M[(45N+15)log2(3N+1)+3N+1]
+  C_cs_*        = +1/M of the main op + 2MN(^2) checksum generation
+
+Claims checked: NE relative overhead < 0.3% for practical N, M and -> 0 as
+N -> inf; checksum overhead -> 1/M (> 4% even at M=32)."""
+from __future__ import annotations
+
+import math
+
+
+def ne_gemm_ratio(M, N):
+    return (2 * M * N**2) / (M * N**3)
+
+
+def ne_conv_time_ratio(M, N):
+    return (2 * M * N) / (4 * M * N**2)
+
+
+def ne_conv_freq_ratio(M, N):
+    c = M * ((45 * N + 15) * math.log2(3 * N + 1) + 3 * N + 1)
+    return (2 * M * N) / c
+
+
+def cs_gemm_ratio(M, N):
+    return (2 * M * N**2 + (M * N**3) / M) / (M * N**3)
+
+
+def cs_conv_time_ratio(M, N):
+    return (2 * M * N + (4 * M * N**2) / M) / (4 * M * N**2)
+
+
+def run(emit):
+    for M in (3, 8, 32):
+        for N in (100, 1000):
+            r_g, r_ct, r_cf = (ne_gemm_ratio(M, N), ne_conv_time_ratio(M, N),
+                               ne_conv_freq_ratio(M, N))
+            worst = max(r_g, r_ct, r_cf) * 100
+            emit(f"complexity_ne_M{M}_N{N}", 0.0,
+                 f"gemm_pct={r_g*100:.4f};conv_time_pct={r_ct*100:.4f};"
+                 f"conv_freq_pct={r_cf*100:.4f};below_0.3pct={worst < 0.3}")
+            cs_g, cs_c = cs_gemm_ratio(M, N) * 100, cs_conv_time_ratio(M, N) * 100
+            emit(f"complexity_cs_M{M}_N{N}", 0.0,
+                 f"gemm_pct={cs_g:.2f};conv_time_pct={cs_c:.2f};"
+                 f"ge_1_over_M={cs_g >= 100/M}")
+    # Gated claims: NE time-domain overheads < 0.3% at N=1000; NE -> 0 and
+    # checksum -> 1/M asymptotically. NOTE (recorded in EXPERIMENTS.md): the
+    # paper's blanket "below 0.3% for 100<=N<=1000" does NOT follow from its
+    # own formulas at N=100 (2/N = 2% for GEMM) — only the N~1000 end holds.
+    big = 10**7
+    ok = (ne_gemm_ratio(3, 1000) * 100 < 0.3
+          and ne_conv_time_ratio(3, 1000) * 100 < 0.3
+          and ne_gemm_ratio(8, big) < 1e-5
+          and abs(cs_gemm_ratio(8, big) - 1 / 8) < 1e-4)
+    emit("complexity_asymptotics", 0.0,
+         f"ne_to_zero={ne_gemm_ratio(8, big):.2e};"
+         f"cs_to_1overM={cs_gemm_ratio(8, big):.4f};claims_hold_at_N1000={ok};"
+         f"paper_0.3pct_claim_fails_at_N100=gemm2.0pct")
+    return ok

@@ -1,0 +1,54 @@
+"""Beyond-paper: entangled integer GEMM overhead (the paper analyzes GEMM
+cost in Sec. IV but measures only convolution). Also measures the checksum
+GEMM baseline. Streams = M row-blocks of the left matrix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.entangle import disentangle, entangle
+from repro.core.plan import make_plan
+
+
+@jax.jit
+def _plain(c, g):
+    return jnp.einsum("mbk,kn->mbn", c, g)
+
+
+def _make_entangled(plan):
+    @jax.jit
+    def run(c, g):
+        eps = entangle(c.astype(jnp.int32), plan)
+        delta = jnp.einsum("mbk,kn->mbn", eps.astype(c.dtype), g)
+        return disentangle(delta.astype(jnp.int32), plan)
+
+    return run
+
+
+@jax.jit
+def _checksum(c, g):
+    r = jnp.sum(c, axis=0, keepdims=True)
+    return jnp.einsum("mbk,kn->mbn", jnp.concatenate([c, r], 0), g)
+
+
+def run(emit, sizes=(128, 256, 512)):
+    rng = np.random.default_rng(1)
+    for M in (4, 8):
+        plan = make_plan(M, 32)
+        for N in sizes:
+            lim = max(int(np.sqrt(plan.max_output_magnitude / N)) // 2, 2)
+            c = jnp.asarray(
+                rng.integers(-lim, lim, size=(M, N, N)).astype(np.float64))
+            g = jnp.asarray(rng.integers(-lim, lim, size=(N, N)).astype(np.float64))
+            ent = _make_entangled(plan)
+            want = np.asarray(_plain(c, g)).astype(np.int64)
+            got = np.asarray(ent(c, g)).astype(np.int64)
+            assert np.array_equal(want, got), (M, N)
+            t0 = time_call(_plain, c, g)
+            t1 = time_call(ent, c, g)
+            t2 = time_call(_checksum, c, g)
+            emit(f"gemm_M{M}_N{N}", t0 * 1e6,
+                 f"overhead_entangle_pct={(t1/t0-1)*100:.1f};"
+                 f"overhead_checksum_pct={(t2/t0-1)*100:.1f}")

@@ -1,0 +1,29 @@
+"""Microbenchmarks of the core codec ops (jnp/XLA path — the Pallas kernels
+target TPU and are validated via interpret mode in tests, not timed here)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.entangle import disentangle, entangle
+from repro.core.plan import make_plan
+
+
+def run(emit, n: int = 1 << 20):
+    rng = np.random.default_rng(2)
+    for M, w in ((3, 32), (8, 32), (4, 16)):
+        plan = make_plan(M, w)
+        D = plan.max_output_magnitude
+        c = jnp.asarray(rng.integers(-D // 2, D // 2, size=(M, n)).astype(np.int32))
+        ent = jax.jit(lambda x, p=plan: entangle(x, p))
+        dis = jax.jit(lambda x, p=plan: disentangle(x, p, failed=1))
+        t_e = time_call(ent, c)
+        delta = ent(c)
+        t_d = time_call(dis, delta)
+        gbps_e = M * n * 4 / t_e / 1e9
+        gbps_d = M * n * 4 / t_d / 1e9
+        emit(f"codec_M{M}_w{w}", t_e * 1e6,
+             f"entangle_GBps={gbps_e:.2f};disentangle_GBps={gbps_d:.2f};"
+             f"temp={plan.temp}")

@@ -1,0 +1,25 @@
+"""Roofline reader: summarizes dry-run artifacts into the three-term model
+(compute / memory / collective seconds per step on TPU v5e). Heavy parsing
+lives in repro.launch.roofline; this benchmark emits the per-cell summary as
+CSV if artifacts exist (run `python -m repro.launch.dryrun` first)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts"
+
+
+def run(emit):
+    rl = ART / "roofline" / "roofline.json"
+    if not rl.exists():
+        emit("roofline", 0.0, "missing;run=python -m repro.launch.roofline")
+        return
+    rows = json.loads(rl.read_text())
+    for r in rows:
+        emit(
+            f"roofline_{r['arch']}_{r['cell']}", 0.0,
+            f"compute_s={r['compute_s']:.2e};memory_s={r['memory_s']:.2e};"
+            f"collective_s={r['collective_s']:.2e};bound={r['bound']};"
+            f"useful_flops_frac={r['useful_frac']:.3f}",
+        )

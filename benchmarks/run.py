@@ -1,0 +1,70 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  table1_bitwidth      paper Table I (l, k, bitwidths; exact reproduction)
+  complexity_model     paper Sec. IV op-count model + claims
+  fig2_conv_throughput paper Fig. 2 (conv throughput, NE vs checksum)
+  gemm_overhead        Sec. IV GEMM cost, measured (beyond-paper)
+  kernel_micro         codec bandwidth microbenches
+  roofline_report      dry-run three-term roofline summary (if artifacts)
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks problem sizes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # exact f64 conv (paper uses
+# ippsConv_64f); benchmarks run in their own process, tests are unaffected.
+
+from benchmarks.common import emit  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    ok = True
+
+    def want(name):
+        return not args.only or name in args.only.split(",")
+
+    if want("table1"):
+        from benchmarks import table1_bitwidth
+
+        ok &= table1_bitwidth.run(emit)
+    if want("complexity"):
+        from benchmarks import complexity_model
+
+        ok &= complexity_model.run(emit)
+    if want("fig2"):
+        from benchmarks import fig2_conv_throughput
+
+        n = 50_000 if args.quick else 200_000
+        ks = (100, 1000) if args.quick else (100, 1000, 4500)
+        fig2_conv_throughput.run(emit, n_in=n, kernel_sizes=ks)
+    if want("gemm"):
+        from benchmarks import gemm_overhead
+
+        gemm_overhead.run(emit, sizes=(128, 256) if args.quick else (128, 256, 512))
+    if want("micro"):
+        from benchmarks import kernel_micro
+
+        kernel_micro.run(emit, n=1 << (18 if args.quick else 20))
+    if want("roofline"):
+        from benchmarks import roofline_report
+
+        roofline_report.run(emit)
+
+    if not ok:
+        print("benchmark_validation,0.0,FAILED", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Fail-stop mitigation tour: all three recovery families (the paper's
+entanglement, checksum-ABFT, modular redundancy) across every LSB op class,
+with overhead accounting, SDC detection, and entangled storage recovery.
+
+    PYTHONPATH=src python examples/failstop_demo.py
+"""
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import FTConfig, make_plan, run_protected, entangle
+from repro.core import sdc
+from repro.data.pipeline import TokenShardStore
+
+rng = np.random.default_rng(1)
+M = 4
+
+
+def main():
+    c = jnp.asarray(rng.integers(-50, 50, size=(M, 1 << 16)).astype(np.int32))
+    ops = [
+        ("scale", jnp.int32(9)),
+        ("add", jnp.int32(-3)),
+        ("conv", jnp.asarray(rng.integers(-10, 10, (33,)).astype(np.int32))),
+        ("dot", jnp.asarray(rng.integers(-4, 4, (1 << 16,)).astype(np.int32))),
+        ("permute", jnp.asarray(rng.permutation(1 << 16))),
+    ]
+
+    print(f"{'op':10s} {'family':10s} {'recovered':9s} {'extra cores':11s}")
+    for opname, g in ops:
+        truth, _ = run_protected(opname, c, g, FTConfig(mode="none", M=M))
+        for mode, extra in (("entangle", 0), ("checksum", 1), ("mr", M)):
+            failed = int(rng.integers(0, M))
+            out, rep = run_protected(opname, c, g, FTConfig(mode=mode, M=M),
+                                     failed=failed)
+            ok = bool((np.asarray(out) == np.asarray(truth)).all())
+            print(f"{opname:10s} {mode:10s} {str(ok):9s} {extra:11d}")
+            assert ok
+
+    # --- timing: protection overhead on a big conv (paper Fig. 2 shape) -----
+    big = jnp.asarray(rng.integers(-30, 30, size=(M, 200_000)).astype(np.int32))
+    g = jnp.asarray(rng.integers(-4, 4, (1000,)).astype(np.int32))
+
+    def timed(mode):
+        cfg = FTConfig(mode=mode, M=M)
+        fn = jax.jit(lambda c: run_protected("conv", c, g, cfg)[0])
+        jax.block_until_ready(fn(big))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(big))
+        return time.perf_counter() - t0
+
+    t_none = timed("none")
+    for mode in ("entangle", "checksum"):
+        t = timed(mode)
+        print(f"[overhead] {mode:9s}: +{(t/t_none-1)*100:5.1f}% vs "
+              f"failure-intolerant ({t_none*1e3:.0f} ms)")
+
+    # --- SDC detection (paper Remark 4, implemented) -------------------------
+    plan = make_plan(M, 32)
+    delta = entangle(c[:, :1024], plan)
+    corrupted = delta.at[2, 100].add(123456789)
+    mask = np.asarray(sdc.detect(corrupted, plan))
+    blame = np.asarray(sdc.localize(corrupted, plan))
+    print(f"[sdc] silent corruption detected at position {mask.nonzero()[0]}, "
+          f"blamed stream {blame[100]} (truth: 2)")
+
+    # --- entangled storage: lose a shard file, keep the data ----------------
+    with tempfile.TemporaryDirectory() as d:
+        store = TokenShardStore(d, M=M)
+        toks = rng.integers(0, 65000, size=(4, 4096)).astype(np.int32)
+        paths = store.write_group("corpus", toks)
+        paths[3].unlink()  # disk failure
+        assert np.array_equal(store.read_group("corpus"), toks)
+        print("[storage] token shard group survived a lost file "
+              "(entangled at-rest, op=identity)")
+
+
+if __name__ == "__main__":
+    main()

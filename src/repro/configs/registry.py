@@ -1,0 +1,34 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "internvl2-2b": "repro.configs.internvl2_2b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "whisper-small": "repro.configs.whisper_small",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).smoke_config()

@@ -1,0 +1,53 @@
+"""Core library: numerical entanglement for fail-stop mitigation (the paper's
+contribution), plus the checksum-ABFT / modular-redundancy baselines it is
+compared against, SDC detection, and the float<->fixed-point bridge used to
+apply the technique inside the LM framework."""
+from repro.core.plan import (
+    EntanglePlan,
+    checksum_output_bits,
+    container_dtype,
+    make_plan,
+    plan_lk,
+)
+from repro.core.entangle import (
+    disentangle,
+    disentangle_oracle_np,
+    entangle,
+    entangle_kernel_addsub,
+    extract,
+    reentangle_stream,
+)
+from repro.core.checksum import (
+    attach_checksum,
+    make_checksum_stream,
+    recover_from_checksum,
+)
+from repro.core.failstop import FTConfig, FTReport, run_protected
+from repro.core.fixed_point import dequantize, fit_scale, quantize
+from repro.core.lsb_ops import OPS, LSBOp, apply_streams, get_op
+
+__all__ = [
+    "EntanglePlan",
+    "FTConfig",
+    "FTReport",
+    "LSBOp",
+    "OPS",
+    "apply_streams",
+    "attach_checksum",
+    "checksum_output_bits",
+    "container_dtype",
+    "dequantize",
+    "disentangle",
+    "disentangle_oracle_np",
+    "entangle",
+    "entangle_kernel_addsub",
+    "extract",
+    "fit_scale",
+    "get_op",
+    "make_checksum_stream",
+    "make_plan",
+    "plan_lk",
+    "quantize",
+    "recover_from_checksum",
+    "reentangle_stream",
+]

@@ -1,0 +1,73 @@
+"""Checksum-based ABFT baseline — paper Sec. II.A, eq. (3)-(5).
+
+One additional stream ``r = sum_m c_m`` is created and processed alongside
+the M originals on an (M+1)-th core. Any single fail-stop among the M+1
+streams is recovered:
+
+  * failed data stream m:  d_m = e - sum_{m' != m} d_m'   (op-corrected)
+  * failed checksum stream: nothing to recover (outputs unaffected).
+
+This is the comparison point for the paper's Fig. 2 / Sec. IV overhead
+analysis: the checksum stream re-runs the FULL LSB op (cost ~ 1/M of total)
+whereas entanglement's overhead is O(M·N) regardless of the op.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lsb_ops import LSBOp
+
+Array = jax.Array
+
+
+def make_checksum_stream(c: Array, axis: int = 0) -> Array:
+    """r_n = sum_m c_{m,n} (eq. 4). Caller owns the reduced dynamic range
+    budget (w - ceil(log2 M) bits, Table I)."""
+    return jnp.sum(c, axis=axis)
+
+
+def attach_checksum(c: Array, axis: int = 0) -> Array:
+    """Stack the checksum stream as stream index M (eq. 5 left-hand side)."""
+    r = make_checksum_stream(c, axis=axis)
+    return jnp.concatenate([c, jnp.expand_dims(r, axis)], axis=axis)
+
+
+def recover_from_checksum(
+    outputs: Array,
+    op: LSBOp,
+    g: Optional[Array],
+    failed: Optional[int],
+    axis: int = 0,
+) -> Array:
+    """Recover the M true outputs from M+1 streams with stream ``failed`` lost.
+
+    Args:
+      outputs: [M+1, ...] op outputs, last stream is the checksum stream's
+        output ``e = op(r, g)``.
+      failed: lost stream index in [0, M] (M = checksum stream) or None.
+
+    Returns:
+      [M, ...] recovered outputs.
+    """
+    if axis != 0:
+        outputs = jnp.moveaxis(outputs, axis, 0)
+    Mp1 = outputs.shape[0]
+    M = Mp1 - 1
+    d, e = outputs[:M], outputs[M]
+    if failed is None or failed == M:
+        res = d
+    else:
+        f = int(failed)
+        others = jnp.sum(d, axis=0) - d[f]
+        # e == op-corrected sum of all d's; invert for the missing one.
+        # checksum_prediction(d_full) = sum(d_full) + corr(g, M); so
+        # d_f = e - corr - others.
+        corr = op.checksum_prediction(jnp.zeros_like(d), g, M)
+        d_f = e - corr - others
+        res = d.at[f].set(d_f)
+    if axis != 0:
+        res = jnp.moveaxis(res, 0, axis)
+    return res

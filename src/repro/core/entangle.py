@@ -1,0 +1,202 @@
+"""Numerical entanglement — the paper's core contribution (Sec. III).
+
+Entanglement (eq. 6 / 14 / 15): each of ``M >= 3`` integer streams is
+overwritten in place by the superposition of itself and its cyclic
+predecessor left-shifted by ``l`` bits::
+
+    eps_m = S_l{ c_{(m-1) mod M} } + c_m            (circulant operator E)
+
+Any linear / sesquilinear / bijective (LSB) op applied per-stream commutes
+with E, so entangled outputs satisfy ``delta_m = S_l{d_{m-1}} + d_m``.
+
+Disentanglement (eq. 16-19) recovers ALL ``M`` outputs from any ``M-1``
+entangled outputs using only adds and arithmetic shifts. With the failed
+stream index ``r``, the telescoping temporary
+
+    d_temp = sum_{m=0}^{M-2} (-1)^m S_{(M-2-m)l}{ delta_{(r+1+m) mod M} }
+           = 2^{(M-1)l} * d_r  +  (-1)^M * d_{(r+M-1) mod M}
+
+is evaluated in Horner form (T_1 = delta_{r+1}; T_j = S_l{T_{j-1}} +
+(-1)^{j-1} delta_{(r+j) mod M}), needing up to ``2w`` bits — carried natively in int32
+when it fits, else as a :mod:`repro.core.wideint` dual word (paper Remark 1).
+``d_r`` and ``d_{(r+M-1)}`` split out of ``d_temp`` by sign-extension and
+exact shifts; the remaining streams follow the chain of eq. (19).
+
+All arithmetic is two's-complement ring arithmetic mod ``2**w``: wrap-around
+in intermediates is harmless because the final values are bounded by the
+eq. (13) range contract ``|d| <= max_output_magnitude``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import wideint
+from repro.core.plan import EntanglePlan
+
+__all__ = [
+    "entangle",
+    "disentangle",
+    "extract",
+    "entangle_kernel_addsub",
+    "reentangle_stream",
+]
+
+
+def _check_streams(x: jax.Array, plan: EntanglePlan, axis: int) -> None:
+    if x.shape[axis] != plan.M:
+        raise ValueError(
+            f"stream axis {axis} has size {x.shape[axis]}, expected M={plan.M}"
+        )
+    if not jnp.issubdtype(x.dtype, jnp.integer):
+        raise TypeError(f"entanglement operates on integer streams, got {x.dtype}")
+
+
+def entangle(c: jax.Array, plan: EntanglePlan, axis: int = 0) -> jax.Array:
+    """Apply the circulant entanglement operator E (eq. 14/15).
+
+    Args:
+      c: integer array with the M streams stacked along ``axis``.
+      plan: entanglement parameters (M, w, l, k).
+      axis: stream axis.
+
+    Returns:
+      Entangled array of identical shape/dtype (written "in place" in the
+      paper's sense: same storage footprint, no extra streams).
+    """
+    _check_streams(c, plan, axis)
+    c = c.astype(jnp.int32) if c.dtype != jnp.int32 else c
+    prev = jnp.roll(c, 1, axis=axis)  # position m holds c_{(m-1) mod M}
+    return jnp.left_shift(prev, plan.l) + c
+
+
+def entangle_kernel_addsub(g: jax.Array, plan: EntanglePlan) -> jax.Array:
+    """Self-entangle the kernel for op in {+, -} (paper footnote 3)."""
+    g = g.astype(jnp.int32)
+    return jnp.left_shift(g, plan.l) + g
+
+
+def _horner_dtemp_i32(deltas: list[jax.Array], l: int) -> jax.Array:
+    """d_temp in a single int32 word (valid when plan.temp_bits <= 32)."""
+    t = deltas[0]
+    for j, d in enumerate(deltas[1:], start=2):
+        t = jnp.left_shift(t, l)
+        t = (t - d) if (j % 2 == 0) else (t + d)  # sign (-1)^(j-1)
+    return t
+
+
+def disentangle(
+    delta: jax.Array,
+    plan: EntanglePlan,
+    failed: Optional[int] = None,
+    axis: int = 0,
+) -> jax.Array:
+    """Recover all M true outputs from entangled outputs (eq. 16-19).
+
+    Args:
+      delta: entangled LSB outputs, M streams stacked along ``axis``.
+      plan: entanglement parameters.
+      failed: index of the fail-stopped stream whose data must NOT be read
+        (its slice may hold garbage). ``None`` means no failure; stream 0's
+        data is then simply not consulted (the algebra never needs all M).
+      axis: stream axis.
+
+    Returns:
+      int32 array of the M disentangled outputs, original stream order.
+    """
+    _check_streams(delta, plan, axis)
+    if axis != 0:
+        delta = jnp.moveaxis(delta, axis, 0)
+    delta = delta.astype(jnp.int32)
+
+    M, l = plan.M, plan.l
+    r = 0 if failed is None else int(failed) % M
+    B = (M - 1) * l  # d_r lives above bit B in d_temp
+    sign = -1 if (M % 2) else 1  # (-1)^M
+    q = (r + M - 1) % M
+
+    deltas = [delta[(r + 1 + m) % M] for m in range(M - 1)]
+
+    if plan.temp == "dualword":
+        t = wideint.widen(deltas[0])
+        for j, d in enumerate(deltas[1:], start=2):
+            t = wideint.shl(t, l)
+            t = (
+                wideint.sub(t, wideint.widen(d))
+                if (j % 2 == 0)
+                else wideint.add(t, wideint.widen(d))
+            )
+        t_lo = wideint.extract_low_signed(t, B)  # == (-1)^M * d_q
+        d_q = (sign * t_lo).astype(jnp.int32)
+        d_r = wideint.shr_exact_to_i32(wideint.sub(t, wideint.widen(t_lo)), B)
+    else:  # 'int32' (and the int64np oracle lives in kernels/ref.py)
+        t = _horner_dtemp_i32(deltas, l)
+        shift = 32 - B
+        t_lo = jnp.right_shift(jnp.left_shift(t, shift), shift)
+        d_q = (sign * t_lo).astype(jnp.int32)
+        d_r = jnp.right_shift(t - t_lo, B)
+
+    out: list[Optional[jax.Array]] = [None] * M
+    out[r], out[q] = d_r, d_q
+    for m in range(1, M - 1):  # eq. (19) chain
+        idx = (r + m) % M
+        prev = out[(r + m - 1) % M]
+        out[idx] = delta[idx] - jnp.left_shift(prev, l)
+
+    res = jnp.stack(out, axis=0)
+    if axis != 0:
+        res = jnp.moveaxis(res, 0, axis)
+    return res
+
+
+def extract(delta: jax.Array, plan: EntanglePlan, axis: int = 0) -> jax.Array:
+    """Failure-free extraction of results (same mechanism, r := 0)."""
+    return disentangle(delta, plan, failed=None, axis=axis)
+
+
+def reentangle_stream(
+    recovered: jax.Array, plan: EntanglePlan, stream: int, axis: int = 0
+) -> jax.Array:
+    """Recreate the lost entangled stream ``delta_stream`` from recovered d's.
+
+    Used by SDC detection and by roll-forward repair of persisted entangled
+    state: ``delta_m = S_l{d_{m-1}} + d_m``.
+    """
+    d = jnp.moveaxis(recovered, axis, 0) if axis != 0 else recovered
+    m = stream % plan.M
+    return jnp.left_shift(d[(m - 1) % plan.M], plan.l) + d[m]
+
+
+# ----------------------------------------------------------------------------
+# numpy int64 oracle (CPU reference; used by tests and kernels/ref.py)
+# ----------------------------------------------------------------------------
+
+def disentangle_oracle_np(
+    delta: np.ndarray, plan: EntanglePlan, failed: Optional[int] = None
+) -> np.ndarray:
+    """Reference disentanglement in numpy int64 (temp mode 'int64np')."""
+    M, l = plan.M, plan.l
+    r = 0 if failed is None else int(failed) % M
+    B = (M - 1) * l
+    sign = -1 if (M % 2) else 1
+    q = (r + M - 1) % M
+
+    d64 = delta.astype(np.int64)
+    t = d64[(r + 1) % M].copy()
+    for m in range(2, M):
+        t = t << l
+        t = (t - d64[(r + m) % M]) if (m % 2 == 0) else (t + d64[(r + m) % M])
+    # sign-extended low B bits
+    t_lo = (t << (64 - B)) >> (64 - B)
+    d_q = sign * t_lo
+    d_r = (t - t_lo) >> B
+
+    out = [None] * M
+    out[r], out[q] = d_r, d_q
+    for m in range(1, M - 1):
+        idx = (r + m) % M
+        out[idx] = d64[idx] - (out[(r + m - 1) % M] << l)
+    return np.stack(out, axis=0).astype(np.int64)

@@ -1,0 +1,130 @@
+"""Fail-stop protection engine: one interface over all recovery families.
+
+The paper positions numerical entanglement as a *third family* of fail-stop
+recovery next to checksum-ABFT and modular redundancy (MR). This module
+exposes all three (plus unprotected passthrough) behind one functional API so
+the framework, benchmarks and tests can switch families via config — exactly
+the comparison the paper's Fig. 2 makes.
+
+A fail-stop is modeled as a stream index whose computation never returned
+(crash or deadline miss — paper Sec. I treats both identically). The engine
+replaces the lost stream's buffer with garbage before recovery to prove the
+recovery path never reads it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.checksum import attach_checksum, recover_from_checksum
+from repro.core.entangle import disentangle, entangle
+from repro.core.lsb_ops import LSBOp, apply_streams, get_op
+from repro.core.plan import EntanglePlan, make_plan
+
+Array = jax.Array
+
+GARBAGE = jnp.int32(-0x5A5A5A5A)  # poison for lost streams
+
+
+@dataclasses.dataclass(frozen=True)
+class FTConfig:
+    """Fault-tolerance selection for a protected computation."""
+
+    mode: str = "entangle"  # none | entangle | checksum | mr
+    M: int = 4
+    w: int = 32
+    headroom_bits: int = 0
+
+    def plan(self) -> EntanglePlan:
+        return make_plan(self.M, self.w, self.headroom_bits)
+
+    @property
+    def extra_streams(self) -> int:
+        """Cores beyond M required by this family (paper Sec. II)."""
+        return {"none": 0, "entangle": 0, "checksum": 1, "mr": None}.get(
+            self.mode, 0
+        ) if self.mode != "mr" else self.M
+
+
+@dataclasses.dataclass(frozen=True)
+class FTReport:
+    mode: str
+    failed: Optional[int]
+    recovered: bool
+
+
+def _poison(x: Array, stream: int) -> Array:
+    return x.at[stream].set(GARBAGE)
+
+
+def run_protected(
+    op_name: str,
+    c: Array,
+    g: Optional[Array],
+    cfg: FTConfig,
+    failed: Optional[int] = None,
+) -> tuple[Array, FTReport]:
+    """Run op over M streams under the configured protection family.
+
+    Args:
+      op_name: key into the LSB op registry.
+      c: [M, ...] integer input streams.
+      g: kernel/operand (op-specific; None for identity).
+      cfg: protection family config.
+      failed: injected fail-stop stream index (None = healthy run). For
+        mode='checksum' the index may equal M (the checksum core itself).
+
+    Returns:
+      ([M, ...] recovered true outputs, report). mode='none' with a failure
+      returns poisoned outputs and recovered=False — the failure-intolerant
+      baseline semantics.
+    """
+    op: LSBOp = get_op(op_name)
+    M = cfg.M
+    if c.shape[0] != M:
+        raise ValueError(f"expected {M} streams, got {c.shape[0]}")
+
+    if cfg.mode == "none":
+        d = apply_streams(op, c, g)
+        if failed is not None:
+            return _poison(d, failed), FTReport("none", failed, False)
+        return d, FTReport("none", None, True)
+
+    if cfg.mode == "entangle":
+        plan = cfg.plan()
+        eps = entangle(c, plan)
+        ge = op.kernel_for_entangled(g, plan)
+        delta = apply_streams(op, eps, ge)
+        if failed is not None:
+            delta = _poison(delta, failed)
+        d = disentangle(delta, plan, failed=failed)
+        return d, FTReport("entangle", failed, True)
+
+    if cfg.mode == "checksum":
+        cr = attach_checksum(c)
+        out = apply_streams(op, cr, g)
+        if failed is not None:
+            out = _poison(out, failed)
+        d = recover_from_checksum(out, op, g, failed)
+        return d, FTReport("checksum", failed, True)
+
+    if cfg.mode == "mr":
+        # Dual modular redundancy: every stream computed twice (2M cores);
+        # a fail-stop in copy A of stream f is served by copy B.
+        both = jnp.concatenate([c, c], axis=0)
+        out = apply_streams(op, both, g)
+        if failed is not None:
+            out = _poison(out, failed)
+        d = jnp.where(
+            (jnp.arange(M) == (failed if failed is not None else -1))[
+                (...,) + (None,) * (out.ndim - 1)
+            ],
+            out[M:],
+            out[:M],
+        )
+        return d, FTReport("mr", failed, True)
+
+    raise ValueError(f"unknown ft mode {cfg.mode!r}")

@@ -1,0 +1,61 @@
+"""Float <-> fixed-point bridge for applying entanglement to float pipelines.
+
+The paper's scheme is exact only on integers. The framework applies it to
+float data (gradients, activations) by quantizing to fixed point first:
+
+  * per-tensor symmetric scaling into the entanglement plan's output budget,
+  * optional stochastic rounding (unbiased — required for gradient
+    compression to leave SGD/Adam expectations unchanged),
+  * reduction headroom: a sum over ``depth`` terms (cross-replica gradient
+    reduce-scatter, dot-product accumulation) multiplies magnitudes by up to
+    ``depth``; the budget is pre-divided so the *summed* stream still
+    satisfies the eq. (13) range contract.
+
+This is also the framework's gradient-compression codec (int16 wire format),
+independent of fault tolerance.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fit_scale(x: Array, max_magnitude: int, reduction_depth: int = 1) -> Array:
+    """Largest power-of-two scale s.t. |x|*scale stays in budget after an
+    exact ``reduction_depth``-term sum. Power-of-two keeps dequantization a
+    pure exponent adjustment (no rounding in scale itself)."""
+    budget = jnp.float32(max_magnitude // max(reduction_depth, 1))
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    amax = jnp.maximum(amax, jnp.finfo(jnp.float32).tiny)
+    exp = jnp.floor(jnp.log2(budget / amax))
+    return jnp.exp2(exp)
+
+
+def quantize(
+    x: Array,
+    max_magnitude: int,
+    reduction_depth: int = 1,
+    stochastic_key: Optional[jax.Array] = None,
+) -> tuple[Array, Array]:
+    """Quantize floats to int32 within the entanglement budget.
+
+    Returns (q, scale) with dequantization x ~= q / scale.
+    """
+    scale = fit_scale(x, max_magnitude, reduction_depth)
+    y = x.astype(jnp.float32) * scale
+    if stochastic_key is not None:
+        noise = jax.random.uniform(stochastic_key, y.shape, jnp.float32) - 0.5
+        q = jnp.floor(y + 0.5 + noise)
+    else:
+        q = jnp.round(y)
+    return q.astype(jnp.int32), scale
+
+
+def dequantize(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    return q.astype(jnp.float32) / scale if dtype == jnp.float32 else (
+        q.astype(jnp.float32) / scale
+    ).astype(dtype)

@@ -1,0 +1,168 @@
+"""Registry of Linear / Sesquilinear / Bijective (LSB) operations — paper eq. (2).
+
+Each :class:`LSBOp` knows how to
+  * apply itself to a (possibly entangled) stream,
+  * prepare its kernel for entangled execution (ops in {+, -} need the kernel
+    self-entangled, paper footnote 3),
+  * combine per-stream outputs into the checksum-stream prediction used by
+    the checksum-ABFT baseline (Sec. II.A), including the op-specific
+    correction for ops that are affine rather than linear in the stream
+    (e.g. ``add``: e = sum_m d_m - (M-1) g).
+
+Only *data-independent* ops qualify (paper footnote 2): permutations use
+fixed index sets; the MoE router's data-dependent top-k, for instance, is
+explicitly out of scope (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.entangle import entangle_kernel_addsub
+from repro.core.plan import EntanglePlan
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LSBOp:
+    """A data-independent linear/sesquilinear/bijective stream operation.
+
+    Attributes:
+      name: registry key.
+      apply: (stream, kernel) -> output stream; must be linear in the stream
+        (for fixed kernel) or a fixed bijection.
+      needs_kernel_entangled: True for op in {+, -} (footnote 3).
+      checksum_combine: maps (stacked outputs d[M, ...], kernel, M) to the
+        value the checksum stream's output must equal; defaults to sum_m d_m.
+      out_len: N_out given (N_in, kernel) — used by harnesses to presize.
+    """
+
+    name: str
+    apply: Callable[[Array, Optional[Array]], Array]
+    needs_kernel_entangled: bool = False
+    checksum_combine: Optional[Callable[[Array, Optional[Array], int], Array]] = None
+
+    def kernel_for_entangled(self, g: Optional[Array], plan: EntanglePlan):
+        if g is not None and self.needs_kernel_entangled:
+            return entangle_kernel_addsub(g, plan)
+        return g
+
+    def checksum_prediction(self, d: Array, g: Optional[Array], M: int) -> Array:
+        if self.checksum_combine is not None:
+            return self.checksum_combine(d, g, M)
+        return jnp.sum(d, axis=0)
+
+
+def _scale(c, g):
+    return c * g
+
+
+def _add(c, g):
+    return c + g
+
+
+def _sub(c, g):
+    return c - g
+
+
+def _dot(c, g):
+    return jnp.dot(c, g, preferred_element_type=jnp.int32)
+
+
+def _outer(c, g):
+    return jnp.einsum("i,j->ij", c, g).astype(jnp.int32)
+
+
+def _int_conv(c, g, flip: bool):
+    """Exact integer 'full' convolution/correlation. jnp.convolve promotes
+    int32 to float32 (exact only below 2^24 — silently corrupting entangled
+    values); lax.conv with preferred_element_type keeps the int32 ring."""
+    nk = g.shape[-1]
+    kern = jnp.flip(g) if flip else g
+    out = jax.lax.conv_general_dilated(
+        c[None, None, :].astype(jnp.int32),
+        kern[None, None, :].astype(jnp.int32),
+        window_strides=(1,),
+        padding=[(nk - 1, nk - 1)],
+        preferred_element_type=jnp.int32,
+    )
+    return out[0, 0]
+
+
+def _conv_full(c, g):
+    return _int_conv(c, g, flip=True)
+
+
+def _xcorr_full(c, g):
+    return _int_conv(c, g, flip=False)
+
+
+def _circular_conv(c, g):
+    n = c.shape[-1]
+    gg = jnp.zeros(n, dtype=c.dtype).at[: g.shape[-1]].set(g)
+    idx = (jnp.arange(n)[:, None] - jnp.arange(n)[None, :]) % n
+    return jnp.dot(gg[idx].astype(jnp.int32).T, c.astype(jnp.int32))
+
+
+def _permute(c, g):
+    # g is a fixed index set (bijection I -> G): out[i] = c[g[i]]
+    return jnp.take(c, g, axis=-1)
+
+
+def _identity(c, g):
+    del g
+    return c
+
+
+OPS: Dict[str, LSBOp] = {
+    op.name: op
+    for op in [
+        LSBOp("scale", _scale),
+        LSBOp(
+            "add",
+            _add,
+            needs_kernel_entangled=True,
+            checksum_combine=lambda d, g, M: jnp.sum(d, axis=0)
+            - 0 * d[0],  # e = (sum_m c_m) + g = sum_m d_m - (M-1) g
+        ),
+        LSBOp("sub", _sub, needs_kernel_entangled=True),
+        LSBOp("dot", _dot),
+        LSBOp("outer", _outer),
+        LSBOp("conv", _conv_full),
+        LSBOp("xcorr", _xcorr_full),
+        LSBOp("circconv", _circular_conv),
+        LSBOp("permute", _permute),
+        LSBOp("identity", _identity),
+    ]
+}
+
+# checksum-stream corrections for affine ops: the checksum input r = sum_m c_m
+# goes through the op once, so e = op(r, g). For linear-in-stream ops,
+# op(sum c, g) = sum op(c, g); for add/sub it differs by (M-1)*g.
+OPS["add"] = dataclasses.replace(
+    OPS["add"],
+    checksum_combine=lambda d, g, M: jnp.sum(d, axis=0) - (M - 1) * g,
+)
+OPS["sub"] = dataclasses.replace(
+    OPS["sub"],
+    needs_kernel_entangled=True,
+    checksum_combine=lambda d, g, M: jnp.sum(d, axis=0) + (M - 1) * g,
+)
+
+
+def get_op(name: str) -> LSBOp:
+    try:
+        return OPS[name]
+    except KeyError:
+        raise KeyError(f"unknown LSB op {name!r}; known: {sorted(OPS)}") from None
+
+
+def apply_streams(op: LSBOp, c: Array, g: Optional[Array]) -> Array:
+    """vmap an LSB op over the leading stream axis."""
+    if g is None:
+        return jax.vmap(lambda x: op.apply(x, None))(c)
+    return jax.vmap(lambda x: op.apply(x, g))(c)

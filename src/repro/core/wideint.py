@@ -1,0 +1,87 @@
+"""Dual-word 64-bit integer arithmetic built from 32-bit lanes.
+
+TPU has no fast 64-bit integer path, but the disentanglement temporary of
+paper eq. (16) needs up to ``2w`` bits (43 bits for the canonical
+``w=32, M=3, l=11, k=10`` configuration). Paper Remark 1 observes the
+temporary can be carried as two ``w``-bit words; this module is that
+realization: a value ``v`` is represented as ``(hi, lo)`` with
+
+    v = hi * 2**32 + lo,   hi: int32 (signed),  lo: uint32 (unsigned)
+
+Only the operations required by the disentanglement recurrence are provided:
+widening, left shift, subtraction, signed low-bit extraction and exact
+arithmetic right shift. All ops are elementwise, jit/vmap/shard_map-safe and
+lower to plain VPU integer lanes on TPU.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DualWord(NamedTuple):
+    hi: jax.Array  # int32, signed high word
+    lo: jax.Array  # uint32, unsigned low word
+
+
+def _bitcast_i32(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _bitcast_u32(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.uint32)
+
+
+def widen(x: jax.Array) -> DualWord:
+    """Sign-extend a 32-bit signed value into a dual word."""
+    x = x.astype(jnp.int32)
+    return DualWord(hi=jnp.right_shift(x, 31), lo=_bitcast_u32(x))
+
+
+def shl(d: DualWord, l: int) -> DualWord:
+    """Left shift by a static 0 <= l < 32."""
+    if l == 0:
+        return d
+    carry = _bitcast_i32(jnp.right_shift(d.lo, jnp.uint32(32 - l)))
+    hi = jnp.bitwise_or(jnp.left_shift(d.hi, l), carry)
+    lo = jnp.left_shift(d.lo, jnp.uint32(l))
+    return DualWord(hi=hi, lo=lo)
+
+
+def sub(a: DualWord, b: DualWord) -> DualWord:
+    """a - b with borrow propagation (wrapping mod 2**64)."""
+    lo = a.lo - b.lo
+    borrow = (a.lo < b.lo).astype(jnp.int32)
+    hi = a.hi - b.hi - borrow
+    return DualWord(hi=hi, lo=lo)
+
+
+def add(a: DualWord, b: DualWord) -> DualWord:
+    """a + b with carry propagation (wrapping mod 2**64)."""
+    lo = a.lo + b.lo
+    carry = (lo < a.lo).astype(jnp.int32)
+    hi = a.hi + b.hi + carry
+    return DualWord(hi=hi, lo=lo)
+
+
+def extract_low_signed(d: DualWord, bits: int) -> jax.Array:
+    """Low ``bits`` (1 <= bits <= 31) of ``d`` as a sign-extended int32."""
+    assert 1 <= bits <= 31, bits
+    x = _bitcast_i32(jnp.left_shift(d.lo, jnp.uint32(32 - bits)))
+    return jnp.right_shift(x, 32 - bits)
+
+
+def shr_exact_to_i32(d: DualWord, bits: int) -> jax.Array:
+    """(d >> bits) for a value known to fit int32 after the shift.
+
+    ``bits`` is static, 0 <= bits <= 31. Exact for negative multiples of
+    ``2**bits`` as well (two's complement arithmetic shift semantics).
+    """
+    assert 0 <= bits <= 31, bits
+    if bits == 0:
+        return _bitcast_i32(d.lo)
+    low = jnp.right_shift(d.lo, jnp.uint32(bits))  # logical
+    high = jnp.left_shift(_bitcast_u32(d.hi), jnp.uint32(32 - bits))
+    return _bitcast_i32(jnp.bitwise_or(low, high))

@@ -1,0 +1,107 @@
+"""Token-shard storage protected by numerical entanglement.
+
+The paper notes inputs "can also be left in their native state (stored in
+memory)" under op = identity — i.e. entanglement doubles as an erasure code
+for data at rest with zero extra streams. This store writes each token-shard
+group as M entangled files; ANY single missing/corrupt file in a group is
+recovered on read by disentanglement (the storage-failure analogue of a
+fail-stop). Background prefetch keeps the trainer fed.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import queue
+import threading
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core.entangle import disentangle_oracle_np
+from repro.core.plan import EntanglePlan, make_plan
+
+
+class TokenShardStore:
+    def __init__(self, root: str, M: int = 4, w: int = 32):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.plan = make_plan(M, w)
+
+    def _entangle_np(self, blocks: np.ndarray) -> np.ndarray:
+        l = self.plan.l
+        return ((np.roll(blocks, 1, 0).astype(np.int64) << l) + blocks).astype(
+            np.int32
+        )
+
+    def write_group(self, name: str, tokens: np.ndarray) -> list[pathlib.Path]:
+        """Write tokens (any int array) as M entangled shard files + manifest."""
+        M = self.plan.M
+        flat = tokens.reshape(-1).astype(np.int32)
+        pad = (-flat.size) % M
+        flat = np.pad(flat, (0, pad))
+        blocks = flat.reshape(M, -1)
+        eps = self._entangle_np(blocks)
+        paths = []
+        for m in range(M):
+            p = self.root / f"{name}.shard{m}.npy"
+            np.save(p, eps[m])
+            paths.append(p)
+        manifest = {
+            "name": name, "M": M, "w": self.plan.w, "l": self.plan.l,
+            "k": self.plan.k, "orig_size": int(tokens.size),
+            "shape": list(tokens.shape), "pad": int(pad),
+        }
+        (self.root / f"{name}.json").write_text(json.dumps(manifest))
+        return paths
+
+    def read_group(self, name: str) -> np.ndarray:
+        """Read a group, surviving loss of ANY single shard file."""
+        man = json.loads((self.root / f"{name}.json").read_text())
+        M = man["M"]
+        shards, missing = [], []
+        for m in range(M):
+            p = self.root / f"{name}.shard{m}.npy"
+            try:
+                shards.append(np.load(p))
+            except (FileNotFoundError, ValueError):
+                shards.append(None)
+                missing.append(m)
+        if len(missing) > 1:
+            raise IOError(f"group {name}: {len(missing)} shards lost; "
+                          f"single-failure code can recover only one")
+        failed: Optional[int] = missing[0] if missing else None
+        proto = next(s for s in shards if s is not None)
+        eps = np.stack([s if s is not None else np.zeros_like(proto) for s in shards])
+        plan = EntanglePlan(M=M, w=man["w"], l=man["l"], k=man["k"],
+                            temp="int64np")
+        blocks = disentangle_oracle_np(eps, plan, failed)
+        flat = blocks.reshape(-1)
+        n = int(np.prod(man["shape"]))
+        return flat[:n].astype(np.int32).reshape(man["shape"])
+
+
+class Prefetcher:
+    """Background-thread prefetch of an iterator (depth-bounded queue)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

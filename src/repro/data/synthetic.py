@@ -1,0 +1,57 @@
+"""Synthetic LM data pipeline: deterministic, seekable, shard-aware.
+
+Generates token streams with enough structure for a ~100M model to visibly
+learn (repeating n-gram processes seeded per document), so the end-to-end
+example's loss curve is meaningful, while remaining fully offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int = 32000
+    seq_len: int = 512
+    batch_size: int = 8
+    seed: int = 0
+    order: int = 3  # markov order of the synthetic process
+
+
+class SyntheticLM:
+    """Deterministic synthetic corpus: mixture of per-document Markov chains.
+
+    ``batch(step)`` is pure in (config, step) — any worker can regenerate any
+    batch, which is what makes checkpoint-restart and elastic re-sharding
+    trivially consistent (the data pipeline is stateless)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        k = min(64, v)
+        # shared low-rank transition structure
+        self._emit = rng.integers(0, v, size=(k, 257)).astype(np.int32)
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng(hash((cfg.seed, step)) % (2**31))
+        B, T = cfg.batch_size, cfg.seq_len
+        state = rng.integers(0, self._emit.shape[0], size=B)
+        noise = rng.integers(0, 257, size=(B, T))
+        toks = np.empty((B, T), np.int32)
+        for t in range(T):
+            toks[:, t] = self._emit[state, noise[:, t]]
+            state = (state * 31 + toks[:, t]) % self._emit.shape[0]
+        return {
+            "tokens": toks,
+            "loss_mask": np.ones((B, T), np.int32),
+        }
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1

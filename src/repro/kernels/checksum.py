@@ -1,0 +1,35 @@
+"""Pallas TPU kernel: checksum-stream generation (ABFT baseline, paper eq. 4).
+
+Elementwise sum over the M-stream axis producing the (M+1)-th checksum
+stream. Exists so the baseline's generation cost is measured with the same
+kernel discipline as entanglement (paper Sec. V generates checksums with
+AVX2 too).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _checksum_kernel(c_ref, out_ref):
+    out_ref[...] = jnp.sum(c_ref[...], axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def checksum_pallas(
+    c: jax.Array, *, block_n: int = 1024, interpret: bool = False
+) -> jax.Array:
+    """r = sum_m c_m for c:[M, N] int32 -> [1, N] int32."""
+    M, N = c.shape
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        _checksum_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((M, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, N), jnp.int32),
+        interpret=interpret,
+    )(c)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: depthwise causal integer conv1d.
+
+Convolution is the paper's experimental LSB op (Fig. 2) and also the conv
+frontend of the assigned SSM/hybrid/audio architectures (Mamba conv1d,
+Whisper/RecurrentGemma frontends use K_f in {3, 4}). This kernel covers the
+short-filter depthwise case used inside models; long-kernel stream
+convolution (paper Fig. 2, K up to 4500) goes through XLA's conv in
+``benchmarks/`` where im2col/FFT strategies win.
+
+Causality halo: each output tile of length ``bt`` needs ``K_f - 1`` trailing
+inputs of the previous tile. Pallas blocks are uniform, so the input is bound
+twice — current tile and predecessor tile — and the first tile's halo is
+masked to zero (causal left padding).
+
+Works on entangled streams unchanged: depthwise conv is sesquilinear in the
+stream, so ``conv(E c) = E conv(c)`` per the paper's Sec. III argument.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv1d_kernel(x_cur_ref, x_prev_ref, w_ref, out_ref, *, kf: int):
+    t = pl.program_id(2)
+    halo = x_prev_ref[0, :, -(kf - 1):]  # [bd, kf-1]
+    halo = jnp.where(t == 0, jnp.zeros_like(halo), halo)  # causal zero pad
+    window = jnp.concatenate([halo, x_cur_ref[0]], axis=-1)  # [bd, bt+kf-1]
+    bt = out_ref.shape[-1]
+    acc = jnp.zeros(out_ref.shape[1:], jnp.int32)
+    for j in range(kf):  # static unroll over taps
+        acc += w_ref[:, j : j + 1] * window[:, j : j + bt]
+    out_ref[0, ...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bd", "bt", "interpret")
+)
+def conv1d_causal_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bd: int = 128,
+    bt: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Depthwise causal conv: x [B, D, T] int32, w [D, K_f] int32 ->
+    out[b,d,t] = sum_j w[d,j] * x[b,d,t-K_f+1+j]. D % bd == 0, T % bt == 0,
+    K_f <= bt (ops.py pads/unpads)."""
+    B, D, T = x.shape
+    D2, kf = w.shape
+    assert D == D2 and kf <= bt
+    grid = (B, D // bd, T // bt)
+    return pl.pallas_call(
+        functools.partial(_conv1d_kernel, kf=kf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd, bt), lambda b, d, t: (b, d, t)),
+            # predecessor tile (halo); clamped at t=0 and masked in-kernel
+            pl.BlockSpec(
+                (1, bd, bt), lambda b, d, t: (b, d, jnp.maximum(t - 1, 0))
+            ),
+            pl.BlockSpec((bd, kf), lambda b, d, t: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bd, bt), lambda b, d, t: (b, d, t)),
+        out_shape=jax.ShapeDtypeStruct((B, D, T), jnp.int32),
+        interpret=interpret,
+    )(x, x, w)

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: disentanglement / fail-stop recovery (paper eq. 16-19).
+
+Fuses the Horner-form telescoping sum, the dual-word (2w-bit as 2x32-bit,
+paper Remark 1) arithmetic, the bit-field extraction of d_r / d_q and the
+eq. (19) recovery chain into one VPU pass over VMEM tiles — the entire
+recovery is shifts/adds, exactly the paper's "additions and arithmetic
+shifts" claim, with no HBM round-trips between steps.
+
+The failed-stream index r is static (known at recovery dispatch time).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import wideint
+from repro.core.plan import EntanglePlan
+
+
+def _disentangle_kernel(delta_ref, out_ref, *, plan: EntanglePlan, r: int):
+    M, l = plan.M, plan.l
+    B = (M - 1) * l
+    sign = -1 if (M % 2) else 1
+    q = (r + M - 1) % M
+    delta = delta_ref[...]  # [M, block_n] int32
+
+    deltas = [delta[(r + 1 + m) % M] for m in range(M - 1)]
+    if plan.temp == "dualword":
+        t = wideint.widen(deltas[0])
+        for j, d in enumerate(deltas[1:], start=2):
+            t = wideint.shl(t, l)
+            t = (
+                wideint.sub(t, wideint.widen(d))
+                if (j % 2 == 0)
+                else wideint.add(t, wideint.widen(d))
+            )
+        t_lo = wideint.extract_low_signed(t, B)
+        d_q = (sign * t_lo).astype(jnp.int32)
+        d_r = wideint.shr_exact_to_i32(wideint.sub(t, wideint.widen(t_lo)), B)
+    else:
+        t = deltas[0]
+        for j, d in enumerate(deltas[1:], start=2):
+            t = jnp.left_shift(t, l)
+            t = (t - d) if (j % 2 == 0) else (t + d)
+        shift = 32 - B
+        t_lo = jnp.right_shift(jnp.left_shift(t, shift), shift)
+        d_q = (sign * t_lo).astype(jnp.int32)
+        d_r = jnp.right_shift(t - t_lo, B)
+
+    out = [None] * M
+    out[r], out[q] = d_r, d_q
+    for m in range(1, M - 1):  # eq. (19)
+        idx = (r + m) % M
+        out[idx] = delta[idx] - jnp.left_shift(out[(r + m - 1) % M], l)
+    out_ref[...] = jnp.stack(out, axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("plan", "r", "block_n", "interpret")
+)
+def disentangle_pallas(
+    delta: jax.Array,
+    *,
+    plan: EntanglePlan,
+    r: int = 0,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Recover all M outputs from [M, N] entangled outputs, never reading
+    stream r. N must be a multiple of block_n (ops.py pads/unpads)."""
+    M, N = delta.shape
+    assert M == plan.M
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        functools.partial(_disentangle_kernel, plan=plan, r=r % M),
+        grid=grid,
+        in_specs=[pl.BlockSpec((M, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((M, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(delta)

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: numerical entanglement (paper eq. 6/14/15).
+
+The paper entangles streams with AVX2 SIMD "as data within each input stream
+is being read". The TPU analogue: an elementwise VPU kernel tiled into VMEM.
+The M-stream axis is small and fully resident per tile; the sample axis is
+tiled in lane-aligned blocks. Layout is [M, N] with N the flattened sample
+axis, blocked (M, block_n); block_n is a multiple of 128 (lane width) and the
+default 8*128 fills one (8, 128) VREG tile per stream row.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _entangle_kernel(c_ref, out_ref, *, M: int, l: int):
+    c = c_ref[...]  # [M, block_n] int32
+    prev = jnp.roll(c, 1, axis=0)  # row m holds c_{(m-1) mod M}
+    out_ref[...] = jnp.left_shift(prev, l) + c
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_n", "interpret"))
+def entangle_pallas(
+    c: jax.Array,
+    *,
+    l: int,
+    block_n: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """Entangle [M, N] int32 streams; N must be a multiple of block_n
+    (ops.py pads/unpads)."""
+    M, N = c.shape
+    grid = (N // block_n,)
+    return pl.pallas_call(
+        functools.partial(_entangle_kernel, M=M, l=l),
+        grid=grid,
+        in_specs=[pl.BlockSpec((M, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((M, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        interpret=interpret,
+    )(c)

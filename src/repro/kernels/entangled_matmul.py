@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: integer GEMM with entanglement fused into the load.
+
+The paper notes entanglement can be applied "as data within each input stream
+is being read" (stream-processor property). Here that becomes: the kernel
+reads the stream-m and stream-(m-1) activation tiles from VMEM, forms
+``eps_m = (c_{m-1} << l) + c_m`` in registers, and feeds the MXU directly —
+the entangled operand never round-trips to HBM, so protection costs one
+VPU shift-add per loaded tile on top of the unprotected GEMM.
+
+Tiling: grid (M, B/bb, N/bn, K/bk), K innermost with a VMEM int32
+accumulator; bb/bn/bk default to MXU-aligned 128 multiples. The same input
+array is bound twice with two index maps (self tile and cyclic-predecessor
+tile) — the TPU-idiomatic replacement for the paper's in-place AVX2 pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _emm_kernel(c_self_ref, c_prev_ref, g_ref, out_ref, acc_ref, *, l: int, nk: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    eps = jnp.left_shift(c_prev_ref[0], l) + c_self_ref[0]  # [bb, bk]
+    acc_ref[...] += jnp.dot(
+        eps, g_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        out_ref[0, ...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("l", "bb", "bn", "bk", "interpret")
+)
+def entangled_matmul_pallas(
+    c: jax.Array,
+    g: jax.Array,
+    *,
+    l: int,
+    bb: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """delta[m] = (E c)[m] @ g for c:[M, B, K] int32, g:[K, N] int32.
+
+    B, K, N must be multiples of bb, bk, bn (ops.py pads/unpads).
+    """
+    M, B, K = c.shape
+    K2, N = g.shape
+    assert K == K2, (K, K2)
+    grid = (M, B // bb, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_emm_kernel, l=l, nk=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bb, bk), lambda m, b, n, k: (m, b, k)),
+            pl.BlockSpec((1, bb, bk), lambda m, b, n, k, _M=M: ((m - 1) % _M, b, k)),
+            pl.BlockSpec((bk, bn), lambda m, b, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bb, bn), lambda m, b, n, k: (m, b, n)),
+        out_shape=jax.ShapeDtypeStruct((M, B, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.int32)],
+        interpret=interpret,
+    )(c, c, g)

@@ -1,0 +1,103 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Handles: arbitrary trailing shapes (flattened to the sample axis), padding to
+block multiples, backend dispatch (compiled on TPU, interpret=True elsewhere
+— the task-mandated CPU validation mode), and plan-aware parameter plumbing.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import EntanglePlan
+from repro.kernels.checksum import checksum_pallas
+from repro.kernels.conv1d import conv1d_causal_pallas
+from repro.kernels.disentangle import disentangle_pallas
+from repro.kernels.entangle import entangle_pallas
+from repro.kernels.entangled_matmul import entangled_matmul_pallas
+
+
+def _interpret_default(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def entangle(c: jax.Array, plan: EntanglePlan, *, block_n: int = 1024,
+             interpret=None) -> jax.Array:
+    """Entangle M streams of any trailing shape ([M, ...] int)."""
+    shape = c.shape
+    flat = c.reshape(shape[0], -1).astype(jnp.int32)
+    padded, n = _pad_to(flat, 1, block_n)
+    out = entangle_pallas(
+        padded, l=plan.l, block_n=block_n,
+        interpret=_interpret_default(interpret),
+    )
+    return out[:, :n].reshape(shape)
+
+
+def disentangle(delta: jax.Array, plan: EntanglePlan, *, failed: int | None = None,
+                block_n: int = 1024, interpret=None) -> jax.Array:
+    """Recover all M outputs from entangled outputs of any trailing shape."""
+    shape = delta.shape
+    flat = delta.reshape(shape[0], -1).astype(jnp.int32)
+    padded, n = _pad_to(flat, 1, block_n)
+    out = disentangle_pallas(
+        padded, plan=plan, r=0 if failed is None else failed,
+        block_n=block_n, interpret=_interpret_default(interpret),
+    )
+    return out[:, :n].reshape(shape)
+
+
+def entangled_matmul(c: jax.Array, g: jax.Array, plan: EntanglePlan, *,
+                     bb: int = 128, bn: int = 128, bk: int = 128,
+                     interpret=None) -> jax.Array:
+    """Fused entangle+GEMM: c [M, B, K], g [K, N] -> entangled outputs
+    [M, B, N]. Pads B/K/N to block multiples (zero padding is exact for
+    integer GEMM)."""
+    M, B, K = c.shape
+    c32 = c.astype(jnp.int32)
+    g32 = g.astype(jnp.int32)
+    cp, _ = _pad_to(c32, 1, bb)
+    cp, _ = _pad_to(cp, 2, bk)
+    gp, _ = _pad_to(g32, 0, bk)
+    gp, _ = _pad_to(gp, 1, bn)
+    out = entangled_matmul_pallas(
+        cp, gp, l=plan.l, bb=bb, bn=bn, bk=bk,
+        interpret=_interpret_default(interpret),
+    )
+    return out[:, :B, : g.shape[1]]
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, *, bd: int = 128, bt: int = 512,
+                  interpret=None) -> jax.Array:
+    """Depthwise causal conv1d: x [B, D, T], w [D, K_f]."""
+    B, D, T = x.shape
+    xp, _ = _pad_to(x.astype(jnp.int32), 1, bd)
+    xp, _ = _pad_to(xp, 2, bt)
+    wp, _ = _pad_to(w.astype(jnp.int32), 0, bd)
+    out = conv1d_causal_pallas(
+        xp, wp, bd=bd, bt=bt, interpret=_interpret_default(interpret)
+    )
+    return out[:, :D, :T]
+
+
+def checksum(c: jax.Array, *, block_n: int = 1024, interpret=None) -> jax.Array:
+    """Checksum stream r = sum_m c_m for [M, ...] inputs -> [...]."""
+    shape = c.shape
+    flat = c.reshape(shape[0], -1).astype(jnp.int32)
+    padded, n = _pad_to(flat, 1, block_n)
+    out = checksum_pallas(
+        padded, block_n=block_n, interpret=_interpret_default(interpret)
+    )
+    return out[0, :n].reshape(shape[1:])

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests).
+
+These are the semantics; the kernels are the schedules. Each function is
+shape-polymorphic and unpadded — ops.py aligns padding so kernel and oracle
+can be compared elementwise (exact integer equality, not approximate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def entangle_ref(c: jax.Array, l: int) -> jax.Array:
+    """eps_m = (c_{(m-1) mod M} << l) + c_m over axis 0."""
+    c = c.astype(jnp.int32)
+    return jnp.left_shift(jnp.roll(c, 1, axis=0), l) + c
+
+
+def disentangle_ref(delta: jax.Array, plan, r: int = 0) -> jax.Array:
+    """Delegates to the core reference implementation (already oracle-grade,
+    itself validated against the numpy int64 oracle)."""
+    from repro.core.entangle import disentangle
+
+    return disentangle(delta.astype(jnp.int32), plan, failed=r)
+
+
+def entangled_matmul_ref(c: jax.Array, g: jax.Array, l: int) -> jax.Array:
+    """delta[m] = ((c_{m-1} << l) + c_m) @ g, int32 ring arithmetic."""
+    eps = entangle_ref(c, l)
+    return jnp.einsum(
+        "mbk,kn->mbn", eps, g.astype(jnp.int32)
+    ).astype(jnp.int32)
+
+
+def conv1d_causal_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """out[b,d,t] = sum_j w[d,j] * x[b,d,t-K_f+1+j] with zero left-pad."""
+    B, D, T = x.shape
+    _, kf = w.shape
+    xp = jnp.pad(x.astype(jnp.int32), ((0, 0), (0, 0), (kf - 1, 0)))
+    out = jnp.zeros((B, D, T), jnp.int32)
+    for j in range(kf):
+        out = out + w[None, :, j : j + 1].astype(jnp.int32) * xp[:, :, j : j + T]
+    return out
+
+
+def checksum_ref(c: jax.Array) -> jax.Array:
+    return jnp.sum(c.astype(jnp.int32), axis=0, keepdims=True)

@@ -1,0 +1,231 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape-cell) on the
+production meshes, prove sharding coherence, record memory/cost/HLO
+artifacts for the roofline analysis.
+
+MUST be imported before any other jax-touching module — the device-count
+flag above is locked in at first jax init (hence the unusual import order).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --cell train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both            # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --variant opt
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, cells_for, get_config  # noqa: E402
+from repro.configs.base import ModelConfig, ShapeCell  # noqa: E402
+from repro.dist import params as dparams  # noqa: E402
+from repro.dist.sharding import axis_rules  # noqa: E402
+from repro.launch import input_specs as ispecs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.api import get_model  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.train.train_step import TrainConfig, make_train_step  # noqa: E402
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _train_cfg_for(cfg: ModelConfig) -> TrainConfig:
+    # bf16 Adam moments for the very large models (see DESIGN.md §7)
+    big = cfg.name.startswith("deepseek-v3") or cfg.name.startswith("granite")
+    return TrainConfig(
+        adamw=AdamWConfig(state_dtype="bfloat16" if big else None),
+        max_seq=4096,
+    )
+
+
+# --variant opt: the §Perf-optimized configuration (EXPERIMENTS.md logs the
+# baseline -> opt deltas per hillclimbed cell).
+_OPT_GRAD_ACCUM = {"deepseek-v3-671b": 8, "granite-20b": 4}
+
+
+def _apply_variant(cfg: ModelConfig, tcfg, cell, variant: str):
+    if variant == "opt":
+        cfg = dataclasses.replace(cfg, norm_f32=False, loss_impl="streamed",
+                                  mla_absorb=True)
+        if tcfg is not None and cell.kind == "train":
+            ga = _OPT_GRAD_ACCUM.get(cfg.name, 1)
+            tcfg = dataclasses.replace(tcfg, grad_accum=ga)
+    return cfg, tcfg
+
+
+def build(cfg: ModelConfig, cell: ShapeCell, mesh, variant: str = "baseline"):
+    """Returns (fn, arg_specs tuple, in_shardings, out_shardings, donate)."""
+    model = get_model(cfg)
+    specs = ispecs.input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        tcfg = _train_cfg_for(cfg)
+        cfg_t = dataclasses.replace(cfg, remat="full")
+        cfg_t, tcfg = _apply_variant(cfg_t, tcfg, cell, variant)
+        step = make_train_step(cfg_t, tcfg)
+        p_specs = ispecs.params_specs(cfg_t, max_seq=cell.seq_len)
+        p_sh = dparams.param_shardings(cfg_t, mesh, p_specs)
+        state_specs = {
+            "params": p_specs,
+            "opt": {
+                "m": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        s.shape,
+                        jnp.bfloat16 if tcfg.adamw.state_dtype else jnp.float32),
+                    p_specs),
+                "v": jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        s.shape,
+                        jnp.bfloat16 if tcfg.adamw.state_dtype else jnp.float32),
+                    p_specs),
+            },
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        state_sh = {
+            "params": p_sh,
+            "opt": {"m": p_sh, "v": p_sh},
+            "step": NamedSharding(mesh, P()),
+        }
+        b_sh = dparams.batch_shardings(mesh, specs["batch"])
+        fn = step
+        args = (state_specs, specs["batch"])
+        in_sh = (state_sh, b_sh)
+        out_sh = (state_sh, None)
+        donate = (0,)
+        return fn, args, in_sh, out_sh, donate, cfg_t
+
+    cfg, _ = _apply_variant(cfg, None, cell, variant)
+    p_specs = ispecs.params_specs(cfg, max_seq=cell.seq_len)
+    p_sh = dparams.param_shardings(cfg, mesh, p_specs)
+    c_sh = dparams.cache_shardings(cfg, mesh, specs["cache"])
+
+    if cell.kind == "prefill":
+        def fn(params, batch, cache):
+            return model.prefill(params, batch, cfg, cache)
+
+        b_sh = dparams.batch_shardings(mesh, specs["batch"])
+        args = (p_specs, specs["batch"], specs["cache"])
+        in_sh = (p_sh, b_sh, c_sh)
+        out_sh = (None, c_sh)
+        return fn, args, in_sh, out_sh, (2,), cfg
+
+    def fn(params, tok, cache, pos):
+        return model.decode_step(params, tok, cache, pos, cfg)
+
+    tok_sh = dparams.batch_shardings(mesh, specs["tok"])
+    args = (p_specs, specs["tok"], specs["cache"], specs["pos"])
+    in_sh = (p_sh, tok_sh, c_sh, NamedSharding(mesh, P()))
+    out_sh = (None, c_sh)
+    return fn, args, in_sh, out_sh, (2,), cfg
+
+
+def run_cell(arch: str, cell: ShapeCell, multi_pod: bool, out_dir: pathlib.Path,
+             save_hlo: bool = True, variant: str = "baseline") -> dict:
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    tag = f"{arch}__{cell.name}__{mesh_name}"
+    rec: dict = {"arch": arch, "cell": cell.name, "mesh": mesh_name,
+                 "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+                 "kind": cell.kind}
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    t0 = time.monotonic()
+    try:
+        with mesh, axis_rules(mesh):
+            fn, args, in_sh, out_sh, donate, cfg_used = build(
+                cfg, cell, mesh, variant=variant)
+            jitted = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh,
+                donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            rec["lower_s"] = round(time.monotonic() - t0, 1)
+            t1 = time.monotonic()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.monotonic() - t1, 1)
+            mem = compiled.memory_analysis()
+            print(mem)
+            cost = compiled.cost_analysis()
+            print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+            rec["memory_analysis"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "alias_size_in_bytes",
+                          "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            }
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or "utilization" not in k)
+            } if cost else {}
+            rec["ok"] = True
+            if save_hlo:
+                hlo = compiled.as_text()
+                with gzip.open(out_dir / f"{tag}.hlo.gz", "wt") as f:
+                    f.write(hlo)
+                rec["hlo_bytes"] = len(hlo)
+    except Exception as e:  # record failures — they are bugs to fix
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.monotonic() - t0, 1)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    status = "OK" if rec.get("ok") else f"FAIL ({rec.get('error', '')[:120]})"
+    print(f"[dryrun] {tag}: {status} ({rec['total_s']}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(ART_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=["baseline", "opt"])
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    out_dir = pathlib.Path(args.out)
+
+    n_ok = n_fail = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        for cell in cells_for(cfg):
+            if args.cell != "all" and cell.name not in args.cell.split(","):
+                continue
+            for mp in meshes:
+                mesh_name = "multipod_2x16x16" if mp else "pod_16x16"
+                tag = f"{arch}__{cell.name}__{mesh_name}"
+                if args.skip_existing and (out_dir / f"{tag}.json").exists():
+                    prev = json.loads((out_dir / f"{tag}.json").read_text())
+                    if prev.get("ok"):
+                        print(f"[dryrun] {tag}: cached OK")
+                        n_ok += 1
+                        continue
+                rec = run_cell(arch, cell, mp, out_dir, save_hlo=not args.no_hlo,
+                               variant=args.variant)
+                n_ok += bool(rec.get("ok"))
+                n_fail += not rec.get("ok")
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,383 @@
+"""Trip-count-aware cost model over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once* —
+useless for scan-over-layers/scan-over-time programs (a 61-layer model would
+report 1 layer of FLOPs). This parser walks the HLO text instead:
+
+  * dot/convolution FLOPs from operand/output shapes,
+  * elementwise FLOPs inside fusion computations,
+  * HBM bytes: operands+outputs of top-level memory ops (fusion internals
+    stay in registers/VMEM),
+  * collective bytes: operand sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute (async -start included),
+  * while bodies multiplied by ``backend_config known_trip_count`` (scan).
+
+Compiled HLO is the PER-DEVICE program (post-partitioning shapes), so all
+totals are per-device; multiply by chip count for global figures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "floor",
+    "ceil", "sign", "atan2", "expm1", "log1p", "logistic", "cosine", "sine",
+    "compare", "select", "and", "or", "xor", "not", "shift-left",
+    "shift-right-arithmetic", "shift-right-logical", "clamp", "remainder",
+    "round-nearest-afz", "round-nearest-even", "cbrt", "erf",
+}
+
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "custom-call", "copy", "slice",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "broadcast",
+    "transpose", "reduce", "sort", "gather", "scatter", "pad", "reverse",
+    "reduce-window", "select-and-scatter", "iota", "rng", "cholesky",
+    "triangular-solve", "all-reduce", "all-gather", "reduce-scatter",
+    "all-to-all", "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+
+def _shape_bytes(shape: str) -> float:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for m in re.finditer(r"(\w[\w$]*)\[([\d,]*)\]", shape):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape: str) -> int:
+    m = re.search(r"\w+\[([\d,]*)\]", shape)
+    if not m:
+        return 1
+    n = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_dims(shape: str) -> list[int]:
+    m = re.search(r"\w+\[([\d,]*)\]", shape)
+    if not m or not m.group(1):
+        return []
+    return [int(d) for d in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    attrs: str
+    raw_args: str = ""
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Optional[dict] = None
+
+    def __add__(self, o: "Cost") -> "Cost":
+        cc = dict(self.coll_counts or {})
+        for k, v in (o.coll_counts or {}).items():
+            cc[k] = cc.get(k, 0) + v
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll_bytes + o.coll_bytes, cc)
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.bytes * f, self.coll_bytes * f,
+                    {k: v * f for k, v in (self.coll_counts or {}).items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+
+    # ------------------------------------------------------------ parsing --
+
+    def _parse(self, text: str):
+        current: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith("//"):
+                continue
+            head = re.match(r"^(ENTRY\s+)?%?([\w.\-$]+)\s*\(.*\)\s*->.*\{$", line)
+            if head and " = " not in line:
+                current = head.group(2)
+                self.computations[current] = []
+                if head.group(1):
+                    self.entry = current
+                continue
+            if line == "}" or line.startswith("}"):
+                continue
+            m = re.match(r"^(ROOT\s+)?%?([\w.\-$]+)\s*=\s*(.*)$", line)
+            if not m or current is None:
+                continue
+            is_root, name, rest = bool(m.group(1)), m.group(2), m.group(3)
+            # type: up to the op name; tuples need balanced parens
+            rest = rest.strip()
+            if rest.startswith("("):
+                depth = 0
+                for i, ch in enumerate(rest):
+                    depth += ch == "("
+                    depth -= ch == ")"
+                    if depth == 0:
+                        break
+                shape, rest2 = rest[: i + 1], rest[i + 1 :].strip()
+            else:
+                sp = rest.find(" ")
+                shape, rest2 = rest[:sp], rest[sp + 1 :].strip()
+            om = re.match(r"^([\w\-]+)\((.*)$", rest2)
+            if not om:
+                continue
+            op = om.group(1)
+            # split args from attrs at the matching close paren
+            body = om.group(2)
+            depth, i = 1, 0
+            for i, ch in enumerate(body):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            args, attrs = body[:i], body[i + 1 :]
+            operands = re.findall(r"%([\w.\-$]+)", args)
+            self.computations[current].append(
+                Instr(name, shape, op, operands, attrs, args, is_root))
+
+    # ---------------------------------------------------------- accounting --
+
+    def _symtab(self, comp: str) -> dict[str, str]:
+        return {i.name: i.shape for i in self.computations[comp]}
+
+    def _dot_flops(self, instr: Instr, sym: dict[str, str]) -> float:
+        out = _shape_elems(instr.shape)
+        lhs_shape = sym.get(instr.operands[0], "")
+        dims = _shape_dims(lhs_shape)
+        cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.attrs)
+        contract = 1
+        if cm and cm.group(1):
+            for d in cm.group(1).split(","):
+                if int(d) < len(dims):
+                    contract *= dims[int(d)]
+        return 2.0 * out * contract
+
+    def _conv_flops(self, instr: Instr, sym: dict[str, str]) -> float:
+        out = _shape_elems(instr.shape)
+        rhs = sym.get(instr.operands[1], "")
+        kelems = _shape_elems(rhs)
+        rdims = _shape_dims(rhs)
+        out_feat = rdims[-1] if rdims else 1
+        return 2.0 * out * max(kelems // max(out_feat, 1), 1)
+
+    def _trip_count(self, instr: Instr) -> float:
+        m = re.search(r'known_trip_count[^\d]*(\d+)', instr.attrs)
+        return float(m.group(1)) if m else 1.0
+
+    def _called(self, instr: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.\-$]+)", instr.attrs)
+        return m.group(1) if m else None
+
+    def _mem_bytes(self, ins: Instr, sym: dict[str, str]) -> float:
+        """HBM traffic estimate per op. Windowed reads (dynamic-slice,
+        gather) move only their OUTPUT-sized window, not the full operand —
+        critical inside scan bodies where operand bytes would be multiplied
+        by the trip count."""
+        out = _shape_bytes(ins.shape)
+        op = ins.op
+        if op in ("dynamic-slice", "slice", "gather", "broadcast", "iota",
+                  "reverse", "pad", "rng"):
+            return 2.0 * out  # read window + write result
+        if op == "dynamic-update-slice":
+            upd = _shape_bytes(sym.get(ins.operands[1], "")) if len(
+                ins.operands) > 1 else out
+            return 2.0 * upd  # in-place read-modify-write of the window
+        if op == "scatter":
+            upd = _shape_bytes(sym.get(ins.operands[-1], "")) if ins.operands else out
+            return 3.0 * upd  # read target window + update + write
+        if op in ("copy", "transpose"):
+            return 2.0 * out
+        if op in ("concatenate", "sort", "reduce-window", "select-and-scatter"):
+            return 2.0 * out + sum(
+                _shape_bytes(sym.get(o, "")) for o in set(ins.operands)
+                if o in sym and _shape_bytes(sym[o]) <= out)
+        if op == "fusion":
+            callee = self._called(ins, "calls")
+            if callee and callee in self.computations:
+                return self._fusion_io_bytes(callee, ins, sym)
+        # dot / convolution / custom-call / reduce / collectives:
+        # full operand reads + output write
+        opb = sum(_shape_bytes(sym.get(o, "")) for o in set(ins.operands)
+                  if o in sym)
+        return opb + out
+
+    _SLICING = {"dynamic-slice", "gather", "slice"}
+
+    def _fusion_io_bytes(self, callee: str, ins: Instr, sym: dict[str, str]) -> float:
+        """True I/O of a fusion: parameters consumed ONLY through slicing ops
+        inside the fusion move a window, not the whole array (critical for
+        scan bodies, where XLA fuses the per-step dynamic-slice into the
+        consumer and the 'operand' is the full stacked xs array). A root
+        dynamic-update-slice writes its update window, not the buffer."""
+        body = self.computations[callee]
+        # parameter index -> name; consumers map
+        consumers: dict[str, list[Instr]] = {}
+        params: dict[str, int] = {}
+        for bi in body:
+            if bi.op == "parameter":
+                try:
+                    params[bi.name] = int(bi.raw_args.strip() or 0)
+                except ValueError:
+                    params[bi.name] = 0
+            for o in bi.operands:
+                consumers.setdefault(o, []).append(bi)
+
+        read = 0.0
+        for pname, pidx in params.items():
+            full = _shape_bytes(
+                sym.get(ins.operands[pidx], "") if pidx < len(ins.operands)
+                else "")
+            cons = consumers.get(pname, [])
+            if cons and all(c.op in self._SLICING for c in cons):
+                read += sum(_shape_bytes(c.shape) for c in cons)
+            elif cons and all(c.op in self._SLICING or c.op ==
+                              "dynamic-update-slice" for c in cons):
+                # DUS target: in-place, charge the update windows
+                read += sum(
+                    _shape_bytes(self._body_shape(body, c.operands[1]))
+                    for c in cons if c.op == "dynamic-update-slice")
+            else:
+                read += full
+
+        root = next((bi for bi in body if bi.is_root), body[-1] if body else None)
+        write = _shape_bytes(ins.shape)
+        if root is not None and root.op == "dynamic-update-slice":
+            write = _shape_bytes(self._body_shape(body, root.operands[1]))
+        elif root is not None and root.op == "tuple":
+            w = 0.0
+            for o in root.operands:
+                d = next((bi for bi in body if bi.name == o), None)
+                if d is not None and d.op == "dynamic-update-slice":
+                    w += _shape_bytes(self._body_shape(body, d.operands[1]))
+                elif d is not None:
+                    w += _shape_bytes(d.shape)
+            write = w
+        elif root is not None and root.op == "bitcast" and root.operands:
+            d = next((bi for bi in body if bi.name == root.operands[0]), None)
+            if d is not None and d.op == "dynamic-update-slice":
+                write = _shape_bytes(self._body_shape(body, d.operands[1]))
+        return read + write
+
+    @staticmethod
+    def _body_shape(body: list, name: str) -> str:
+        for bi in body:
+            if bi.name == name:
+                return bi.shape
+        return ""
+
+    def comp_cost(self, comp: str, mem_level: bool = True) -> Cost:
+        """mem_level=False inside fusions: internals cost flops, not bytes."""
+        key = f"{comp}|{mem_level}"
+        if key in self._memo:
+            return self._memo[key]
+        sym = self._symtab(comp)
+        total = Cost(coll_counts={})
+        for ins in self.computations.get(comp, []):
+            c = Cost(coll_counts={})
+            if ins.op == "dot":
+                c.flops = self._dot_flops(ins, sym)
+            elif ins.op == "convolution":
+                c.flops = self._conv_flops(ins, sym)
+            elif ins.op in _ELEMENTWISE_FLOP_OPS:
+                c.flops = float(_shape_elems(ins.shape))
+            elif ins.op == "while":
+                body = self._called(ins, "body")
+                cond = self._called(ins, "condition")
+                trip = self._trip_count(ins)
+                inner = self.comp_cost(body, mem_level)
+                if cond:
+                    inner = inner + self.comp_cost(cond, mem_level)
+                c = inner.scaled(trip)
+            elif ins.op == "fusion":
+                callee = self._called(ins, "calls")
+                if callee:
+                    c = self.comp_cost(callee, mem_level=False)
+                    c = Cost(c.flops, 0.0, c.coll_bytes, c.coll_counts)
+            elif ins.op in ("call", "async-start"):
+                callee = self._called(ins, "to_apply") or self._called(ins, "calls")
+                if callee:
+                    c = self.comp_cost(callee, mem_level)
+            elif ins.op == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", ins.attrs)
+                names = re.findall(r"%?([\w.\-$]+)", branches[0]) if branches else []
+                tb = self._called(ins, "true_computation")
+                fb = self._called(ins, "false_computation")
+                names += [x for x in (tb, fb) if x]
+                if names:
+                    costs = [self.comp_cost(n, mem_level) for n in names]
+                    c = max(costs, key=lambda x: x.flops)
+            elif ins.op in ("reduce", "reduce-window", "scatter",
+                            "select-and-scatter", "sort", "map"):
+                callee = self._called(ins, "to_apply")
+                if callee:
+                    per = self.comp_cost(callee, mem_level=False).flops
+                    c.flops = per * _shape_elems(
+                        sym.get(ins.operands[0], ins.shape))
+
+            if ins.op in _COLLECTIVES:
+                opb = sum(
+                    _shape_bytes(sym.get(o, "")) for o in ins.operands
+                    if o in sym)
+                c.coll_bytes += opb
+                c.coll_counts = {ins.op.replace("-start", ""): 1}
+
+            if mem_level and ins.op in _MEM_OPS:
+                c.bytes += self._mem_bytes(ins, sym)
+            total = total + c
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> dict:
+    model = HloCostModel(hlo_text)
+    c = model.entry_cost()
+    return {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "collective_bytes_per_device": c.coll_bytes,
+        "collective_counts": c.coll_counts or {},
+    }

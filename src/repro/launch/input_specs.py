@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape-cell) step input.
+
+No device allocation: the dry-run lowers/compiles against these specs only.
+VLM/audio frontends are stubs per task spec: input_specs provides precomputed
+patch/frame embeddings alongside tokens.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import layers as L
+from repro.models.api import get_model
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _batch_specs(cfg: ModelConfig, cell: ShapeCell, kind: str) -> dict[str, Any]:
+    B = cell.global_batch
+    T = cell.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        P = cfg.vision.n_patches
+        T_text = max(T - P, 1)
+        batch["patch_embeds"] = SDS((B, P, cfg.d_model), L.ACT_DTYPE)
+        batch["tokens"] = SDS((B, T_text), jnp.int32)
+    elif cfg.family == "encdec":
+        batch["frames"] = SDS((B, cfg.encoder.n_frames, cfg.d_model), L.ACT_DTYPE)
+        batch["tokens"] = SDS((B, T), jnp.int32)
+    else:
+        batch["tokens"] = SDS((B, T), jnp.int32)
+    if kind == "train":
+        batch["loss_mask"] = SDS(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def params_specs(cfg: ModelConfig, max_seq: int):
+    model = get_model(cfg)
+    return jax.eval_shape(
+        lambda k: model.init(k, cfg, max_seq=max_seq), jax.random.PRNGKey(0)
+    )
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(cfg, batch, max_seq))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Everything the cell's step function consumes, as specs.
+
+    train:   {'batch': ...}                          for train_step(state, batch)
+    prefill: {'batch': ..., 'cache': ...}            for prefill(params, batch, cache)
+    decode:  {'tok': ..., 'cache': ..., 'pos': ...}  for decode_step(...)
+    """
+    if cell.kind == "train":
+        return {"batch": _batch_specs(cfg, cell, "train")}
+    if cell.kind == "prefill":
+        return {
+            "batch": _batch_specs(cfg, cell, "prefill"),
+            "cache": cache_specs(cfg, cell.global_batch, cell.seq_len),
+        }
+    if cell.kind == "decode":
+        return {
+            "tok": SDS((cell.global_batch, 1), jnp.int32),
+            "cache": cache_specs(cfg, cell.global_batch, cell.seq_len),
+            "pos": SDS((), jnp.int32),
+        }
+    raise ValueError(cell.kind)

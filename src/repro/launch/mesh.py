@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Defined as functions (NOT module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init,
+and smoke tests must keep seeing 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) data x model = 256 chips.
+    Multi-pod: (2, 16, 16) pod x data x model = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (CPU tests: 1 device), axes kept compatible."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def available_mesh(target_devices: int | None = None, *, multi_pod: bool = False):
+    """Elastic helper: largest mesh constructible from surviving devices.
+
+    After a pod/node loss, the trainer remeshes to the surviving device count
+    and restores the latest checkpoint with resharding (train/checkpoint.py).
+    """
+    n = target_devices or len(jax.devices())
+    if multi_pod and n >= 512:
+        return make_production_mesh(multi_pod=True)
+    if n >= 256:
+        return make_production_mesh(multi_pod=False)
+    # degrade: keep model axis <= 16, fold the rest into data
+    model = min(16, n)
+    while n % model:
+        model //= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))

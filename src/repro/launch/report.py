@@ -1,0 +1,80 @@
+"""Generates the EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run
+artifacts (baseline and opt variants)."""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.launch.roofline import analyze_cell
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def rows_for(dirname: str, mesh: str):
+    rows = {}
+    d = ART / dirname
+    for jp in sorted(d.glob(f"*__{mesh}.json")):
+        r = analyze_cell(jp)
+        if r:
+            rows[(r["arch"], r["cell"])] = r
+    return rows
+
+
+def dryrun_table(dirname: str) -> str:
+    lines = [
+        "| arch | cell | mesh | status | lower s | compile s | "
+        "args GB/dev | temp GB/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for jp in sorted((ART / dirname).glob("*.json")):
+        rec = json.loads(jp.read_text())
+        ma = rec.get("memory_analysis", {})
+        lines.append(
+            f"| {rec['arch']} | {rec['cell']} | {rec['mesh']} | "
+            f"{'OK' if rec.get('ok') else 'FAIL'} | {rec.get('lower_s', '')} | "
+            f"{rec.get('compile_s', '')} | "
+            f"{ma.get('argument_size_in_bytes', 0)/1e9:.2f} | "
+            f"{ma.get('temp_size_in_bytes', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(base_dir: str, opt_dir: str, mesh: str) -> str:
+    base = rows_for(base_dir, mesh)
+    opt = rows_for(opt_dir, mesh)
+    lines = [
+        "| arch | cell | bound | base C/M/X (s) | opt C/M/X (s) | "
+        "dominant Δ | useful base→opt |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in sorted(base):
+        b = base[key]
+        o = opt.get(key)
+        fmt = lambda r: (f"{r['compute_s']:.2g}/{r['memory_s']:.2g}/"
+                         f"{r['collective_s']:.2g}")
+        dom_b = max(b["compute_s"], b["memory_s"], b["collective_s"])
+        if o:
+            dom_o = max(o["compute_s"], o["memory_s"], o["collective_s"])
+            delta = f"{dom_b/dom_o:.2f}x" if dom_o else "-"
+            useful = f"{b['useful_frac']:.2f}→{o['useful_frac']:.2f}"
+            ofmt = fmt(o)
+        else:
+            delta, useful, ofmt = "-", f"{b['useful_frac']:.2f}", "-"
+        lines.append(
+            f"| {key[0]} | {key[1]} | {b['bound']} | {fmt(b)} | {ofmt} | "
+            f"{delta} | {useful} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--what", default="roofline",
+                    choices=["roofline", "dryrun"])
+    ap.add_argument("--base", default="dryrun")
+    ap.add_argument("--opt", default="dryrun_opt")
+    ap.add_argument("--mesh", default="pod_16x16")
+    a = ap.parse_args()
+    if a.what == "roofline":
+        print(roofline_table(a.base, a.opt, a.mesh))
+    else:
+        print(dryrun_table(a.base))

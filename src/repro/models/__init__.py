@@ -1,0 +1,3 @@
+from repro.models.api import Model, get_model, lm_loss
+
+__all__ = ["Model", "get_model", "lm_loss"]

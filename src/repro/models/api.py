@@ -1,0 +1,317 @@
+"""Unified Model API over all architecture families.
+
+    model = get_model(cfg)
+    params = model.init(key, cfg, max_seq)
+    logits = model.forward_train(params, batch, cfg)          # [B, T, V]
+    cache  = model.init_cache(cfg, batch_size, max_seq)
+    logits, cache = model.prefill(params, batch, cfg, cache)  # fills cache
+    logits, cache = model.decode_step(params, tok, cache, pos, cfg)
+
+batch dicts:
+  dense/moe/ssm/hybrid: {tokens [B,T]}
+  vlm:    {tokens [B,T], patch_embeds [B,P,D]}   (frontend stub)
+  encdec: {tokens [B,T], frames [B,F,D]}         (conv frontend stub)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+class Model(NamedTuple):
+    init: Callable
+    forward_train: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+# ------------------------------------------------------------- decoder-only --
+
+def _dec_init(key, cfg: ModelConfig, max_seq: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"embed": T.init_embed(k1, cfg, max_seq), "stack": T.init_stack(k2, cfg, max_seq)}
+    if cfg.mtp:
+        km1, km2 = jax.random.split(k3)
+        p["mtp"] = {
+            "proj": L.init_dense(km1, 2 * cfg.d_model, cfg.d_model),
+            "block": jax.tree.map(
+                lambda x: x[None],  # repeat=1 stacked unit
+                T.BLOCKS["attn_dense"].init(km2, cfg, max_seq),
+            ),
+            "norm_h": L.init_norm(cfg, cfg.d_model),
+            "norm_e": L.init_norm(cfg, cfg.d_model),
+        }
+    return p
+
+
+def _prefix_embeds(p, batch, cfg: ModelConfig):
+    """Token embeddings, with VLM patch embeddings prepended when present."""
+    x = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+    if "patch_embeds" in batch:
+        x = jnp.concatenate([batch["patch_embeds"].astype(L.ACT_DTYPE), x], axis=1)
+        x = constrain(x, "batch", "seq", "embed")
+    return x
+
+
+def _mtp_logits(p, h, batch, cfg: ModelConfig):
+    """DeepSeek-V3 multi-token prediction: one extra block predicting t+2
+    from [norm(h_t); norm(emb(tok_{t+1}))], sharing embedding and head."""
+    tokens = batch["tokens"]
+    emb_next = T.embed_tokens({"tok": p["embed"]["tok"]},
+                              jnp.roll(tokens, -1, axis=1), cfg)
+    hh = jnp.concatenate(
+        [L.apply_norm(p["mtp"]["norm_h"], h, cfg),
+         L.apply_norm(p["mtp"]["norm_e"], emb_next, cfg)], axis=-1)
+    x = L.dense(p["mtp"]["proj"], hh)
+
+    def body(carry, p_i):
+        y, _ = T.BLOCKS["attn_dense"].apply(
+            p_i, carry, cfg=cfg, cache=None, pos=None, mode="train")
+        return y, 0
+
+    x, _ = lax.scan(body, x, p["mtp"]["block"])
+    return T.logits_head(p["embed"], x, cfg)
+
+
+def _dec_forward_train(p, batch, cfg: ModelConfig):
+    x = _prefix_embeds(p, batch, cfg)
+    h, _ = T.apply_stack(p["stack"], x, cfg=cfg, mode="train")
+    if "patch_embeds" in batch:  # only text positions produce logits
+        n_p = batch["patch_embeds"].shape[1]
+        h = h[:, n_p:]
+    logits = T.logits_head(p["embed"], h, cfg)
+    if cfg.mtp:
+        mtp_logits = _mtp_logits(p, h, batch, cfg)
+        return logits, mtp_logits
+    return logits
+
+
+def _dec_init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return T.init_stack_cache(cfg, batch, max_seq)
+
+
+def _dec_prefill(p, batch, cfg: ModelConfig, cache):
+    x = _prefix_embeds(p, batch, cfg)
+    h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache, mode="prefill")
+    logits = T.logits_head(p["embed"], h[:, -1:], cfg)
+    return logits[:, 0], new_cache
+
+
+def _dec_decode(p, tok, cache, pos, cfg: ModelConfig):
+    x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
+    h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache, pos=pos, mode="decode")
+    logits = T.logits_head(p["embed"], h, cfg)
+    return logits[:, 0], new_cache
+
+
+DECODER_MODEL = Model(
+    init=_dec_init,
+    forward_train=_dec_forward_train,
+    prefill=_dec_prefill,
+    decode_step=_dec_decode,
+    init_cache=_dec_init_cache,
+)
+
+
+# ----------------------------------------------------------------- enc-dec --
+
+def _sinusoid(n: int, d: int):
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _xattn_init(key, cfg, max_seq):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self": L.init_attention(k1, cfg, max_seq),
+        "cross": L.init_attention(k2, cfg, max_seq),
+        "mlp": L.init_mlp(k3, cfg, gated=False),
+    }
+
+
+def _xattn_apply(p, x, *, cfg, cache, pos, mode):
+    a, nself = L.apply_attention(
+        p["self"], x, cfg=cfg, cache=None if cache is None else cache["self"],
+        pos=pos, mode=mode, rope_theta=None)
+    x = x + a
+    cross_kv = None if cache is None else (cache["cross_k"], cache["cross_v"])
+    if cross_kv is not None:
+        a, _ = L.apply_attention(
+            p["cross"], x, cfg=cfg, cache=None, pos=pos, mode=mode,
+            rope_theta=None, cross_kv=cross_kv)
+        x = x + a
+    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg)
+    nc = None
+    if cache is not None:
+        nc = dict(cache)
+        nc["self"] = nself
+    return x, nc
+
+
+def _enc_block_init(key, cfg, max_seq):
+    k1, k2 = jax.random.split(key)
+    return {"attn": L.init_attention(k1, cfg, max_seq), "mlp": L.init_mlp(k2, cfg, gated=False)}
+
+
+def _enc_block_apply(p, x, *, cfg):
+    a, _ = L.apply_attention(p["attn"], x, cfg=cfg, cache=None, pos=None,
+                             mode="encode", rope_theta=None)
+    x = x + a
+    return x + L.apply_mlp(p["mlp"], x, cfg=cfg)
+
+
+def _ed_init(key, cfg: ModelConfig, max_seq: int):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k3, cfg.encoder.n_layers)
+    return {
+        "embed": T.init_embed(k1, cfg, max_seq),
+        "stack": jax.vmap(lambda k: _xattn_init(k, cfg, max_seq))(
+            jax.random.split(k2, cfg.n_layers)
+        ),
+        "enc": jax.vmap(lambda k: _enc_block_init(k, cfg, max_seq))(enc_keys),
+        "enc_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def _encode(p, frames, cfg: ModelConfig):
+    x = frames.astype(L.ACT_DTYPE)
+    x = x + _sinusoid(x.shape[1], cfg.d_model)[None].astype(L.ACT_DTYPE)
+    x = constrain(x, "batch", "frames", "embed")
+
+    def body(carry, p_i):
+        return _enc_block_apply(p_i, carry, cfg=cfg), 0
+
+    x, _ = lax.scan(body, x, p["enc"])
+    return L.apply_norm(p["enc_norm"], x, cfg)
+
+
+def _cross_kv(p_stack, enc_out, cfg: ModelConfig):
+    """Precompute per-layer cross K/V from encoder output (scanned)."""
+    hd = cfg.resolved_head_dim
+
+    def body(_, p_i):
+        k = L.dense(p_i["cross"]["wk"], enc_out).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, hd)
+        v = L.dense(p_i["cross"]["wv"], enc_out).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, hd)
+        return 0, (k, v)
+
+    _, (ks, vs) = lax.scan(body, 0, p_stack)
+    return ks, vs  # [L, B, F, Hkv, hd]
+
+
+def _ed_forward_train(p, batch, cfg: ModelConfig):
+    enc_out = _encode(p, batch["frames"], cfg)
+    x = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+    ks, vs = _cross_kv(p["stack"], enc_out, cfg)
+
+    def body(carry, xs):
+        p_i, k_i, v_i = xs
+        a, _ = L.apply_attention(p_i["self"], carry, cfg=cfg, cache=None,
+                                 pos=None, mode="train", rope_theta=None)
+        h = carry + a
+        a, _ = L.apply_attention(p_i["cross"], h, cfg=cfg, cache=None, pos=None,
+                                 mode="train", rope_theta=None, cross_kv=(k_i, v_i))
+        h = h + a
+        h = h + L.apply_mlp(p_i["mlp"], h, cfg=cfg)
+        return h, 0
+
+    x, _ = lax.scan(body, x, (p["stack"], ks, vs))
+    return T.logits_head(p["embed"], x, cfg)
+
+
+def _ed_init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    unit = {
+        "self": L.init_attn_cache(cfg, batch, max_seq),
+        "cross_k": jnp.zeros(
+            (batch, cfg.encoder.n_frames, cfg.n_kv_heads, cfg.resolved_head_dim),
+            L.ACT_DTYPE),
+        "cross_v": jnp.zeros(
+            (batch, cfg.encoder.n_frames, cfg.n_kv_heads, cfg.resolved_head_dim),
+            L.ACT_DTYPE),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), unit)
+
+
+def _ed_prefill(p, batch, cfg: ModelConfig, cache):
+    enc_out = _encode(p, batch["frames"], cfg)
+    ks, vs = _cross_kv(p["stack"], enc_out, cfg)
+    x = T.embed_tokens(p["embed"], batch["tokens"], cfg)
+
+    def body(carry, xs):
+        p_i, c_i, k_i, v_i = xs
+        c_i = dict(c_i)
+        c_i["cross_k"], c_i["cross_v"] = k_i, v_i
+        h, nc = _xattn_apply(p_i, carry, cfg=cfg, cache=c_i, pos=None, mode="prefill")
+        return h, nc
+
+    x, new_cache = lax.scan(body, x, (p["stack"], cache, ks, vs))
+    logits = T.logits_head(p["embed"], x[:, -1:], cfg)
+    return logits[:, 0], new_cache
+
+
+def _ed_decode(p, tok, cache, pos, cfg: ModelConfig):
+    x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
+
+    def body(carry, xs):
+        p_i, c_i = xs
+        h, nc = _xattn_apply(p_i, carry, cfg=cfg, cache=c_i, pos=pos, mode="decode")
+        return h, nc
+
+    x, new_cache = lax.scan(body, x, (p["stack"], cache))
+    logits = T.logits_head(p["embed"], x, cfg)
+    return logits[:, 0], new_cache
+
+
+ENCDEC_MODEL = Model(
+    init=_ed_init,
+    forward_train=_ed_forward_train,
+    prefill=_ed_prefill,
+    decode_step=_ed_decode,
+    init_cache=_ed_init_cache,
+)
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return ENCDEC_MODEL if cfg.family == "encdec" else DECODER_MODEL
+
+
+# ------------------------------------------------------------------- loss ----
+
+def lm_loss(logits, batch, cfg: ModelConfig):
+    """Next-token CE (+ 0.3-weighted MTP t+2 CE for DeepSeek-V3)."""
+    if isinstance(logits, tuple):
+        main, mtp = logits
+    else:
+        main, mtp = logits, None
+    tokens = batch["tokens"]
+    full_mask = batch.get("loss_mask", jnp.ones_like(tokens))
+    if cfg.loss_impl == "streamed":
+        from repro.models.loss import streamed_lm_ce
+
+        loss = streamed_lm_ce(main, tokens, full_mask, shift=1)
+        if mtp is not None:
+            loss = loss + 0.3 * streamed_lm_ce(mtp, tokens, full_mask, shift=2)
+        return loss
+    mask = full_mask[:, 1:].astype(jnp.float32)
+    lp = jax.nn.log_softmax(main[:, :-1].astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, tokens[:, 1:, None], axis=-1)[..., 0]
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if mtp is not None:
+        m2 = full_mask[:, 2:].astype(jnp.float32)
+        lp2 = jax.nn.log_softmax(mtp[:, :-2].astype(jnp.float32), axis=-1)
+        ll2 = jnp.take_along_axis(lp2, tokens[:, 2:, None], axis=-1)[..., 0]
+        loss = loss + 0.3 * (-jnp.sum(ll2 * m2) / jnp.maximum(jnp.sum(m2), 1.0))
+    return loss

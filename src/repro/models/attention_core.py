@@ -1,0 +1,275 @@
+"""Attention core: memory-efficient (flash-style) attention in pure JAX.
+
+Materialized [T, S] score tensors are impossible at the assigned shapes
+(prefill_32k: 32768^2 f32 scores ~ 4 GiB per head-batch), so train/prefill
+attention runs as a two-level lax.scan with online softmax over KV blocks —
+O(qb * kb) live scores. A custom VJP recomputes blocks in backward (the
+standard flash backward), so autodiff never materializes full scores either.
+
+Heads layout is GQA-grouped: q [B, Hkv, G, T, dk], k [B, Hkv, S, dk],
+v [B, Hkv, S, dv]; MQA/MHA are G=H / G=1 special cases; MLA folds its
+nope+rope parts into dk and uses dv != dk.
+
+Masking: static descriptor (kind, window); absolute positions derive from
+block indices. Causal blocks above the diagonal are *masked, not skipped*
+(XLA scans have static trip counts): a known 2x FLOP overhead on the causal
+flash path, recorded as a §Perf hillclimb item (block-skipping Pallas flash).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = -1e30
+
+
+class MaskInfo(NamedTuple):
+    kind: str  # causal | window | full
+    window: int = 0
+    kv_len: int = 0  # true (unpadded) kv length
+
+
+def _block_mask(info: MaskInfo, qpos, kpos):
+    """Boolean [qb, kb] mask from absolute positions."""
+    ok = kpos[None, :] < info.kv_len if info.kv_len else None
+    if info.kind == "full":
+        return ok if ok is not None else None
+    causal = kpos[None, :] <= qpos[:, None]
+    if info.kind == "window":
+        causal &= kpos[None, :] > qpos[:, None] - info.window
+    return causal if ok is None else (causal & ok)
+
+
+def _pad_axis(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, pad)
+    return jnp.pad(x, w)
+
+
+def _band(info: MaskInfo, iq: int, qb: int, kb: int, nk: int) -> tuple[int, int]:
+    """Static kv-block range [lo, hi) that q-block iq can attend to.
+
+    Causal: blocks 0..ceil(((iq+1)*qb)/kb). Window: additionally bounded
+    below. Full: everything. Banding skips masked-out blocks ENTIRELY —
+    the §Perf fix for the 2x causal / O(T/window) windowed flash waste."""
+    if info.kind == "full":
+        return 0, nk
+    hi = min(nk, -(-((iq + 1) * qb) // kb))
+    if info.kind == "window":
+        lo = max(0, (iq * qb - info.window + 1) // kb)
+        return lo, hi
+    return 0, hi
+
+
+def _flash_fwd_inner(q, k, v, info: MaskInfo, scale, qb, kb):
+    """q [B,Hkv,G,T,dk] (T % qb == 0), k/v padded to kb multiples.
+    Returns out [B,Hkv,G,T,dv], lse [B,Hkv,G,T].
+
+    Outer loop over q blocks is a PYTHON loop (static band bounds per
+    block); inner loop a lax.scan over just that block's band."""
+    B, Hkv, G, T, dk = q.shape
+    S = k.shape[2]
+    dv = v.shape[-1]
+    nq, nk = T // qb, S // kb
+    qs = q.reshape(B, Hkv, G, nq, qb, dk)
+    ks = jnp.moveaxis(k.reshape(B, Hkv, nk, kb, dk), 2, 0)  # [nk, B,Hkv,kb,dk]
+    vs = jnp.moveaxis(v.reshape(B, Hkv, nk, kb, dv), 2, 0)
+
+    outs, lses = [], []
+    for iq in range(nq):
+        qi = qs[:, :, :, iq]
+        qpos = iq * qb + jnp.arange(qb)
+        lo, hi = _band(info, iq, qb, kb, nk)
+
+        def kv_step(carry, kj_idx, _qi=qi, _qpos=qpos):
+            m, l, acc = carry
+            kj, vj, jk = kj_idx
+            kpos = jk * kb + jnp.arange(kb)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", _qi.astype(jnp.float32),
+                kj.astype(jnp.float32)) * scale
+            mask = _block_mask(info, _qpos, kpos)
+            if mask is not None:
+                s = jnp.where(mask[None, None, None], s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            if mask is not None:
+                p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, dv), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks[lo:hi], vs[lo:hi], jnp.arange(lo, hi)))
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        lses.append(m + jnp.log(jnp.maximum(l, 1e-30)))
+
+    out = jnp.stack(outs, axis=3).reshape(B, Hkv, G, T, dv)
+    lse = jnp.stack(lses, axis=3).reshape(B, Hkv, G, T)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, info: MaskInfo, scale: float, qb: int, kb: int):
+    out, _ = _flash_fwd_inner(q, k, v, info, scale, qb, kb)
+    return out
+
+
+def _flash_fwd(q, k, v, info, scale, qb, kb):
+    out, lse = _flash_fwd_inner(q, k, v, info, scale, qb, kb)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(info, scale, qb, kb, res, dout):
+    q, k, v, out, lse = res
+    B, Hkv, G, T, dk = q.shape
+    S = k.shape[2]
+    dv = v.shape[-1]
+    nq, nk = T // qb, S // kb
+    dout = dout.astype(jnp.float32)
+    D = jnp.sum(dout * out, axis=-1)  # [B,Hkv,G,T]
+
+    qs = q.reshape(B, Hkv, G, nq, qb, dk)
+    dos = dout.reshape(B, Hkv, G, nq, qb, dv)
+    lses = lse.reshape(B, Hkv, G, nq, qb)
+    Ds = D.reshape(B, Hkv, G, nq, qb)
+    qs_s = jnp.moveaxis(qs, 3, 0)  # [nq, ...] for inner scans
+    dos_s = jnp.moveaxis(dos, 3, 0)
+    lses_s = jnp.moveaxis(lses, 3, 0)
+    Ds_s = jnp.moveaxis(Ds, 3, 0)
+    ks = jnp.moveaxis(k.reshape(B, Hkv, nk, kb, dk), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, Hkv, nk, kb, dv), 2, 0)
+
+    def p_block(qi, lse_i, qpos, kj, jk):
+        kpos = jk * kb + jnp.arange(kb)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        mask = _block_mask(info, qpos, kpos)
+        if mask is not None:
+            s = jnp.where(mask[None, None, None], s, NEG)
+        p = jnp.exp(s - lse_i[..., None])
+        if mask is not None:
+            p = jnp.where(mask[None, None, None], p, 0.0)
+        return p
+
+    # dq: python loop over q blocks, banded inner scan over kv blocks
+    dq_blocks = []
+    for iq in range(nq):
+        qi, do_i = qs[:, :, :, iq], dos[:, :, :, iq]
+        lse_i, D_i = lses[:, :, :, iq], Ds[:, :, :, iq]
+        qpos = iq * qb + jnp.arange(qb)
+        lo, hi = _band(info, iq, qb, kb, nk)
+
+        def inner(dq_acc, ys, _qi=qi, _do=do_i, _lse=lse_i, _D=D_i, _qpos=qpos):
+            kj, vj, jk = ys
+            p = p_block(_qi, _lse, _qpos, kj, jk)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", _do, vj.astype(jnp.float32))
+            ds = p * (dp - _D[..., None])
+            dq_acc += jnp.einsum("bhgqk,bhkd->bhgqd", ds, kj.astype(jnp.float32))
+            return dq_acc, None
+
+        dq0 = jnp.zeros((B, Hkv, G, qb, dk), jnp.float32)
+        dq_i, _ = lax.scan(inner, dq0, (ks[lo:hi], vs[lo:hi], jnp.arange(lo, hi)))
+        dq_blocks.append(dq_i * scale)
+    dq = jnp.stack(dq_blocks, axis=3).reshape(q.shape).astype(q.dtype)
+
+    # dk/dv: python loop over kv blocks, banded inner scan over q blocks
+    q_ranges = []
+    for jk in range(nk):
+        touch = [iq for iq in range(nq)
+                 if _band(info, iq, qb, kb, nk)[0] <= jk < _band(info, iq, qb, kb, nk)[1]]
+        q_ranges.append((touch[0], touch[-1] + 1) if touch else (0, 0))
+
+    dk_blocks, dv_blocks = [], []
+    for jk in range(nk):
+        kj, vj = ks[jk], vs[jk]
+        qlo, qhi = q_ranges[jk]
+        z = (jnp.zeros((B, Hkv, kb, dk), jnp.float32),
+             jnp.zeros((B, Hkv, kb, dv), jnp.float32))
+        if qhi > qlo:
+            def inner2(carry, ys, _kj=kj, _vj=vj, _jk=jk):
+                dk_acc, dv_acc = carry
+                qi, do_i, lse_i, D_i, iq = ys
+                qpos = iq * qb + jnp.arange(qb)
+                p = p_block(qi, lse_i, qpos, _kj, _jk)
+                dv_acc += jnp.einsum("bhgqk,bhgqd->bhkd", p, do_i)
+                dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_i, _vj.astype(jnp.float32))
+                ds = p * (dp - D_i[..., None])
+                dk_acc += jnp.einsum("bhgqk,bhgqd->bhkd", ds,
+                                     qi.astype(jnp.float32))
+                return (dk_acc, dv_acc), None
+
+            z, _ = lax.scan(
+                inner2, z,
+                (qs_s[qlo:qhi], dos_s[qlo:qhi], lses_s[qlo:qhi],
+                 Ds_s[qlo:qhi], jnp.arange(qlo, qhi)))
+        dk_blocks.append(z[0] * scale)
+        dv_blocks.append(z[1])
+    dk_ = jnp.stack(dk_blocks, axis=2).reshape(k.shape).astype(k.dtype)
+    dv_ = jnp.stack(dv_blocks, axis=2).reshape(v.shape).astype(v.dtype)
+    return dq, dk_, dv_
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+FLASH_THRESHOLD = 2048  # materialize below this T*S; flash above
+DEFAULT_QB = 512
+DEFAULT_KB = 512
+
+
+def attend(q, k, v, *, kind: str, window: int = 0, kv_len: int = 0,
+           scale: float | None = None, qb: int = DEFAULT_QB,
+           kb: int = DEFAULT_KB):
+    """Dispatching attention: q [B,Hkv,G,T,dk], k [B,Hkv,S,dk],
+    v [B,Hkv,S,dv] -> out [B,Hkv,G,T,dv] (f32).
+
+    kind: causal | window | full. kv_len masks padded/unwritten tail keys.
+    Small problems take the materialized path (exact same math)."""
+    B, Hkv, G, T, dk = q.shape
+    S = k.shape[2]
+    scale = scale or (1.0 / math.sqrt(dk))
+    if T * S <= FLASH_THRESHOLD * FLASH_THRESHOLD // 4 or T == 1:
+        qpos = jnp.arange(T) if kind != "full" else jnp.arange(T)
+        info = MaskInfo(kind, window, kv_len or 0)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        mask = _block_mask(info, qpos, jnp.arange(S))
+        if mask is not None:
+            s = jnp.where(mask[None, None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    qp = _pad_axis(q, 3, qb)
+    kp = _pad_axis(k, 2, kb)
+    vp = _pad_axis(v, 2, kb)
+    info = MaskInfo(kind, window, kv_len or S)
+    out = flash_attention(qp, kp, vp, info, scale, qb, kb)
+    return out[:, :, :, :T]
+
+
+def attend_decode(q, k, v, *, abs_pos, scale: float | None = None):
+    """Single-position decode: q [B,Hkv,G,1,dk] against cache k/v [B,Hkv,S,*].
+    abs_pos: [S] absolute position of each cache slot (-1 = invalid) — covers
+    both linear caches (arange) and rolling local-attention buffers.
+    """
+    scale = scale or (1.0 / math.sqrt(q.shape[-1]))
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    ok = (abs_pos >= 0)[None, None, None, None, :]
+    s = jnp.where(ok, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))

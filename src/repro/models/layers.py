@@ -1,0 +1,700 @@
+"""Model-zoo building blocks, pure-functional JAX.
+
+Conventions:
+  * params are nested dicts of jnp arrays (f32 masters; matmuls run bf16),
+  * every block has ``init(key, cfg, max_seq) -> params`` and
+    ``apply(params, x, *, cfg, cache, pos, mode) -> (y, new_cache)``,
+  * ``mode`` in {train, prefill, decode}; decode processes T=1 with a cache,
+  * activations carry logical sharding annotations (repro.dist.sharding),
+  * blocks are scanned over layers by the assemblers (models/transformer.py),
+    so shapes/dtypes must be layer-invariant within a pattern unit.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def _he(key, shape, fan_in=None, dtype=jnp.float32):
+    fan_in = fan_in or shape[0]
+    return (jax.random.normal(key, shape) * (1.0 / math.sqrt(fan_in))).astype(dtype)
+
+
+def _split(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ----------------------------------------------------------------- norms ----
+
+def init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm_kind == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(x32, -1, keepdims=True)
+        var = jnp.var(x32, -1, keepdims=True)
+        y = (x32 - mu) * lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+        return y.astype(ACT_DTYPE)
+    ms = jnp.mean(jnp.square(x32), -1, keepdims=True)  # f32 reduce (fused)
+    if cfg.norm_f32:
+        y = x32 * lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+        return y.astype(ACT_DTYPE)
+    # bf16 elementwise apply: no f32 [B,T,D] materialization (§Perf)
+    inv = lax.rsqrt(ms + cfg.norm_eps).astype(ACT_DTYPE)
+    return x.astype(ACT_DTYPE) * inv * p["scale"].astype(ACT_DTYPE)
+
+
+# ------------------------------------------------------------------ rope ----
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """NeoX-style rotary embedding. x: [B, T, H, hd], positions: [B, T]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- dense ----
+
+def init_dense(key, d_in, d_out, bias=False):
+    p = {"w": _he(key, (d_in, d_out))}
+    if bias:
+        p["b"] = jnp.zeros((d_out,))
+    return p
+
+
+def dense(p, x):
+    y = jnp.einsum("...d,df->...f", x.astype(ACT_DTYPE), p["w"].astype(ACT_DTYPE))
+    if "b" in p:
+        y = y + p["b"].astype(ACT_DTYPE)
+    return y
+
+
+# ---------------------------------------------------------- GQA attention ----
+
+def init_attention(key, cfg: ModelConfig, max_seq: int):
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = _split(key, 4)
+    return {
+        "norm": init_norm(cfg, cfg.d_model),
+        "wq": init_dense(k1, cfg.d_model, cfg.n_heads * hd, cfg.qkv_bias),
+        "wk": init_dense(k2, cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wv": init_dense(k3, cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wo": init_dense(k4, cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, window: int = 0):
+    hd = cfg.resolved_head_dim
+    s = min(max_seq, window) if window else max_seq
+    shape = (batch, s, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, ACT_DTYPE),
+        "v": jnp.zeros(shape, ACT_DTYPE),
+    }
+
+
+def _cache_abs_pos(S: int, pos, window: int):
+    """Absolute position of each cache slot during decode (-1 = not valid).
+
+    Linear cache: slot s holds position s, valid while s <= pos.
+    Rolling window cache: slot s holds the latest position congruent to s
+    (mod window) that is <= pos."""
+    slot = jnp.arange(S)
+    if not window:
+        return jnp.where(slot <= pos, slot, -1)
+    base = (pos // window) * window
+    abs_pos = jnp.where(slot <= pos % window, base + slot, base - window + slot)
+    ok = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+    return jnp.where(ok, abs_pos, -1)
+
+
+def apply_attention(
+    p,
+    x,
+    *,
+    cfg: ModelConfig,
+    cache=None,
+    pos=None,
+    mode="train",
+    window: int = 0,
+    rope_theta: Optional[float] = None,
+    cross_kv=None,
+):
+    """GQA/MQA attention with optional sliding window and KV cache.
+
+    cross_kv: precomputed (k, v) for cross-attention (whisper decoder);
+    bypasses self-KV entirely (no mask, no rope).
+    """
+    B, T, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    h = apply_norm(p["norm"], x, cfg)
+
+    q = dense(p["wq"], h).reshape(B, T, H, hd)
+    if cross_kv is None:
+        k = dense(p["wk"], h).reshape(B, T, Hkv, hd)
+        v = dense(p["wv"], h).reshape(B, T, Hkv, hd)
+        if rope_theta:
+            if mode == "decode":
+                positions = jnp.full((B, T), pos, dtype=jnp.int32)
+            else:
+                positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+            q = rope(q, positions, rope_theta)
+            k = rope(k, positions, rope_theta)
+        q = constrain(q, "batch", "seq", "heads", None)
+        k = constrain(k, "batch", "seq", "kv_heads", None)
+        v = constrain(v, "batch", "seq", "kv_heads", None)
+        new_cache = cache
+        if mode == "decode":
+            assert cache is not None
+            S = cache["k"].shape[1]
+            write = (pos % window) if window else pos
+            k_all = lax.dynamic_update_slice(cache["k"], k, (0, write, 0, 0))
+            v_all = lax.dynamic_update_slice(cache["v"], v, (0, write, 0, 0))
+            new_cache = {"k": k_all, "v": v_all}
+            k, v = k_all, v_all
+            Tk = S
+        elif mode == "prefill":
+            assert cache is not None
+            if window:
+                # rolling buffer: absolute position p lives at slot p % window
+                keep = min(T, window)
+                slots = jnp.arange(T - keep, T) % window
+                new_cache = {
+                    "k": cache["k"].at[:, slots].set(k[:, T - keep :]),
+                    "v": cache["v"].at[:, slots].set(v[:, T - keep :]),
+                }
+            else:
+                new_cache = {
+                    "k": lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
+                    "v": lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+                }
+            Tk = T
+        else:
+            Tk = T
+    else:
+        k, v = cross_kv
+        Tk = k.shape[1]
+        new_cache = cache
+
+    # grouped heads: q [B, Hkv, G, T, hd]; k/v [B, Hkv, S, hd]
+    from repro.models.attention_core import attend, attend_decode
+
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if cross_kv is not None:
+        o = attend(qg, kt, vt, kind="full")
+    elif mode == "decode":
+        abs_pos = _cache_abs_pos(Tk, pos, window)
+        o = attend_decode(qg, kt, vt, abs_pos=abs_pos)
+    elif mode == "encode":
+        o = attend(qg, kt, vt, kind="full")
+    else:
+        o = attend(qg, kt, vt, kind="window" if window else "causal",
+                   window=window)
+    out = o.transpose(0, 3, 1, 2, 4).reshape(B, T, H * hd)
+    out = dense(p["wo"], out.astype(ACT_DTYPE))
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------- MLA attention ----
+
+def init_mla(key, cfg: ModelConfig, max_seq: int):
+    m = cfg.mla
+    ks = _split(key, 6)
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    p = {
+        "norm": init_norm(cfg, cfg.d_model),
+        "wkv_a": init_dense(ks[0], cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": init_norm(cfg, m.kv_lora_rank),
+        "wkv_b": init_dense(
+            ks[1], m.kv_lora_rank, cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+        ),
+        "wo": init_dense(ks[2], cfg.n_heads * m.v_head_dim, cfg.d_model),
+    }
+    if m.q_lora_rank:
+        p["wq_a"] = init_dense(ks[3], cfg.d_model, m.q_lora_rank)
+        p["q_norm"] = init_norm(cfg, m.q_lora_rank)
+        p["wq_b"] = init_dense(ks[4], m.q_lora_rank, cfg.n_heads * qk_dim)
+    else:
+        p["wq"] = init_dense(ks[5], cfg.d_model, cfg.n_heads * qk_dim)
+    return p
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_seq, m.kv_lora_rank), ACT_DTYPE),
+        "krope": jnp.zeros((batch, max_seq, m.qk_rope_head_dim), ACT_DTYPE),
+    }
+
+
+def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
+    """Multi-head latent attention (DeepSeek). The cache stores ONLY the
+    compressed latent c_kv [B, S, r] + shared k_rope — the paper-faithful
+    KV-compression; decode up-projects cached latents (the absorbed-weight
+    variant is a recorded §Perf hillclimb candidate)."""
+    m = cfg.mla
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    h = apply_norm(p["norm"], x, cfg)
+
+    if m.q_lora_rank:
+        q = dense(p["wq_b"], apply_norm(p["q_norm"], dense(p["wq_a"], h), cfg))
+    else:
+        q = dense(p["wq"], h)
+    q = q.reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv = dense(p["wkv_a"], h)  # [B, T, r + dr]
+    ckv = apply_norm(p["kv_norm"], kv[..., : m.kv_lora_rank], cfg)
+    k_rope_new = kv[..., m.kv_lora_rank :]  # [B, T, dr] shared across heads
+
+    if mode == "decode":
+        positions = jnp.full((B, T), pos, dtype=jnp.int32)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    k_rope_new = rope(k_rope_new[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None
+        ckv_all = lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+        kr_all = lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, pos, 0))
+        new_cache = {"ckv": ckv_all, "krope": kr_all}
+        ckv_s, kr_s = ckv_all, kr_all
+        Tk = ckv_all.shape[1]
+    else:
+        if mode == "prefill":
+            assert cache is not None
+            new_cache = {
+                "ckv": lax.dynamic_update_slice(cache["ckv"], ckv, (0, 0, 0)),
+                "krope": lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, 0, 0)),
+            }
+        ckv_s, kr_s = ckv, k_rope_new
+        Tk = T
+
+    from repro.models.attention_core import attend, attend_decode
+
+    if mode == "decode" and cfg.mla_absorb:
+        # absorbed projections: fold W_uk into q and W_uv out of the value
+        # sum, so attention runs over the r-dim latents themselves and the
+        # up-projection happens ONCE per step, not per cached position.
+        wb = p["wkv_b"]["w"].reshape(m.kv_lora_rank, H, dn + dv)
+        w_uk, w_uv = wb[..., :dn], wb[..., dn:]
+        scale = 1.0 / math.sqrt(dn + dr)
+        q_eff = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        s_nope = jnp.einsum("bthr,bsr->bhts", q_eff,
+                            ckv_s.astype(jnp.float32))
+        s_rope = jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                            kr_s.astype(jnp.float32))
+        s = (s_nope + s_rope) * scale
+        slot = jnp.arange(Tk)
+        s = jnp.where((slot <= pos)[None, None, None], s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhts,bsr->bthr", probs, ckv_s.astype(jnp.float32))
+        o = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(jnp.float32))
+        out = dense(p["wo"], o.reshape(B, T, H * dv).astype(ACT_DTYPE))
+        return constrain(out, "batch", "seq", "embed"), new_cache
+
+    # up-project latents to per-head K_nope and V (paper-faithful/naive path)
+    kvb = dense(p["wkv_b"], ckv_s).reshape(B, Tk, H, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k_nope = constrain(k_nope, "batch", "seq", "heads", None)
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_s[:, :, None, :], (B, Tk, H, dr))], axis=-1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qg = q_full.transpose(0, 2, 1, 3)[:, :, None]  # [B, H, 1, T, dk]
+    kt = k_full.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if mode == "decode":
+        o = attend_decode(qg, kt, vt, abs_pos=_cache_abs_pos(Tk, pos, 0),
+                          scale=scale)
+    else:
+        o = attend(qg, kt, vt, kind="causal", scale=scale)
+    out = o[:, :, 0].transpose(0, 2, 1, 3).reshape(B, T, H * dv)
+    out = dense(p["wo"], out.astype(ACT_DTYPE))
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+# ------------------------------------------------------------------- MLP ----
+
+def _mlp_gated(cfg: ModelConfig, gated_default: bool) -> bool:
+    return gated_default if cfg.mlp_gated is None else cfg.mlp_gated
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None, gated=True):
+    d_ff = d_ff or cfg.d_ff
+    ks = _split(key, 3)
+    if _mlp_gated(cfg, gated):
+        return {
+            "norm": init_norm(cfg, cfg.d_model),
+            "gate": init_dense(ks[0], cfg.d_model, d_ff),
+            "up": init_dense(ks[1], cfg.d_model, d_ff),
+            "down": init_dense(ks[2], d_ff, cfg.d_model),
+        }
+    return {
+        "norm": init_norm(cfg, cfg.d_model),
+        "up": init_dense(ks[0], cfg.d_model, d_ff),
+        "down": init_dense(ks[1], d_ff, cfg.d_model),
+    }
+
+
+def _mlp_act(cfg: ModelConfig, a):
+    if cfg.mlp_act == "relu2":
+        return jnp.square(jax.nn.relu(a))
+    if cfg.mlp_act == "gelu":
+        return jax.nn.gelu(a)
+    return jax.nn.silu(a)
+
+
+def apply_mlp(p, x, *, cfg: ModelConfig):
+    h = apply_norm(p["norm"], x, cfg)
+    if "gate" in p:
+        a = _mlp_act(cfg, dense(p["gate"], h)) * dense(p["up"], h)
+    else:
+        a = _mlp_act(cfg, dense(p["up"], h)) if cfg.norm_kind != "layernorm" \
+            else jax.nn.gelu(dense(p["up"], h))
+    a = constrain(a, "batch", "seq", "mlp")
+    return constrain(dense(p["down"], a), "batch", "seq", "embed")
+
+
+# ------------------------------------------------------------------- MoE ----
+
+def _moe_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    mc = cfg.moe
+    c = int(math.ceil(n_tokens * mc.top_k / mc.n_experts * mc.capacity_factor))
+    c = min(c, n_tokens * mc.top_k)  # dropless ceiling
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def init_moe(key, cfg: ModelConfig):
+    mc = cfg.moe
+    ks = _split(key, 5)
+    p = {
+        "norm": init_norm(cfg, cfg.d_model),
+        "router": _he(ks[0], (cfg.d_model, mc.n_experts)),
+        "we_gate": _he(ks[1], (mc.n_experts, cfg.d_model, mc.d_ff_expert), cfg.d_model),
+        "we_up": _he(ks[2], (mc.n_experts, cfg.d_model, mc.d_ff_expert), cfg.d_model),
+        "we_down": _he(ks[3], (mc.n_experts, mc.d_ff_expert, cfg.d_model), mc.d_ff_expert),
+    }
+    if mc.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=mc.n_shared * mc.d_ff_expert)
+        del p["shared"]["norm"]  # shares the block's norm
+    return p
+
+
+def apply_moe(p, x, *, cfg: ModelConfig):
+    """Grouped sort-based dispatch (EP): tokens are routed SHARD-LOCALLY per
+    data-parallel group (leading G axis = number of 'batch' shards), so the
+    argsort/scatter never crosses devices; the only cross-device movement is
+    the capacity-bounded [G, E, C, D] buffer resharding (data <-> expert
+    owners) — GSPMD lowers it to the canonical EP all-to-all. §Perf iteration
+    1: replaces a global argsort whose GSPMD lowering all-gathered the full
+    [N, D] activations (collective-bound, see EXPERIMENTS.md).
+
+    dispatch='global_sort' keeps the pre-iteration path for A/B."""
+    from repro.dist.sharding import axis_extent
+
+    mc = cfg.moe
+    B, T, D = x.shape
+    N, E, K = B * T, mc.n_experts, mc.top_k
+    h = apply_norm(p["norm"], x, cfg)
+    hf = h.reshape(N, D)
+
+    G = axis_extent("batch") if getattr(mc, "dispatch", "grouped") == "grouped" else 1
+    if N % G:
+        G = 1
+    n_loc = N // G
+    hg = constrain(hf.reshape(G, n_loc, D), "batch", None, None)
+
+    # router in bf16 with f32 accumulation: avoids materializing an f32
+    # copy of the full [N, D] activations (§Perf iteration 4)
+    logits = jnp.einsum("gnd,de->gne", hg,
+                        p["router"].astype(ACT_DTYPE),
+                        preferred_element_type=jnp.float32)
+    if mc.gating == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = lax.top_k(probs, K)  # [G, n_loc, K]
+    weights = vals / (jnp.sum(vals, -1, keepdims=True) + 1e-9)
+
+    C = _moe_capacity(n_loc, cfg)
+    A = n_loc * K  # assignments per group
+    e_flat = idx.reshape(G, A)
+    w_flat = weights.reshape(G, A)
+    order = jnp.argsort(e_flat, axis=-1)  # stable: within-expert order = token order
+    e_s = jnp.take_along_axis(e_flat, order, axis=-1)
+    starts = jax.vmap(
+        lambda es: jnp.searchsorted(es, jnp.arange(E + 1), side="left"))(e_s)
+
+    # GATHER-based capacity dispatch (§Perf iteration 3): buffer slot
+    # p = e*C + r pulls sorted-assignment starts[e]+r — no forward scatter
+    # (XLA's scatter expander materializes target-shaped index grids).
+    eidx = jnp.arange(E * C) // C
+    ridx = jnp.arange(E * C) % C
+    src = jnp.take_along_axis(starts, eidx[None].repeat(G, 0), axis=1) + ridx
+    valid = src < jnp.take_along_axis(starts, eidx[None].repeat(G, 0) + 1, axis=1)
+    src = jnp.minimum(src, A - 1)
+    src_assign = jnp.take_along_axis(order, src, axis=1)  # [G, E*C] assignment id
+    src_tok = src_assign // K
+    rows = jnp.take_along_axis(hg, src_tok[..., None], axis=1)  # [G, E*C, D]
+    rows = constrain(rows, "batch", None, None)
+    expert_in = jnp.where(valid[..., None], rows, 0).reshape(G, E, C, D)
+    # the EP boundary: data-sharded groups -> expert-sharded buffers
+    expert_in = constrain(expert_in, "batch", "experts", None, None)
+    a = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", expert_in, p["we_gate"].astype(ACT_DTYPE))
+    ) * jnp.einsum("gecd,edf->gecf", expert_in, p["we_up"].astype(ACT_DTYPE))
+    out_e = jnp.einsum("gecf,efd->gecd", a, p["we_down"].astype(ACT_DTYPE))
+    out_e = constrain(out_e, "batch", "experts", None, None)
+    h_flat = constrain(out_e.reshape(G, E * C, D), "batch", None, None)
+
+    # combine, also gather-based: assignment (t, k) sits at sorted position
+    # inv_order, rank within its expert = pos - starts[e], slot = e*C + rank
+    inv_order = jnp.argsort(order, axis=-1)  # [G, A]
+    rank = inv_order - jnp.take_along_axis(starts, e_flat, axis=1)
+    keep = rank < C
+    slot = jnp.minimum(e_flat * C + rank, E * C - 1)
+    hsel = jnp.take_along_axis(h_flat, slot[..., None], axis=1)  # [G, A, D]
+    hsel = constrain(hsel, "batch", None, None)
+    contrib = jnp.where(keep[..., None],
+                        w_flat[..., None].astype(ACT_DTYPE) * hsel, 0)
+    out = contrib.reshape(G, n_loc, K, D).sum(axis=2)
+    out = constrain(out, "batch", None, None).reshape(N, D)
+
+    if mc.n_shared:
+        sp = dict(p["shared"])
+        a = jax.nn.silu(dense(sp["gate"], hf)) * dense(sp["up"], hf)
+        out = out + dense(sp["down"], a)
+    return constrain(out.reshape(B, T, D), "batch", "seq", "embed")
+
+
+# ----------------------------------------------------------------- Mamba ----
+
+def _mamba_dims(cfg: ModelConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    dt_rank = sc.dt_rank or -(-cfg.d_model // 16)
+    return d_inner, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, max_seq: int):
+    sc = cfg.ssm
+    di, dtr = _mamba_dims(cfg)
+    ks = _split(key, 6)
+    return {
+        "norm": init_norm(cfg, cfg.d_model),
+        "in_proj": init_dense(ks[0], cfg.d_model, 2 * di),
+        "conv_w": _he(ks[1], (di, sc.d_conv), sc.d_conv),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": init_dense(ks[2], di, dtr + 2 * sc.d_state),
+        "dt_proj": {
+            "w": _he(ks[3], (dtr, di)),
+            "b": jnp.zeros((di,)) + jnp.log(jnp.expm1(jnp.float32(0.01))),
+        },
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, sc.d_state + 1, dtype=jnp.float32), (di, sc.d_state))
+        ),
+        "D_skip": jnp.ones((di,)),
+        "out_proj": init_dense(ks[4], di, cfg.d_model),
+    }
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    sc = cfg.ssm
+    di, _ = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, sc.d_conv - 1, di), ACT_DTYPE),
+        "h": jnp.zeros((batch, di, sc.d_state), jnp.float32),
+    }
+
+
+def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
+    """Mamba-1: GEMMs hoisted out of the recurrence; the selective scan runs
+    as lax.scan over time (compile-compact; per-step work is elementwise)."""
+    sc = cfg.ssm
+    B, T, D = x.shape
+    di, dtr = _mamba_dims(cfg)
+    h_in = apply_norm(p["norm"], x, cfg)
+    xz = dense(p["in_proj"], h_in)
+    xs, z = xz[..., :di], xz[..., di:]
+    xs = constrain(xs, "batch", "seq", "mlp")
+
+    # depthwise causal conv over time
+    new_conv_state = None
+    if mode == "decode":
+        window = jnp.concatenate([cache["conv"], xs], axis=1)  # [B, d_conv, di]
+        new_conv_state = window[:, 1:]
+        conv = jnp.einsum("bkd,dk->bd", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))[:, None]
+    else:
+        pad = jnp.zeros((B, sc.d_conv - 1, di), xs.dtype)
+        xp = jnp.concatenate([pad, xs], axis=1)
+        conv = sum(
+            xp[:, j : j + T].astype(jnp.float32)
+            * p["conv_w"][:, j].astype(jnp.float32)
+            for j in range(sc.d_conv)
+        )
+        if mode == "prefill":
+            new_conv_state = xp[:, -(sc.d_conv - 1) :].astype(ACT_DTYPE)
+    u = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))  # [B, T, di] f32
+
+    proj = dense(p["x_proj"], u.astype(ACT_DTYPE)).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", proj[..., :dtr], p["dt_proj"]["w"].astype(jnp.float32))
+        + p["dt_proj"]["b"]
+    )
+    Bc = proj[..., dtr : dtr + sc.d_state]  # [B, T, S]
+    Cc = proj[..., dtr + sc.d_state :]
+    A = -jnp.exp(p["A_log"])  # [di, S]
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, di, sc.d_state), jnp.float32)
+
+    # Selective scan, chunked: the [B, T, di, S] discretized operands are
+    # NEVER materialized over full T (17 TB/device at train_4k for 7B) —
+    # da/db are formed per step inside the scan; chunk bodies are
+    # checkpointed so backward stores only T/Q chunk-boundary states.
+    def step(h, inputs):
+        dt_t, b_t, c_t, u_t = inputs  # [B, di], [B, S], [B, S], [B, di]
+        da_t = jnp.exp(dt_t[..., None] * A)  # [B, di, S]
+        db_t = (dt_t * u_t)[..., None] * b_t[:, None, :]
+        h = da_t * h + db_t
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (
+        dt.swapaxes(0, 1),  # [T, B, di]
+        Bc.swapaxes(0, 1),  # [T, B, S]
+        Cc.swapaxes(0, 1),
+        u.swapaxes(0, 1),  # [T, B, di]
+    )
+    Q = 64  # chunk length
+    if T % Q == 0 and T > Q:
+        chunked = jax.tree.map(lambda a: a.reshape(T // Q, Q, *a.shape[1:]), xs)
+
+        def chunk_body(h, chunk_xs):
+            return lax.scan(step, h, chunk_xs)
+
+        if mode == "train":
+            chunk_body = jax.checkpoint(chunk_body)
+        hT, ys = lax.scan(chunk_body, h0, chunked)
+        ys = ys.reshape(T, B, di)
+    else:
+        hT, ys = lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + u * p["D_skip"].astype(jnp.float32)  # [B, T, di]
+    y = y.astype(ACT_DTYPE) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv_state.astype(ACT_DTYPE), "h": hT}
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+# ---------------------------------------------------------------- RG-LRU ----
+
+def init_rglru(key, cfg: ModelConfig, max_seq: int):
+    rc = cfg.rglru
+    w = rc.lru_width or cfg.d_model
+    ks = _split(key, 7)
+    return {
+        "norm": init_norm(cfg, cfg.d_model),
+        "in_x": init_dense(ks[0], cfg.d_model, w),
+        "in_gate": init_dense(ks[1], cfg.d_model, w),
+        "conv_w": _he(ks[2], (w, rc.d_conv), rc.d_conv),
+        "conv_b": jnp.zeros((w,)),
+        "w_a": init_dense(ks[3], w, w, bias=True),
+        "w_i": init_dense(ks[4], w, w, bias=True),
+        "lam": jnp.full((w,), 4.0),  # a = sigmoid(lam)^(c*r): init near 0.98^c
+        "out": init_dense(ks[5], w, cfg.d_model),
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    rc = cfg.rglru
+    w = rc.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, rc.d_conv - 1, w), ACT_DTYPE),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
+    rc = cfg.rglru
+    B, T, D = x.shape
+    w = rc.lru_width or cfg.d_model
+    h_in = apply_norm(p["norm"], x, cfg)
+    gate = jax.nn.gelu(dense(p["in_gate"], h_in))
+    u = dense(p["in_x"], h_in)
+
+    new_conv_state = None
+    if mode == "decode":
+        windowv = jnp.concatenate([cache["conv"], u], axis=1)
+        new_conv_state = windowv[:, 1:]
+        u = jnp.einsum(
+            "bkd,dk->bd", windowv.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
+        )[:, None] + p["conv_b"].astype(jnp.float32)
+    else:
+        pad = jnp.zeros((B, rc.d_conv - 1, w), u.dtype)
+        up = jnp.concatenate([pad, u], axis=1)
+        if mode == "prefill":
+            new_conv_state = up[:, -(rc.d_conv - 1) :].astype(ACT_DTYPE)
+        u = sum(
+            up[:, j : j + T].astype(jnp.float32) * p["conv_w"][:, j].astype(jnp.float32)
+            for j in range(rc.d_conv)
+        ) + p["conv_b"].astype(jnp.float32)
+    u = u.astype(ACT_DTYPE)
+
+    r = jax.nn.sigmoid(dense(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_i"], u).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))  # [w]
+    log_a = rc.c * r * log_a_base  # [B, T, w]
+    a = jnp.exp(log_a)
+    gated_x = i * u.astype(jnp.float32)
+    inp = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, w), jnp.float32)
+
+    def step(h, ab):
+        a_t, x_t = ab
+        h = a_t * h + x_t
+        return h, h
+
+    hT, hs = lax.scan(step, h0, (a.swapaxes(0, 1), inp.swapaxes(0, 1)))
+    rec = hs.swapaxes(0, 1).astype(ACT_DTYPE)  # [B, T, w]
+    out = dense(p["out"], rec * gate)
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"conv": new_conv_state, "h": hT}
+    return constrain(out, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,64 @@
+"""Fused cross-entropy: no f32 [tokens, vocab] softmax residuals.
+
+The naive CE (jax.nn.log_softmax then gather) makes autodiff SAVE the f32
+log-probabilities for backward — at train_4k/128k-vocab the single largest
+activation in the step. This custom-VJP version saves only the [N] logsumexp
+and recomputes `(softmax - onehot)` in backward as one fused expression, so
+forward adds ~nothing (max/sumexp fuse into reductions) and backward's only
+large tensor is the unavoidable dlogits itself.
+
+All expressions reduce/broadcast along the vocab axis directly — they respect
+a vocab-sharded logits layout under GSPMD (an earlier vocab-chunk-scanned
+variant forced logits replication on the multi-pod mesh: scanning over a
+sharded axis gathers; see EXPERIMENTS.md §Perf cell 3 iteration 2b).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _stats(logits2d: jax.Array, targets: jax.Array):
+    l32 = logits2d.astype(jnp.float32)
+    m = jnp.max(l32, axis=-1)
+    s = jnp.sum(jnp.exp(l32 - m[:, None]), axis=-1)
+    lse = m + jnp.log(jnp.maximum(s, 1e-30))
+    tl = jnp.take_along_axis(l32, targets[:, None], axis=-1)[:, 0]
+    return lse, tl
+
+
+@jax.custom_vjp
+def streamed_ce(logits2d, targets, mask):
+    """Mean masked CE over [N, V] logits (f32 math, bf16-safe inputs)."""
+    lse, tl = _stats(logits2d, targets)
+    return jnp.sum((lse - tl) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _ce_fwd(logits2d, targets, mask):
+    lse, tl = _stats(logits2d, targets)
+    loss = jnp.sum((lse - tl) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, (logits2d, targets, mask, lse)
+
+
+def _ce_bwd(res, g):
+    logits2d, targets, mask, lse = res
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    coef = (g * mask / denom).astype(jnp.float32)  # [N]
+    p = jnp.exp(logits2d.astype(jnp.float32) - lse[:, None])
+    onehot = targets[:, None] == jnp.arange(logits2d.shape[1])[None]
+    dlogits = (coef[:, None] * (p - onehot.astype(jnp.float32)))
+    return dlogits.astype(logits2d.dtype), None, None
+
+
+streamed_ce.defvjp(_ce_fwd, _ce_bwd)
+
+
+def streamed_lm_ce(logits, tokens, mask, chunk: int = 0, shift: int = 1):
+    """CE over [B, T, V] logits where position t predicts token t+shift.
+    (``chunk`` retained for API compatibility; fusion makes it unnecessary.)"""
+    del chunk
+    B, T, V = logits.shape
+    l2 = logits[:, :-shift].reshape(-1, V)
+    t2 = tokens[:, shift:].reshape(-1)
+    m2 = mask[:, shift:].reshape(-1).astype(jnp.float32)
+    return streamed_ce(l2, t2, m2)

@@ -1,0 +1,64 @@
+"""AdamW with optional low-precision moments (distributed-optimization trick:
+bf16 m/v halves optimizer-state HBM — the difference between DeepSeek-V3
+fitting 512 chips or not; see EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    state_dtype: Optional[str] = None  # None=f32 | 'bfloat16'
+
+
+def schedule(cfg: AdamWConfig, step):
+    # step+1: the first optimizer step must not be a no-op (lr=0)
+    warm = jnp.minimum((step + 1) / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init(params, cfg: AdamWConfig):
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+
+def update(grads, opt_state, params, step, cfg: AdamWConfig):
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = step + 1
+
+    def m_upd(g, m):
+        return (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype)
+
+    def v_upd(g, v):
+        return (b2 * v.astype(jnp.float32)
+                + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype)
+
+    m_new = jax.tree.map(m_upd, grads, opt_state["m"])
+    v_new = jax.tree.map(v_upd, grads, opt_state["v"])
+
+    def p_upd(p, m, v):
+        mhat = m.astype(jnp.float32) / (1 - b1**t)
+        vhat = v.astype(jnp.float32) / (1 - b2**t)
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    params_new = jax.tree.map(p_upd, params, m_new, v_new)
+    return params_new, {"m": m_new, "v": v_new}

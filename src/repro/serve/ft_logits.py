@@ -1,0 +1,70 @@
+"""Entangled int8 logits projection: the paper's technique on the serving
+hot path.
+
+The head GEMM (hidden [B, D] x head [D, V]) is sesquilinear, so it runs
+directly on entangled inputs: the batch is split into M request groups
+(streams), activations are fixed-point-quantized within the plan's eq. (13)
+budget (a K-deep integer dot needs K * |a|max * |w|max <= D_max), entangled
+across groups, multiplied by the int8 weight ONCE per group on M independent
+shards (the fused Pallas kernel entangles on load), and any single group's
+fail-stop is rolled forward from the other M-1 entangled outputs.
+
+Returns dequantized float logits. Integer recovery is EXACT (tests assert
+bit-equality under injected failure); the quantization itself trades logits
+precision for protection like any int8 serving path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.entangle import disentangle
+from repro.core.failstop import GARBAGE
+from repro.core.plan import EntanglePlan, make_plan
+from repro.kernels import ops as kops
+
+
+def quantize_head(head: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 weight quantization."""
+    amax = jnp.maximum(jnp.max(jnp.abs(head)), 1e-9)
+    scale = 127.0 / amax
+    return jnp.clip(jnp.round(head * scale), -127, 127).astype(jnp.int32), scale
+
+
+def ft_logits(
+    h: jax.Array,  # [B, D] float hidden states (final norm applied)
+    head_q: jax.Array,  # [D, V] int8-range int32 weights
+    w_scale: jax.Array,
+    *,
+    M: int = 4,
+    plan: Optional[EntanglePlan] = None,
+    failed_group: Optional[int] = None,
+    use_pallas: bool = True,
+) -> jax.Array:
+    B, D = h.shape
+    V = head_q.shape[1]
+    assert B % M == 0, f"batch {B} must split into M={M} request groups"
+    plan = plan or make_plan(M, 32)
+
+    # activation budget so the K-deep int dot stays within eq. (13)
+    a_budget = plan.max_output_magnitude // (D * 127)
+    a_budget = max(a_budget, 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(h)), 1e-9)
+    a_scale = a_budget / amax
+    hq = jnp.round(h * a_scale).astype(jnp.int32).reshape(M, B // M, D)
+
+    if use_pallas:
+        delta = kops.entangled_matmul(hq, head_q, plan)
+    else:
+        from repro.core.entangle import entangle
+
+        eps = entangle(hq, plan)
+        delta = jnp.einsum("mbk,kv->mbv", eps, head_q).astype(jnp.int32)
+
+    if failed_group is not None:
+        delta = delta.at[failed_group].set(GARBAGE)
+    rec = disentangle(delta, plan, failed=failed_group)  # [M, B/M, V] int32
+    logits = rec.astype(jnp.float32) / (a_scale * w_scale)
+    return logits.reshape(B, V)

@@ -1,0 +1,126 @@
+"""Fault-tolerant checkpointing: atomic, async, hash-verified, elastic.
+
+  * atomic: written to ``step_N.tmp-<pid>`` then os.rename'd — a crash
+    mid-write can never corrupt the latest checkpoint;
+  * async: the device->host gather happens on the caller thread (cheap), the
+    file I/O on a background thread, off the training critical path;
+  * verified: manifest stores per-leaf SHA-256; restore refuses silent
+    corruption (complements the paper's SDC story at the storage layer);
+  * elastic: restore() takes target NamedShardings — a checkpoint written on
+    a 512-chip mesh restores onto 256 or 1024 chips (or 1 CPU) by
+    device_put against the new sharding: checkpoint-level re-sharding is the
+    elastic-scaling path after a pod loss.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ save ----
+
+    def save(self, state, step: int, blocking: bool = False):
+        """Snapshot to host memory synchronously, write files async."""
+        host = jax.tree.map(lambda x: np.asarray(x), state)
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(host, int(step)), daemon=True
+        )
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, host_state, step: int):
+        tmp = self.dir / f"step_{step:08d}.tmp-{os.getpid()}"
+        final = self.dir / f"step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": []}
+        for i, (path, leaf) in enumerate(_tree_paths(host_state)):
+            fn = f"leaf_{i:05d}.npy"
+            np.save(tmp / fn, leaf)
+            digest = hashlib.sha256((tmp / fn).read_bytes()).hexdigest()
+            manifest["leaves"].append(
+                {"path": path, "file": fn, "sha256": digest,
+                 "shape": list(np.shape(leaf)), "dtype": str(np.asarray(leaf).dtype)}
+            )
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # --------------------------------------------------------- restore ----
+
+    def all_steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if p.is_dir() and not p.name.endswith(tuple(f"tmp-{s}" for s in [""]))
+            and ".tmp-" not in p.name
+        )
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: Optional[int] = None, shardings=None):
+        """Load into the structure of ``state_like``; device_put each leaf
+        against ``shardings`` (same treedef) if given — the elastic path."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        by_path = {e["path"]: e for e in manifest["leaves"]}
+
+        leaves_kp, treedef = jax.tree_util.tree_flatten_with_path(state_like)
+        shard_leaves = (
+            jax.tree_util.tree_flatten(shardings)[0] if shardings is not None
+            else [None] * len(leaves_kp)
+        )
+        out = []
+        for (kp, like), shd in zip(leaves_kp, shard_leaves):
+            entry = by_path[jax.tree_util.keystr(kp)]
+            raw = (d / entry["file"]).read_bytes()
+            if hashlib.sha256(raw).hexdigest() != entry["sha256"]:
+                raise IOError(
+                    f"checkpoint corruption detected in {entry['file']} "
+                    f"(sha mismatch) — refusing to load")
+            arr = np.load(d / entry["file"])
+            if shd is not None:
+                out.append(jax.device_put(arr, shd))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step

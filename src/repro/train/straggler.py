@@ -1,0 +1,66 @@
+"""Straggler mitigation: deadline-miss == fail-stop (paper Sec. I).
+
+The paper motivates fail-stop recovery with cores that "do not return the
+results within a predetermined deadline". DeadlineExecutor runs per-stream
+host callables under a wall-clock deadline; a miss marks that stream failed
+and the caller rolls FORWARD via disentanglement of the other M-1 streams —
+no waiting, no recomputation (contrast: checkpoint-rollback would waste all
+M streams' work; plain recomputation doubles latency).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+
+@dataclasses.dataclass
+class StreamResult:
+    index: int
+    value: object = None
+    failed: bool = False
+    elapsed_s: float = 0.0
+
+
+class DeadlineExecutor:
+    def __init__(self, deadline_s: float, max_workers: Optional[int] = None):
+        self.deadline_s = deadline_s
+        self.max_workers = max_workers
+
+    def run(self, fns: Sequence[Callable[[], object]]) -> list[StreamResult]:
+        """Run stream computations concurrently; mark deadline misses failed.
+
+        At most ONE failure is surfaced (the single-fail-stop model); if
+        several streams miss the deadline, the slowest is marked failed and
+        the rest are awaited (matching the paper's recovery guarantee)."""
+        results = [StreamResult(i) for i in range(len(fns))]
+        start = time.monotonic()
+        with cf.ThreadPoolExecutor(max_workers=self.max_workers or len(fns)) as ex:
+            futs = {ex.submit(fn): i for i, fn in enumerate(fns)}
+            remaining = set(futs)
+            deadline = start + self.deadline_s
+            done, pending = cf.wait(remaining, timeout=max(deadline - time.monotonic(), 0))
+            for f in done:
+                i = futs[f]
+                results[i].value = f.result()
+                results[i].elapsed_s = time.monotonic() - start
+            if pending:
+                # single-failure budget: fail the one straggler, await others
+                slowest = next(iter(pending))
+                for f in pending:
+                    if f is not slowest:
+                        i = futs[f]
+                        results[i].value = f.result()
+                        results[i].elapsed_s = time.monotonic() - start
+                i = futs[slowest]
+                results[i].failed = True
+                slowest.cancel()
+        return results
+
+    @staticmethod
+    def failed_index(results: list[StreamResult]) -> Optional[int]:
+        for r in results:
+            if r.failed:
+                return r.index
+        return None

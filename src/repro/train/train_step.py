@@ -1,0 +1,96 @@
+"""The jitted training step: forward + CE loss (+MTP) + backward + AdamW.
+
+Two gradient-sync flavors:
+  * 'spmd'  — gradients reduced implicitly by GSPMD (pjit); the production
+    path for the dry-run cells.
+  * 'entangle'/'checksum' — explicit fault-tolerant sync through
+    repro.dist.collectives (the paper's technique on the DP gradient path);
+    used by the FT trainer/examples, where a deadline-missed shard is rolled
+    forward from the surviving M-1 entangled blocks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.api import get_model, lm_loss
+from repro.optim import adamw as adamw_mod
+from repro.optim.adamw import AdamWConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    adamw: AdamWConfig = AdamWConfig()
+    grad_sync: str = "spmd"  # spmd | entangle | checksum
+    ft_M: int = 4
+    max_seq: int = 4096
+    grad_accum: int = 1  # microbatches per step (activation-memory lever:
+    #   remat-saved layer inputs scale with the microbatch, not the batch)
+
+
+def init_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+    model = get_model(cfg)
+    params = model.init(key, cfg, max_seq=tcfg.max_seq)
+    opt = adamw_mod.init(params, tcfg.adamw)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    failed_block: Optional[int] = None):
+    """Returns step(state, batch) -> (state, metrics). ``failed_block``
+    statically injects a fail-stop into the FT grad sync (tests/examples)."""
+    model = get_model(cfg)
+
+    def step(state, batch):
+        def loss_fn(params, b):
+            logits = model.forward_train(params, b, cfg)
+            return lm_loss(logits, b, cfg)
+
+        if tcfg.grad_accum > 1:
+            k = tcfg.grad_accum
+            mb = jax.tree.map(
+                lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]), batch)
+
+            def acc_body(carry, b):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(state["params"], b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0), zeros), mb)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+
+        diag: dict[str, Any] = {}
+        if tcfg.grad_sync == "entangle":
+            from repro.dist.collectives import ft_grad_sync
+
+            grads, diag = ft_grad_sync(
+                grads, axis_name=None, n_replicas=1, M=tcfg.ft_M,
+                failed_block=failed_block)
+        elif tcfg.grad_sync == "checksum":
+            from repro.dist.collectives import checksum_grad_sync
+
+            grads, diag = checksum_grad_sync(
+                grads, axis_name=None, n_replicas=1, M=tcfg.ft_M,
+                failed_block=failed_block)
+
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        params, opt = adamw_mod.update(
+            grads, state["opt"], state["params"], state["step"], tcfg.adamw)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        metrics = {"loss": loss, "grad_norm": gnorm, **diag}
+        return new_state, metrics
+
+    return step

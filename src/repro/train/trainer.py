@@ -1,0 +1,70 @@
+"""Training driver: checkpoint/restart, straggler roll-forward, elastic.
+
+The loop composes the substrates:
+  data (stateless synthetic pipeline + prefetch) -> jitted train_step ->
+  NE/checksum-protected gradient sync -> async checkpointing -> restart.
+
+Failure drills (exercised in tests/examples):
+  * kill/restart: trainer resumes bit-exact from the latest atomic snapshot
+    (data pipeline is pure-in-step, so no data state to restore);
+  * straggler: a deadline-missed gradient block is rolled forward from the
+    other M-1 entangled blocks (loss curve provably unaffected);
+  * elastic: restore() re-shards the state onto a different mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+    fail_block_at_step: Optional[int] = None  # inject fail-stop at this step
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
+               loop: LoopConfig, log: Callable[[str], None] = print):
+    data = SyntheticLM(dcfg)
+    ckpt = CheckpointManager(loop.ckpt_dir)
+    key = jax.random.PRNGKey(loop.seed)
+
+    state = init_state(key, cfg, tcfg)
+    start_step = 0
+    if ckpt.latest_step() is not None:
+        state, start_step = ckpt.restore(state)
+        log(f"[trainer] resumed from step {start_step}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    step_fail = None
+    if loop.fail_block_at_step is not None and tcfg.grad_sync in ("entangle", "checksum"):
+        step_fail = jax.jit(make_train_step(cfg, tcfg, failed_block=1))
+
+    losses = []
+    t0 = time.monotonic()
+    for step in range(start_step, loop.total_steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
+        fn = step_fail if (step_fail is not None and step == loop.fail_block_at_step) else step_fn
+        state, metrics = fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if (step + 1) % loop.log_every == 0:
+            dt = time.monotonic() - t0
+            log(f"[trainer] step {step+1} loss={losses[-1]:.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} ({dt:.1f}s)")
+        if (step + 1) % loop.ckpt_every == 0:
+            ckpt.save(state, step + 1)
+    ckpt.save(state, loop.total_steps, blocking=True)
+    return state, np.array(losses)

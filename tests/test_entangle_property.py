@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) on the paper's core invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    checksum_output_bits,
+    disentangle,
+    disentangle_oracle_np,
+    entangle,
+    make_plan,
+    plan_lk,
+)
+
+SET = settings(max_examples=40, deadline=None)
+
+
+@st.composite
+def plan_case(draw):
+    M = draw(st.integers(3, 12))
+    w = draw(st.sampled_from([16, 32]))
+    if w == 16 and M > 15:
+        M = 15
+    return make_plan(M, w)
+
+
+@given(plan_case(), st.integers(0, 2**31 - 1))
+@SET
+def test_roundtrip_any_failure(plan, seed):
+    """Entangled outputs recover exactly from any M-1 streams (eq. 16-19)."""
+    rng = np.random.default_rng(seed)
+    D = plan.max_output_magnitude
+    if D == 0:
+        return
+    d = rng.integers(-D, D + 1, size=(plan.M, 64)).astype(np.int64)
+    # entangled outputs as produced by a linear op: delta = S_l d_prev + d
+    delta = ((np.roll(d, 1, 0) << plan.l) + d).astype(np.int32)
+    failed = int(rng.integers(0, plan.M))
+    rec = np.asarray(disentangle(jnp.asarray(delta), plan, failed=failed))
+    np.testing.assert_array_equal(rec, d)
+    rec_np = disentangle_oracle_np(delta, plan, failed)
+    np.testing.assert_array_equal(rec_np, d)
+
+
+@given(plan_case(), st.integers(0, 2**31 - 1))
+@SET
+def test_boundary_values(plan, seed):
+    """The eq. (13) range contract is sufficient at its exact boundary."""
+    D = plan.max_output_magnitude
+    if D == 0:
+        return
+    d = np.array([[D, -D, D - 1, 1 - D, 0, 1, -1]] * plan.M, dtype=np.int64)
+    delta = ((np.roll(d, 1, 0) << plan.l) + d).astype(np.int32)
+    for failed in range(plan.M):
+        rec = np.asarray(disentangle(jnp.asarray(delta), plan, failed=failed))
+        np.testing.assert_array_equal(rec, d)
+
+
+@given(plan_case(), st.integers(0, 2**31 - 1), st.integers(-64, 64))
+@SET
+def test_linear_homomorphism(plan, seed, scalar):
+    """op(E{c}) == E{op(c)} for scaling — the commutation the whole scheme
+    rests on (Sec. III)."""
+    rng = np.random.default_rng(seed)
+    D = plan.max_output_magnitude // (abs(scalar) + 1)
+    if D < 1:
+        return
+    c = rng.integers(-D, D + 1, size=(plan.M, 32)).astype(np.int32)
+    eps = np.asarray(entangle(jnp.asarray(c), plan))
+    lhs = (eps.astype(np.int64) * scalar).astype(np.int32)
+    d = (c.astype(np.int64) * scalar)
+    rhs = ((np.roll(d, 1, 0) << plan.l) + d).astype(np.int32)
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@given(plan_case(), st.integers(0, 2**31 - 1))
+@SET
+def test_convolution_recovery(plan, seed):
+    """End-to-end: entangle -> integer convolution (the paper's op) ->
+    fail-stop -> recover == plain convolution."""
+    rng = np.random.default_rng(seed)
+    nk = int(rng.integers(2, 9))
+    g = rng.integers(-8, 8, size=nk).astype(np.int64)
+    bound = max(int(np.abs(g).sum()) * 32, 1)
+    A = min(plan.max_output_magnitude // bound, 32)
+    if A < 1:  # eq. (13) budget too small for this op (e.g. l=1 collapse)
+        return
+    c = rng.integers(-A, A + 1, size=(plan.M, 48)).astype(np.int32)
+    eps = np.asarray(entangle(jnp.asarray(c), plan))
+    delta = np.stack([np.convolve(eps[m].astype(np.int64), g)
+                      for m in range(plan.M)]).astype(np.int32)
+    d_true = np.stack([np.convolve(c[m].astype(np.int64), g)
+                       for m in range(plan.M)])
+    assert np.abs(d_true).max() <= plan.max_output_magnitude
+    failed = int(rng.integers(0, plan.M))
+    rec = np.asarray(disentangle(jnp.asarray(delta), plan, failed=failed))
+    np.testing.assert_array_equal(rec, d_true)
+
+
+@given(st.integers(3, 32), st.sampled_from([16, 32]))
+@SET
+def test_plan_constraints(M, w):
+    """(M-1)l + k <= w, k <= l for every planned configuration (eq. 12)."""
+    if w == 16 and M > 15:
+        return
+    l, k = plan_lk(M, w)
+    assert (M - 1) * l + k <= w
+    assert 1 <= k <= l
+
+
+def test_table1_reproduction():
+    """Paper Table I — exact (l, k, output bitwidth, checksum bitwidth)."""
+    expected = {
+        3: (11, 10, 21, 30), 4: (8, 8, 24, 30), 5: (7, 4, 25, 29),
+        8: (4, 4, 28, 29), 11: (3, 2, 29, 28), 16: (2, 2, 30, 28),
+        32: (1, 1, 31, 27),
+    }
+    for M, (l, k, bits, cs_bits) in expected.items():
+        pl, pk = plan_lk(M, 32)
+        plan = make_plan(M, 32)
+        assert (pl, pk) == (l, k), M
+        assert plan.output_bits == bits, M
+        assert checksum_output_bits(M, 32) == cs_bits, M
+
+
+def test_out_of_range_breaks():
+    """Values beyond the range contract are NOT guaranteed recoverable —
+    eq. (13) is also necessary (Remark 3)."""
+    plan = make_plan(3, 32)
+    bad = plan.max_output_magnitude_tight * 4
+    d = np.array([[bad], [0], [0]], dtype=np.int64)
+    delta = ((np.roll(d, 1, 0) << plan.l) + d).astype(np.int32)
+    rec = np.asarray(
+        disentangle(jnp.asarray(delta), plan, failed=0)).astype(np.int64)
+    assert not np.array_equal(rec, d)
+
+
+def test_tight_bound_extends_table1():
+    """Beyond-paper: the tight bound keeps M=32 usable where eq. (13)
+    collapses to zero."""
+    plan = make_plan(32, 32)
+    assert plan.max_output_magnitude == 0
+    D = plan.max_output_magnitude_tight
+    assert D > 2**28
+    d = np.full((32, 8), D, dtype=np.int64)
+    d[::2] *= -1
+    delta = ((np.roll(d, 1, 0) << plan.l) + d).astype(np.int32)
+    rec = np.asarray(disentangle(jnp.asarray(delta), plan, failed=5))
+    np.testing.assert_array_equal(rec, d)
