@@ -1,9 +1,15 @@
-"""Shared benchmark utilities: timed jit'd calls, CSV emission."""
+"""Shared benchmark utilities: timed jit'd calls, CSV emission, and the
+BENCH_*.json recorder (the artifact CI uploads to track the overhead
+trajectory across PRs)."""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
+
+_RECORDS: list[dict] = []
 
 
 def time_call(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
@@ -18,5 +24,40 @@ def time_call(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
     return best
 
 
+def fusion_bytes_model(M: int, B: int, K: int, N: int) -> dict[str, int]:
+    """Ideal HBM bytes moved by each entangled-GEMM schedule (int32).
+
+    fused: one pallas_call (entangle-on-load, extract-at-flush); two_pass:
+    fused GEMM + separate disentangle sweep; three_pass: entangle sweep +
+    GEMM + disentangle sweep. Pure arithmetic — lives here so XLA-only
+    benchmarks can report it without importing the Pallas kernel stack.
+    """
+    gemm = M * B * K + K * N + M * B * N
+    return {
+        "fused": 4 * gemm,
+        "two_pass": 4 * (gemm + 2 * M * B * N),
+        "three_pass": 4 * (gemm + 2 * M * B * K + 2 * M * B * N),
+    }
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append(
+        {"name": name, "us_per_call": round(us_per_call, 1),
+         "derived": derived}
+    )
+
+
+def write_bench_json(tag: str, extra_meta: dict | None = None) -> pathlib.Path:
+    """Dump everything emitted so far to ./BENCH_<tag>.json."""
+    path = pathlib.Path.cwd() / f"BENCH_{tag}.json"
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            **(extra_meta or {}),
+        },
+        "records": _RECORDS,
+    }
+    path.write_text(json.dumps(payload, indent=1))
+    return path

@@ -1,13 +1,15 @@
 """Beyond-paper: entangled integer GEMM overhead (the paper analyzes GEMM
 cost in Sec. IV but measures only convolution). Also measures the checksum
-GEMM baseline. Streams = M row-blocks of the left matrix."""
+GEMM baseline, and reports the fused-vs-separate HBM bytes model per size
+(the codec traffic the fused Pallas kernel removes from the critical
+bandwidth path). Streams = M row-blocks of the left matrix."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import fusion_bytes_model, time_call
 from repro.core.entangle import disentangle, entangle
 from repro.core.plan import make_plan
 
@@ -49,6 +51,11 @@ def run(emit, sizes=(128, 256, 512)):
             t0 = time_call(_plain, c, g)
             t1 = time_call(ent, c, g)
             t2 = time_call(_checksum, c, g)
+            bts = fusion_bytes_model(M, N, N, N)
             emit(f"gemm_M{M}_N{N}", t0 * 1e6,
                  f"overhead_entangle_pct={(t1/t0-1)*100:.1f};"
-                 f"overhead_checksum_pct={(t2/t0-1)*100:.1f}")
+                 f"overhead_checksum_pct={(t2/t0-1)*100:.1f};"
+                 f"hbm_bytes_fused={bts['fused']};"
+                 f"hbm_bytes_three_pass={bts['three_pass']};"
+                 f"codec_bytes_removed_pct="
+                 f"{(1 - bts['fused']/bts['three_pass'])*100:.0f}")

@@ -1,17 +1,38 @@
-"""Microbenchmarks of the core codec ops (jnp/XLA path — the Pallas kernels
-target TPU and are validated via interpret mode in tests, not timed here)."""
+"""Microbenchmarks of the codec ops, plus the fused-vs-separate ledger.
+
+Two sections:
+
+  codec_*   entangle/disentangle bandwidth on the jnp/XLA path (the Pallas
+            kernels target TPU and are validated via interpret mode).
+
+  fusion_*  the tentpole measurement: entangle -> GEMM -> extract as ONE
+            fused pallas_call vs the separate-pass schedules, with the HBM
+            bytes-moved model for each. The paper's 1.8-2.8% overhead claim
+            requires the codec to ride the compute pass; the bytes model
+            makes the difference auditable:
+
+              fused      in: M*B*K + K*N      out: M*B*N
+              two-pass   fused GEMM (entangle-on-load) + separate
+                         disentangle sweep:          + 2*M*B*N
+              three-pass entangle sweep + GEMM + disentangle sweep:
+                         + 2*M*B*K + 2*M*B*N
+
+            run() validates ratio(three-pass/fused) >= 2 and reports
+            wall-times on the current backend (interpret mode off-TPU).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import fusion_bytes_model, time_call
 from repro.core.entangle import disentangle, entangle
 from repro.core.plan import make_plan
+from repro.kernels import ops as kops
 
 
-def run(emit, n: int = 1 << 20):
+def _codec_section(emit, n: int):
     rng = np.random.default_rng(2)
     for M, w in ((3, 32), (8, 32), (4, 16)):
         plan = make_plan(M, w)
@@ -27,3 +48,53 @@ def run(emit, n: int = 1 << 20):
         emit(f"codec_M{M}_w{w}", t_e * 1e6,
              f"entangle_GBps={gbps_e:.2f};disentangle_GBps={gbps_d:.2f};"
              f"temp={plan.temp}")
+
+
+def _fusion_section(emit, sizes) -> bool:
+    rng = np.random.default_rng(4)
+    ok = True
+    for M, B, K, N in sizes:
+        plan = make_plan(M, 32)
+        lim = max(int(np.sqrt(plan.max_output_magnitude / K)) // 2, 1)
+        c = jnp.asarray(rng.integers(-lim, lim, size=(M, B, K)).astype(np.int32))
+        g = jnp.asarray(rng.integers(-lim, lim, size=(K, N)).astype(np.int32))
+        bl = {"bb": min(64, B), "bn": min(64, N), "bk": min(64, K)}
+
+        fused = lambda: kops.entangled_matmul(
+            c, g, plan, fuse_epilogue=True, blocks=bl)
+        two_pass = lambda: kops.disentangle(
+            kops.entangled_matmul(c, g, plan, blocks=bl), plan)
+        # three-pass: separate entangle sweep, GEMM, separate extract sweep
+        three_pass = lambda: kops.disentangle(
+            jnp.einsum("mbk,kn->mbn", kops.entangle(c, plan),
+                       g).astype(jnp.int32), plan)
+
+        np.testing.assert_array_equal(  # same results before timing them
+            np.asarray(fused()), np.asarray(two_pass()))
+        np.testing.assert_array_equal(
+            np.asarray(fused()), np.asarray(three_pass()))
+
+        t_f = time_call(fused)
+        t_2 = time_call(two_pass)
+        t_3 = time_call(three_pass)
+        bts = fusion_bytes_model(M, B, K, N)
+        ratio3 = bts["three_pass"] / bts["fused"]
+        ok &= ratio3 >= 2.0
+        emit(
+            f"fusion_M{M}_B{B}_K{K}_N{N}", t_f * 1e6,
+            f"t_two_pass_us={t_2 * 1e6:.1f};t_three_pass_us={t_3 * 1e6:.1f};"
+            f"speedup_vs_three_pass={t_3 / t_f:.2f};"
+            f"hbm_bytes_fused={bts['fused']};"
+            f"hbm_bytes_two_pass={bts['two_pass']};"
+            f"hbm_bytes_three_pass={bts['three_pass']};"
+            f"bytes_ratio_three_over_fused={ratio3:.2f}",
+        )
+    return ok
+
+
+def run(emit, n: int = 1 << 20, fusion_sizes=None) -> bool:
+    _codec_section(emit, n)
+    if fusion_sizes is None:
+        fusion_sizes = ((4, 128, 128, 128), (4, 256, 128, 256),
+                        (8, 128, 128, 128))
+    return _fusion_section(emit, fusion_sizes)

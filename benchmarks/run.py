@@ -4,10 +4,14 @@
   complexity_model     paper Sec. IV op-count model + claims
   fig2_conv_throughput paper Fig. 2 (conv throughput, NE vs checksum)
   gemm_overhead        Sec. IV GEMM cost, measured (beyond-paper)
-  kernel_micro         codec bandwidth microbenches
+  kernel_micro         codec bandwidth + fused-vs-separate ledger
   roofline_report      dry-run three-term roofline summary (if artifacts)
 
-Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks problem sizes.
+Prints ``name,us_per_call,derived`` CSV and writes every record to
+``BENCH_<mode>.json`` (the artifact CI uploads). ``--quick`` shrinks
+problem sizes; ``--smoke`` is the CI mode — the validation-bearing subsets
+(table1, complexity, gemm, micro incl. the fused-codec ledger) at small
+sizes, suitable for CPU interpret mode.
 """
 from __future__ import annotations
 
@@ -19,20 +23,27 @@ import jax
 jax.config.update("jax_enable_x64", True)  # exact f64 conv (paper uses
 # ippsConv_64f); benchmarks run in their own process, tests are unaffected.
 
-from benchmarks.common import emit  # noqa: E402
+from benchmarks.common import emit, write_bench_json  # noqa: E402
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: validation subsets at small sizes")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     ok = True
+    quick = args.quick or args.smoke
 
     def want(name):
-        return not args.only or name in args.only.split(",")
+        if args.only:
+            return name in args.only.split(",")
+        if args.smoke:
+            return name in ("table1", "complexity", "gemm", "micro")
+        return True
 
     if want("table1"):
         from benchmarks import table1_bitwidth
@@ -45,21 +56,31 @@ def main() -> None:
     if want("fig2"):
         from benchmarks import fig2_conv_throughput
 
-        n = 50_000 if args.quick else 200_000
-        ks = (100, 1000) if args.quick else (100, 1000, 4500)
+        n = 50_000 if quick else 200_000
+        ks = (100, 1000) if quick else (100, 1000, 4500)
         fig2_conv_throughput.run(emit, n_in=n, kernel_sizes=ks)
     if want("gemm"):
         from benchmarks import gemm_overhead
 
-        gemm_overhead.run(emit, sizes=(128, 256) if args.quick else (128, 256, 512))
+        gemm_overhead.run(emit, sizes=(128, 256) if quick else (128, 256, 512))
     if want("micro"):
         from benchmarks import kernel_micro
 
-        kernel_micro.run(emit, n=1 << (18 if args.quick else 20))
+        fusion_sizes = (
+            ((4, 64, 64, 64), (4, 128, 64, 128)) if quick else None
+        )
+        ok &= kernel_micro.run(emit, n=1 << (18 if quick else 20),
+                               fusion_sizes=fusion_sizes)
     if want("roofline"):
         from benchmarks import roofline_report
 
         roofline_report.run(emit)
+
+    mode = "smoke" if args.smoke else ("quick" if args.quick else "full")
+    if args.only:  # a subset run must not masquerade as a full artifact
+        mode = "only-" + args.only.replace(",", "-")
+    path = write_bench_json(mode, {"mode": mode, "ok": bool(ok)})
+    print(f"[bench] wrote {path}", file=sys.stderr)
 
     if not ok:
         print("benchmark_validation,0.0,FAILED", file=sys.stderr)

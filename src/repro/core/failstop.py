@@ -26,7 +26,11 @@ from repro.core.plan import EntanglePlan, make_plan
 
 Array = jax.Array
 
-GARBAGE = jnp.int32(-0x5A5A5A5A)  # poison for lost streams
+# poison for lost streams. A plain Python int, NOT a jnp scalar: modules
+# are sometimes first imported inside a jit trace (lazy imports in traced
+# step functions), where a module-level jnp constant would be created as a
+# tracer of that trace and leak into every later trace.
+GARBAGE = -0x5A5A5A5A
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,8 @@
+"""Distribution layer: logical-axis sharding rules, parameter/batch/cache
+sharding assignment, fault-tolerant gradient collectives (the paper's
+numerical entanglement on the data-parallel gradient path) and pipeline
+parallelism.
+
+Kept import-light: importing :mod:`repro.dist` must never touch jax device
+state (the dry-run sets XLA device-count flags before first jax init).
+"""

@@ -1,0 +1,73 @@
+"""Sharding assignment for parameter / batch / cache pytrees.
+
+The dry-run compiles every (arch x shape-cell) against ShapeDtypeStruct
+specs; these helpers map each leaf to a :class:`NamedSharding` on the
+production mesh. The policy is deliberately structural (no per-model
+tables): tensor-parallel ("model") on the largest divisible weight axis,
+data-parallel ("data", plus "pod" when present) on the leading batch axis
+of inputs and caches, replicate whatever does not divide.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _model_extent(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _param_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    ext = _model_extent(mesh)
+    if ext > 1 and len(shape) >= 1:
+        # shard the largest divisible axis on "model"; prefer trailing axes
+        # on ties (output-feature sharding keeps matmul reduction local)
+        order = sorted(range(len(shape)), key=lambda i: (shape[i], i),
+                       reverse=True)
+        for i in order:
+            if shape[i] >= ext and shape[i] % ext == 0:
+                entries: list[Any] = [None] * len(shape)
+                entries[i] = "model"
+                return P(*entries)
+    return P()
+
+
+def _batch_spec(shape: tuple[int, ...], mesh: Mesh) -> P:
+    axes = _data_axes(mesh)
+    ext = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if axes and len(shape) >= 1 and shape[0] % ext == 0 and shape[0] >= ext:
+        return P(axes if len(axes) > 1 else axes[0])
+    return P()
+
+
+def param_shardings(cfg, mesh: Mesh, p_specs) -> Any:
+    """NamedSharding tree matching ``p_specs`` (model/tensor parallel)."""
+    del cfg  # policy is structural; cfg kept for future per-arch overrides
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _param_spec(tuple(s.shape), mesh)),
+        p_specs,
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_specs) -> Any:
+    """Shard the leading (global-batch) axis over the data axes."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _batch_spec(tuple(s.shape), mesh)),
+        batch_specs,
+    )
+
+
+def cache_shardings(cfg, mesh: Mesh, cache_specs) -> Any:
+    """KV/conv/SSM caches: batch-major leaves shard like batches."""
+    del cfg
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, _batch_spec(tuple(s.shape), mesh)),
+        cache_specs,
+    )

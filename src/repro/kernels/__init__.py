@@ -1,3 +1,33 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernel layer: the paper's codec fused into the compute pass.
+
+Architecture (one PR-sized map; details in each module's docstring):
+
+  codec.py             register-level codec math (entangle_block,
+                       disentangle_rows/_block incl. the dualword path) —
+                       the ONE implementation shared by every kernel below
+  entangle.py          standalone entangle pass ([M, N] VPU sweep)
+  disentangle.py       standalone disentangle / fail-stop recovery pass
+  checksum.py          checksum-ABFT baseline stream
+  entangled_matmul.py  fused entangle -> int GEMM -> extract, one
+                       pallas_call; M streams fully resident per block
+  conv1d.py            unentangled depthwise causal conv1d
+  entangled_conv1d.py  fused entangle -> conv1d -> extract
+  autotune.py          block-size autotuner: per-(op, shape, backend) sweep
+                       with in-process + JSON-file winner cache
+  ops.py               the dispatch layer — padding, backend selection,
+                       `blocks` (None | dict | "auto") and `fuse_epilogue`
+                       dispatch; the only module callers import
+  ref.py               pure-jnp oracles (exact-equality targets for tests)
+
+Adding a new LSB kernel behind ops.py:
+
+  1. implement the schedule in ``<op>.py``, importing its codec math from
+     codec.py (entangle on load, optional disentangle at the flush — never
+     a separate HBM sweep);
+  2. add the jnp oracle to ref.py and exact-equality tests (including each
+     failed-stream index r and a dualword plan);
+  3. add a candidate table entry in autotune.candidates_for and a wrapper
+     in ops.py following the `blocks`/`fuse_epilogue` signature;
+  4. extend benchmarks/kernel_micro.py with its fused-vs-separate bytes
+     model so the overhead trajectory stays tracked in BENCH_*.json.
+"""

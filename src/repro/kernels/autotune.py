@@ -1,0 +1,251 @@
+"""Block-size autotuner for the Pallas kernel layer.
+
+Every kernel in this package is parameterized by block sizes (``bb/bn/bk``
+for the fused GEMM, ``bd/bt`` for conv1d, ``block_n`` for the elementwise
+codec passes). The right choice depends on shape, backend and whether the
+codec epilogue is fused; hard-coding 128-multiples leaves throughput on the
+table for the small/ragged shapes the serving path sees. This module sweeps
+a candidate set once per (op, shape-signature, backend, flags) key and
+caches the winner:
+
+  * in-process: a plain dict, hit on every later call in the process;
+  * on disk: a JSON file (``REPRO_AUTOTUNE_CACHE`` env var, default
+    ``~/.cache/repro/autotune.json``) so tuned blocks survive restarts and
+    can be shipped with a deployment.
+
+Cache file format — one flat JSON object::
+
+    { "<op>|<shape-sig>|<backend>|<flags>": {"bb": 128, "bn": 256, ...},
+      "_meta": {"version": 1} }
+
+Keys are produced by :func:`cache_key`; values are exactly the block-size
+kwargs the kernel wrapper passes through. Delete the file (or single keys)
+to force a re-sweep. ``ops.py`` consults this module whenever a wrapper is
+called with ``blocks="auto"``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import tempfile
+import time
+from typing import Any, Callable, Iterable, Optional
+
+import jax
+
+__all__ = [
+    "AutotuneCache",
+    "cache_key",
+    "candidates_for",
+    "get_cache",
+    "reset_cache",
+    "tune",
+]
+
+_VERSION = 1
+
+
+def _pow2_leq(n: int, cap: int) -> int:
+    """Largest power of two <= cap that is >= min(n, 8) — block floor 8."""
+    p = 8
+    while p * 2 <= min(n if n >= 8 else 8, cap):
+        p *= 2
+    return p
+
+
+def candidates_for(op: str, **dims: int) -> list[dict[str, int]]:
+    """Candidate block-size sets for ``op`` given problem dims.
+
+    Candidates never exceed the next power of two of the corresponding dim
+    (larger blocks only add padding) and always include the MXU/VPU-aligned
+    128 defaults when the problem is big enough to use them.
+    """
+    def sizes(n: int, lo: int = 8, hi: int = 256) -> list[int]:
+        top = _pow2_leq(2 * max(n, 1), hi)
+        out, p = [], lo
+        while p <= top:
+            out.append(p)
+            p *= 2
+        return out or [lo]
+
+    if op == "entangled_matmul":
+        B, N, K = dims["B"], dims["N"], dims["K"]
+        return [
+            {"bb": bb, "bn": bn, "bk": bk}
+            for bb in sizes(B, 16, 128)
+            for bn in sizes(N, 32, 256)
+            for bk in sizes(K, 32, 256)
+        ]
+    if op in ("entangled_conv1d", "conv1d"):
+        D, T = dims["D"], dims["T"]
+        return [
+            {"bd": bd, "bt": bt}
+            for bd in sizes(D, 16, 128)
+            for bt in sizes(T, 64, 512)
+        ]
+    if op in ("entangle", "disentangle", "checksum"):
+        N = dims["N"]
+        return [{"block_n": bn} for bn in sizes(N, 128, 4096)]
+    raise KeyError(f"no candidate table for op {op!r}")
+
+
+def cache_key(op: str, shape_sig: tuple, backend: str,
+              flags: tuple = ()) -> str:
+    sig = "x".join(str(s) for s in shape_sig)
+    fl = ",".join(str(f) for f in flags)
+    return f"{op}|{sig}|{backend}|{fl}"
+
+
+class AutotuneCache:
+    """Two-level (in-process dict + JSON file) winner cache with counters."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = pathlib.Path(path).expanduser() if path else None
+        self._mem: dict[str, dict[str, int]] = {}
+        self._loaded = False
+        self.hits = 0
+        self.sweeps = 0
+
+    def _load_file(self) -> None:
+        if self._loaded:
+            return
+        self._loaded = True
+        if self.path and self.path.exists():
+            try:
+                data = json.loads(self.path.read_text())
+            except (OSError, ValueError):
+                return
+            for k, v in data.items():
+                if k != "_meta" and k not in self._mem:
+                    self._mem[k] = {kk: int(vv) for kk, vv in v.items()}
+
+    def get(self, key: str) -> Optional[dict[str, int]]:
+        self._load_file()
+        hit = self._mem.get(key)
+        if hit is not None:
+            self.hits += 1
+        return hit
+
+    def put(self, key: str, blocks: dict[str, int]) -> None:
+        self._load_file()
+        self._mem[key] = dict(blocks)
+        if self.path:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            # re-read + merge before writing: concurrent processes sharing
+            # the file must not clobber winners persisted after our load
+            # (ours win on key conflicts — they are fresher)
+            on_disk: dict = {}
+            if self.path.exists():
+                try:
+                    on_disk = {
+                        k: v for k, v in
+                        json.loads(self.path.read_text()).items()
+                        if k != "_meta"
+                    }
+                except (OSError, ValueError):
+                    on_disk = {}
+            payload = {"_meta": {"version": _VERSION}, **on_disk, **self._mem}
+            # atomic replace: concurrent processes never see a torn file
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=".autotune-")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except OSError:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+
+_cache: Optional[AutotuneCache] = None
+
+
+def get_cache() -> AutotuneCache:
+    global _cache
+    if _cache is None:
+        path = os.environ.get(
+            "REPRO_AUTOTUNE_CACHE",
+            str(pathlib.Path.home() / ".cache" / "repro" / "autotune.json"),
+        )
+        _cache = AutotuneCache(path or None)
+    return _cache
+
+
+def reset_cache(path: Optional[str] = None) -> AutotuneCache:
+    """Swap in a fresh cache (tests; or to point at a shipped cache file)."""
+    global _cache
+    _cache = AutotuneCache(path)
+    return _cache
+
+
+def _time_once(thunk: Callable[[], Any]) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(thunk())
+    return time.perf_counter() - t0
+
+
+def tune(
+    op: str,
+    shape_sig: tuple,
+    backend: str,
+    bench: Callable[[dict[str, int]], Callable[[], Any]],
+    *,
+    candidates: Optional[Iterable[dict[str, int]]] = None,
+    flags: tuple = (),
+    repeats: int = 2,
+    cache: Optional[AutotuneCache] = None,
+) -> dict[str, int]:
+    """Return the winning block sizes for ``op`` on ``shape_sig``.
+
+    ``bench(blocks)`` must return a zero-arg thunk running the kernel with
+    those blocks on representative inputs. Sweeps (compile + best-of-N
+    timing per candidate) only on a cache miss; winners persist in-process
+    and in the JSON file.
+    """
+    cache = cache or get_cache()
+    key = cache_key(op, shape_sig, backend, flags)
+    cached = cache.get(key)
+    if cached is not None:
+        return cached
+
+    cands = (list(candidates) if candidates is not None
+             else candidates_for(op, **_sig_dims(op, shape_sig)))
+
+    cache.sweeps += 1
+    best_t, best, last_exc = float("inf"), None, None
+    for cand in cands:
+        try:
+            thunk = bench(cand)
+            jax.block_until_ready(thunk())  # warmup / compile
+            t = min(_time_once(thunk) for _ in range(repeats))
+        except Exception as e:  # invalid candidate for this shape/backend
+            last_exc = e
+            continue
+        if t < best_t:
+            best_t, best = t, cand
+    if best is None:
+        raise RuntimeError(
+            f"autotune: no candidate ran for {key} "
+            f"({len(cands)} tried)"
+        ) from last_exc
+    cache.put(key, best)
+    return best
+
+
+def _sig_dims(op: str, shape_sig: tuple) -> dict[str, int]:
+    """Map a shape signature to the named dims candidates_for expects."""
+    if op == "entangled_matmul":
+        M, B, K, N = shape_sig
+        return {"B": B, "N": N, "K": K}
+    if op in ("entangled_conv1d",):
+        M, B, D, T, kf = shape_sig
+        return {"D": D, "T": T}
+    if op == "conv1d":
+        B, D, T, kf = shape_sig
+        return {"D": D, "T": T}
+    if op in ("entangle", "disentangle", "checksum"):
+        return {"N": shape_sig[-1]}
+    raise KeyError(op)

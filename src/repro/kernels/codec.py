@@ -1,0 +1,89 @@
+"""Register-level codec math shared by every fused Pallas kernel.
+
+One implementation of the paper's codec, written over *register values*
+(jnp arrays already loaded from VMEM refs) so the same code runs
+
+  * inside the standalone entangle/disentangle kernels,
+  * as the load-prologue / flush-epilogue of the fused GEMM and conv1d
+    kernels (entangle-on-load, extract-at-flush),
+  * in the jnp oracles.
+
+``entangle_block`` is eq. (14/15): one shift-add per element against the
+cyclic predecessor row. ``disentangle_rows`` is eq. (16-19): the Horner
+telescoping sum (int32 single-word or dual-word per paper Remark 1), the
+sign-extended bit-field split of d_r / d_q, and the eq. (19) recovery
+chain. All ops are shifts/adds on VPU integer lanes — no multiplies, no
+HBM traffic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import wideint
+from repro.core.plan import EntanglePlan
+
+
+def entangle_block(c: jax.Array, l: int) -> jax.Array:
+    """eps_m = (c_{(m-1) mod M} << l) + c_m over leading axis of ``c``."""
+    return jnp.left_shift(jnp.roll(c, 1, axis=0), l) + c
+
+
+def disentangle_rows(
+    delta_rows: Sequence[jax.Array],
+    plan: EntanglePlan,
+    r: int = 0,
+) -> list[jax.Array]:
+    """Recover all M outputs from the M entangled rows, never reading row r.
+
+    ``delta_rows[m]`` is the entangled output of stream m (any common
+    shape). The failed/excluded index ``r`` is static. Returns the M
+    recovered outputs in original stream order.
+    """
+    M, l = plan.M, plan.l
+    assert len(delta_rows) == M, (len(delta_rows), M)
+    r = r % M
+    B = (M - 1) * l
+    sign = -1 if (M % 2) else 1  # (-1)^M
+    q = (r + M - 1) % M
+
+    deltas = [delta_rows[(r + 1 + m) % M] for m in range(M - 1)]
+
+    if plan.temp == "dualword":
+        t = wideint.widen(deltas[0])
+        for j, d in enumerate(deltas[1:], start=2):
+            t = wideint.shl(t, l)
+            t = (
+                wideint.sub(t, wideint.widen(d))
+                if (j % 2 == 0)
+                else wideint.add(t, wideint.widen(d))
+            )
+        t_lo = wideint.extract_low_signed(t, B)
+        d_q = (sign * t_lo).astype(jnp.int32)
+        d_r = wideint.shr_exact_to_i32(wideint.sub(t, wideint.widen(t_lo)), B)
+    else:  # single int32 word (valid when plan.temp_bits <= 32)
+        t = deltas[0]
+        for j, d in enumerate(deltas[1:], start=2):
+            t = jnp.left_shift(t, l)
+            t = (t - d) if (j % 2 == 0) else (t + d)
+        shift = 32 - B
+        t_lo = jnp.right_shift(jnp.left_shift(t, shift), shift)
+        d_q = (sign * t_lo).astype(jnp.int32)
+        d_r = jnp.right_shift(t - t_lo, B)
+
+    out: list[Optional[jax.Array]] = [None] * M
+    out[r], out[q] = d_r, d_q
+    for m in range(1, M - 1):  # eq. (19) chain
+        idx = (r + m) % M
+        out[idx] = delta_rows[idx] - jnp.left_shift(out[(r + m - 1) % M], l)
+    return out  # type: ignore[return-value]
+
+
+def disentangle_block(
+    delta: jax.Array, plan: EntanglePlan, r: int = 0
+) -> jax.Array:
+    """:func:`disentangle_rows` over the leading axis of a stacked block."""
+    rows = [delta[m] for m in range(plan.M)]
+    return jnp.stack(disentangle_rows(rows, plan, r), axis=0)

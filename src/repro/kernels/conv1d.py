@@ -10,7 +10,16 @@ convolution (paper Fig. 2, K up to 4500) goes through XLA's conv in
 Causality halo: each output tile of length ``bt`` needs ``K_f - 1`` trailing
 inputs of the previous tile. Pallas blocks are uniform, so the input is bound
 twice — current tile and predecessor tile — and the first tile's halo is
-masked to zero (causal left padding).
+masked to zero (causal left padding). DMA cost of the second binding: each
+grid step fetches a full extra (bd, bt) predecessor tile even though only
+its trailing K_f - 1 columns are read, i.e. ~2x input traffic — only the
+K_f-1 columns are *useful* (<1% at bt=512, K_f<=4), the rest is the price
+of uniform blocks. Accepted for now because conv input bytes are a small
+share of a model step's total traffic; the fix if it ever shows up on a
+profile is carrying the previous tile's tail across grid steps in a VMEM
+scratch instead of re-binding. (The GEMM kernel's former self/predecessor
+double-binding is gone entirely: entangled_matmul.py now holds all M
+streams in one block and rolls in registers.)
 
 Works on entangled streams unchanged: depthwise conv is sesquilinear in the
 stream, so ``conv(E c) = E conv(c)`` per the paper's Sec. III argument.
@@ -49,10 +58,11 @@ def conv1d_causal_pallas(
 ) -> jax.Array:
     """Depthwise causal conv: x [B, D, T] int32, w [D, K_f] int32 ->
     out[b,d,t] = sum_j w[d,j] * x[b,d,t-K_f+1+j]. D % bd == 0, T % bt == 0,
-    K_f <= bt (ops.py pads/unpads)."""
+    2 <= K_f <= bt (ops.py pads/unpads; K_f=1 is promoted there with a
+    zero leading tap — the halo slice ``-(kf-1):`` needs kf >= 2)."""
     B, D, T = x.shape
     D2, kf = w.shape
-    assert D == D2 and kf <= bt
+    assert D == D2 and 2 <= kf <= bt
     grid = (B, D // bd, T // bt)
     return pl.pallas_call(
         functools.partial(_conv1d_kernel, kf=kf),

@@ -1,10 +1,12 @@
-"""Pallas TPU kernel: disentanglement / fail-stop recovery (paper eq. 16-19).
+"""Pallas TPU kernel: standalone disentanglement / fail-stop recovery.
 
-Fuses the Horner-form telescoping sum, the dual-word (2w-bit as 2x32-bit,
-paper Remark 1) arithmetic, the bit-field extraction of d_r / d_q and the
-eq. (19) recovery chain into one VPU pass over VMEM tiles — the entire
-recovery is shifts/adds, exactly the paper's "additions and arithmetic
-shifts" claim, with no HBM round-trips between steps.
+The codec math (paper eq. 16-19: Horner telescoping, dual-word temporary
+per Remark 1, bit-field split, eq. 19 chain) lives in
+:mod:`repro.kernels.codec` and is shared with the fused GEMM/conv1d
+epilogues. This kernel is the *separate-pass* form of it — one VPU sweep
+over [M, block_n] VMEM tiles — kept for entangled data that arrives from
+outside a fused kernel (persisted entangled state, cross-host streams) and
+as the three-pass baseline the fused kernels are benchmarked against.
 
 The failed-stream index r is static (known at recovery dispatch time).
 """
@@ -16,46 +18,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core import wideint
 from repro.core.plan import EntanglePlan
+from repro.kernels.codec import disentangle_block
 
 
 def _disentangle_kernel(delta_ref, out_ref, *, plan: EntanglePlan, r: int):
-    M, l = plan.M, plan.l
-    B = (M - 1) * l
-    sign = -1 if (M % 2) else 1
-    q = (r + M - 1) % M
-    delta = delta_ref[...]  # [M, block_n] int32
-
-    deltas = [delta[(r + 1 + m) % M] for m in range(M - 1)]
-    if plan.temp == "dualword":
-        t = wideint.widen(deltas[0])
-        for j, d in enumerate(deltas[1:], start=2):
-            t = wideint.shl(t, l)
-            t = (
-                wideint.sub(t, wideint.widen(d))
-                if (j % 2 == 0)
-                else wideint.add(t, wideint.widen(d))
-            )
-        t_lo = wideint.extract_low_signed(t, B)
-        d_q = (sign * t_lo).astype(jnp.int32)
-        d_r = wideint.shr_exact_to_i32(wideint.sub(t, wideint.widen(t_lo)), B)
-    else:
-        t = deltas[0]
-        for j, d in enumerate(deltas[1:], start=2):
-            t = jnp.left_shift(t, l)
-            t = (t - d) if (j % 2 == 0) else (t + d)
-        shift = 32 - B
-        t_lo = jnp.right_shift(jnp.left_shift(t, shift), shift)
-        d_q = (sign * t_lo).astype(jnp.int32)
-        d_r = jnp.right_shift(t - t_lo, B)
-
-    out = [None] * M
-    out[r], out[q] = d_r, d_q
-    for m in range(1, M - 1):  # eq. (19)
-        idx = (r + m) % M
-        out[idx] = delta[idx] - jnp.left_shift(out[(r + m - 1) % M], l)
-    out_ref[...] = jnp.stack(out, axis=0)
+    out_ref[...] = disentangle_block(delta_ref[...], plan, r)
 
 
 @functools.partial(

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: entangled depthwise causal conv1d, codec fully fused.
+
+Convolution is the paper's experimental LSB op (Fig. 2): depthwise conv is
+sesquilinear per stream, so ``conv(E c) = E conv(c)``. This kernel carries
+that identity into the schedule — the M entangled streams share one weight
+read and one fused pass:
+
+  prologue  eps = (roll(x, 1) << l) + x      entangle-on-load (current tile
+                                             AND its halo), in registers
+  body      acc[m] = sum_j w[:, j] * win[m]  VPU taps, static unroll
+  epilogue  d = disentangle(acc)             optional extract-at-flush
+
+The M stream axis is fully resident per block (M is 3..8), so the cyclic
+predecessor is a register roll — the operand is bound once per tile role.
+
+Causality halo: each output tile of length ``bt`` needs ``K_f - 1``
+trailing inputs of the previous tile. Pallas blocks are uniform, so the
+input is bound a second time at index ``max(t-1, 0)`` for the halo, which
+fetches a full extra tile per grid step (~2x input traffic) to use only
+its trailing K_f - 1 columns. Accepted: conv input bytes are a small share
+of a step's total traffic; carrying the previous tile's tail across grid
+steps in VMEM scratch is the follow-up if a profile ever flags it (see
+conv1d.py for the same trade-off on the unentangled kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.plan import EntanglePlan
+from repro.kernels.codec import disentangle_block, entangle_block
+
+
+def _econv_kernel(
+    x_cur_ref, x_prev_ref, w_ref, out_ref, *,
+    plan: EntanglePlan, kf: int, fuse_epilogue: bool, r: int,
+):
+    t = pl.program_id(2)
+    M, l = plan.M, plan.l
+
+    eps_cur = entangle_block(x_cur_ref[:, 0], l)  # [M, bd, bt]
+    eps_halo = entangle_block(x_prev_ref[:, 0, :, -(kf - 1):], l)
+    eps_halo = jnp.where(t == 0, jnp.zeros_like(eps_halo), eps_halo)
+
+    window = jnp.concatenate([eps_halo, eps_cur], axis=-1)  # [M, bd, bt+kf-1]
+    bt = out_ref.shape[-1]
+    acc = jnp.zeros(out_ref.shape[:1] + out_ref.shape[2:], jnp.int32)
+    w = w_ref[...]
+    for j in range(kf):  # static unroll over taps
+        acc += w[None, :, j : j + 1] * window[:, :, j : j + bt]
+
+    if fuse_epilogue:
+        acc = disentangle_block(acc, plan, r)
+    out_ref[:, 0] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "fuse_epilogue", "failed", "bd", "bt",
+                     "interpret"),
+)
+def entangled_conv1d_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    plan: EntanglePlan,
+    fuse_epilogue: bool = False,
+    failed: int = 0,
+    bd: int = 128,
+    bt: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Entangled depthwise causal conv: x [M, B, D, T] int32, w [D, K_f].
+
+    Returns entangled conv outputs delta[m] = conv(E x)[m] when
+    ``fuse_epilogue=False``, or the recovered true outputs
+    d[m, b, d, t] = sum_j w[d, j] * x[m, b, d, t-K_f+1+j] when
+    ``fuse_epilogue=True`` (extraction never reads stream ``failed``).
+    D % bd == 0, T % bt == 0, 2 <= K_f <= bt (ops.py pads/unpads).
+    """
+    M, B, D, T = x.shape
+    D2, kf = w.shape
+    assert D == D2 and 2 <= kf <= bt, (D, D2, kf, bt)
+    assert M == plan.M, (M, plan.M)
+    grid = (B, D // bd, T // bt)
+    return pl.pallas_call(
+        functools.partial(
+            _econv_kernel, plan=plan, kf=kf,
+            fuse_epilogue=fuse_epilogue, r=failed % M,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, 1, bd, bt), lambda b, d, t: (0, b, d, t)),
+            # predecessor tile (halo); same block index at t=0, masked above
+            pl.BlockSpec(
+                (M, 1, bd, bt),
+                lambda b, d, t: (0, b, d, jnp.maximum(t - 1, 0)),
+            ),
+            pl.BlockSpec((bd, kf), lambda b, d, t: (d, 0)),
+        ],
+        out_specs=pl.BlockSpec((M, 1, bd, bt), lambda b, d, t: (0, b, d, t)),
+        out_shape=jax.ShapeDtypeStruct((M, B, D, T), jnp.int32),
+        interpret=interpret,
+    )(x, x, w)

@@ -1,16 +1,30 @@
-"""Pallas TPU kernel: integer GEMM with entanglement fused into the load.
+"""Pallas TPU kernel: integer GEMM with the FULL entanglement codec fused.
 
-The paper notes entanglement can be applied "as data within each input stream
-is being read" (stream-processor property). Here that becomes: the kernel
-reads the stream-m and stream-(m-1) activation tiles from VMEM, forms
-``eps_m = (c_{m-1} << l) + c_m`` in registers, and feeds the MXU directly —
-the entangled operand never round-trips to HBM, so protection costs one
-VPU shift-add per loaded tile on top of the unprotected GEMM.
+The paper's throughput claim (1.8-2.8% overhead, Fig. 2) rests on the codec
+never being a separate memory sweep: entanglement is applied "as data within
+each input stream is being read" and extraction as results are written. This
+kernel honors both halves in one ``pallas_call``:
 
-Tiling: grid (M, B/bb, N/bn, K/bk), K innermost with a VMEM int32
-accumulator; bb/bn/bk default to MXU-aligned 128 multiples. The same input
-array is bound twice with two index maps (self tile and cyclic-predecessor
-tile) — the TPU-idiomatic replacement for the paper's in-place AVX2 pass.
+  prologue  eps = (roll(c, 1) << l) + c      entangle-on-load, in registers
+  body      acc[m] += eps[m] @ g             MXU, int32 accumulate in VMEM
+  epilogue  d = disentangle(acc)             Horner telescoping + bit-field
+            (at the k == nk-1 flush)         split, incl. the dualword path
+
+so entangle -> GEMM -> extract moves ``M*B*K + K*N`` words in and ``M*B*N``
+out with zero intermediate HBM round-trips, vs the three-pass path's extra
+``2*M*B*K + 2*M*B*N`` codec traffic (see benchmarks/kernel_micro.py).
+
+Tiling: grid (B/bb, N/bn, K/bk), K innermost, with the small M stream axis
+FULLY resident per tile — block (M, bb, bk). This replaces the earlier
+double-binding of the same input (self tile + cyclic-predecessor tile, two
+DMAs of identical bytes): with all M streams in one block the predecessor
+row is a register roll, the operand is bound once, and the epilogue has
+every stream's accumulator in VMEM to disentangle against.
+
+``fuse_epilogue=False`` writes the raw entangled accumulators (the serving
+engine uses this when it must inject / inspect entangled outputs);
+``failed=r`` statically excludes stream r's accumulator from extraction —
+the fail-stop recovery path costs the same shifts/adds as the clean path.
 """
 from __future__ import annotations
 
@@ -21,55 +35,78 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.plan import EntanglePlan
+from repro.kernels.codec import disentangle_block, entangle_block
 
-def _emm_kernel(c_self_ref, c_prev_ref, g_ref, out_ref, acc_ref, *, l: int, nk: int):
-    k = pl.program_id(3)
+
+def _emm_kernel(
+    c_ref, g_ref, out_ref, acc_ref, *,
+    plan: EntanglePlan, nk: int, fuse_epilogue: bool, r: int,
+):
+    k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    eps = jnp.left_shift(c_prev_ref[0], l) + c_self_ref[0]  # [bb, bk]
-    acc_ref[...] += jnp.dot(
-        eps, g_ref[...], preferred_element_type=jnp.int32
+    eps = entangle_block(c_ref[...], plan.l)  # [M, bb, bk], registers
+    g = g_ref[...]
+    acc_ref[...] += jnp.stack(  # static unroll over streams; M is 3..8
+        [jnp.dot(eps[m], g, preferred_element_type=jnp.int32)
+         for m in range(plan.M)],
+        axis=0,
     )
 
     @pl.when(k == nk - 1)
     def _flush():
-        out_ref[0, ...] = acc_ref[...]
+        acc = acc_ref[...]
+        if fuse_epilogue:
+            out_ref[...] = disentangle_block(acc, plan, r)
+        else:
+            out_ref[...] = acc
 
 
 @functools.partial(
-    jax.jit, static_argnames=("l", "bb", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("plan", "fuse_epilogue", "failed", "bb", "bn", "bk",
+                     "interpret"),
 )
 def entangled_matmul_pallas(
     c: jax.Array,
     g: jax.Array,
     *,
-    l: int,
+    plan: EntanglePlan,
+    fuse_epilogue: bool = False,
+    failed: int = 0,
     bb: int = 128,
     bn: int = 128,
     bk: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """delta[m] = (E c)[m] @ g for c:[M, B, K] int32, g:[K, N] int32.
+    """Fused entangle[-GEMM-extract] for c:[M, B, K] int32, g:[K, N] int32.
 
+    Returns entangled products delta[m] = (E c)[m] @ g when
+    ``fuse_epilogue=False``, or the recovered true products d[m] = c[m] @ g
+    when ``fuse_epilogue=True`` (extraction never reads stream ``failed``).
     B, K, N must be multiples of bb, bk, bn (ops.py pads/unpads).
     """
     M, B, K = c.shape
     K2, N = g.shape
     assert K == K2, (K, K2)
-    grid = (M, B // bb, N // bn, K // bk)
+    assert M == plan.M, (M, plan.M)
+    grid = (B // bb, N // bn, K // bk)
     return pl.pallas_call(
-        functools.partial(_emm_kernel, l=l, nk=grid[3]),
+        functools.partial(
+            _emm_kernel, plan=plan, nk=grid[2],
+            fuse_epilogue=fuse_epilogue, r=failed % M,
+        ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bb, bk), lambda m, b, n, k: (m, b, k)),
-            pl.BlockSpec((1, bb, bk), lambda m, b, n, k, _M=M: ((m - 1) % _M, b, k)),
-            pl.BlockSpec((bk, bn), lambda m, b, n, k: (k, n)),
+            pl.BlockSpec((M, bb, bk), lambda b, n, k: (0, b, k)),
+            pl.BlockSpec((bk, bn), lambda b, n, k: (k, n)),
         ],
-        out_specs=pl.BlockSpec((1, bb, bn), lambda m, b, n, k: (m, b, n)),
+        out_specs=pl.BlockSpec((M, bb, bn), lambda b, n, k: (0, b, n)),
         out_shape=jax.ShapeDtypeStruct((M, B, N), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((M, bb, bn), jnp.int32)],
         interpret=interpret,
-    )(c, c, g)
+    )(c, g)

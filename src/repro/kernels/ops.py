@@ -1,20 +1,43 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Dispatch layer over the Pallas kernels.
 
-Handles: arbitrary trailing shapes (flattened to the sample axis), padding to
-block multiples, backend dispatch (compiled on TPU, interpret=True elsewhere
-— the task-mandated CPU validation mode), and plan-aware parameter plumbing.
+Every public wrapper here handles, uniformly:
+
+  * arbitrary trailing shapes (flattened to the sample axis) and padding to
+    block multiples (zero padding is exact for integer LSB ops);
+  * backend dispatch — compiled on TPU, ``interpret=True`` elsewhere (the
+    task-mandated CPU validation mode);
+  * block-size dispatch via the ``blocks`` argument:
+      - ``None``: shape-aware defaults (power-of-two, capped at the
+        MXU/VPU-aligned 128/512 tiles);
+      - a dict: explicit override, merged over the defaults;
+      - ``"auto"``: the :mod:`repro.kernels.autotune` subsystem — sweep
+        once per (op, shape, backend) key, then cache-hit;
+  * codec fusion via ``fuse_epilogue`` on the LSB-op wrappers: ``True``
+    returns extracted true outputs from ONE fused pallas_call (entangle ->
+    op -> extract, zero intermediate HBM round-trips); ``False`` returns
+    entangled outputs for callers that inject failures / persist entangled
+    state, to be recovered later with :func:`disentangle`.
+
+The per-kernel legacy block kwargs (``bb=/bn=/bk=``, ``bd=/bt=``,
+``block_n=``) remain accepted and act as defaults under ``blocks``.
 """
 from __future__ import annotations
+
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.plan import EntanglePlan
+from repro.kernels import autotune as at
 from repro.kernels.checksum import checksum_pallas
 from repro.kernels.conv1d import conv1d_causal_pallas
 from repro.kernels.disentangle import disentangle_pallas
 from repro.kernels.entangle import entangle_pallas
+from repro.kernels.entangled_conv1d import entangled_conv1d_pallas
 from repro.kernels.entangled_matmul import entangled_matmul_pallas
+
+Blocks = Union[None, str, dict]
 
 
 def _interpret_default(interpret):
@@ -33,71 +56,176 @@ def _pad_to(x: jax.Array, axis: int, mult: int):
     return jnp.pad(x, widths), n
 
 
+def _backend_tag(interpret: bool) -> str:
+    return "interpret" if interpret else jax.default_backend()
+
+
+def _resolve_blocks(op: str, defaults: dict, blocks: Blocks, shape_sig: tuple,
+                    interpret: bool, bench, flags: tuple = ()) -> dict:
+    """Merge/auto-tune the block sizes for one wrapper call."""
+    if blocks is None:
+        return defaults
+    if isinstance(blocks, dict):
+        return {**defaults, **blocks}
+    if blocks == "auto":
+        return at.tune(op, shape_sig, _backend_tag(interpret), bench,
+                       flags=flags)
+    raise ValueError(f"blocks must be None, a dict or 'auto', got {blocks!r}")
+
+
+# --------------------------------------------------------------- codec ------
+
+def _plan_flags(plan: EntanglePlan) -> tuple:
+    """Autotune key component for the codec parameters: the Horner depth
+    and temp mode change the epilogue cost, so winners must not be shared
+    across plans that merely agree on M and shapes."""
+    return (f"l{plan.l}", plan.temp)
+
+
+def _codec_pass(op: str, kernel_call, x: jax.Array, block_n: int,
+                blocks: Blocks, interpret, flags: tuple = ()):
+    """Shared flatten -> pad -> resolve/tune -> kernel path for the
+    elementwise [M, N] codec sweeps. ``kernel_call(padded, bn, interp)``
+    invokes the kernel; returns (out, valid_n, original_shape)."""
+    shape = x.shape
+    flat = x.reshape(shape[0], -1).astype(jnp.int32)
+    interp = _interpret_default(interpret)
+
+    def bench(bl):
+        padded, _ = _pad_to(flat, 1, bl["block_n"])
+        return lambda: kernel_call(padded, bl["block_n"], interp)
+
+    bl = _resolve_blocks(op, {"block_n": block_n}, blocks,
+                         (shape[0], flat.shape[1]), interp, bench,
+                         flags=flags)
+    padded, n = _pad_to(flat, 1, bl["block_n"])
+    return kernel_call(padded, bl["block_n"], interp), n, shape
+
+
 def entangle(c: jax.Array, plan: EntanglePlan, *, block_n: int = 1024,
-             interpret=None) -> jax.Array:
+             blocks: Blocks = None, interpret=None) -> jax.Array:
     """Entangle M streams of any trailing shape ([M, ...] int)."""
-    shape = c.shape
-    flat = c.reshape(shape[0], -1).astype(jnp.int32)
-    padded, n = _pad_to(flat, 1, block_n)
-    out = entangle_pallas(
-        padded, l=plan.l, block_n=block_n,
-        interpret=_interpret_default(interpret),
-    )
+    out, n, shape = _codec_pass(
+        "entangle",
+        lambda p, bn, it: entangle_pallas(p, l=plan.l, block_n=bn,
+                                          interpret=it),
+        c, block_n, blocks, interpret, flags=_plan_flags(plan))
     return out[:, :n].reshape(shape)
 
 
-def disentangle(delta: jax.Array, plan: EntanglePlan, *, failed: int | None = None,
-                block_n: int = 1024, interpret=None) -> jax.Array:
+def disentangle(delta: jax.Array, plan: EntanglePlan, *,
+                failed: Optional[int] = None, block_n: int = 1024,
+                blocks: Blocks = None, interpret=None) -> jax.Array:
     """Recover all M outputs from entangled outputs of any trailing shape."""
-    shape = delta.shape
-    flat = delta.reshape(shape[0], -1).astype(jnp.int32)
-    padded, n = _pad_to(flat, 1, block_n)
-    out = disentangle_pallas(
-        padded, plan=plan, r=0 if failed is None else failed,
-        block_n=block_n, interpret=_interpret_default(interpret),
-    )
+    r = 0 if failed is None else failed
+    out, n, shape = _codec_pass(
+        "disentangle",
+        lambda p, bn, it: disentangle_pallas(p, plan=plan, r=r, block_n=bn,
+                                             interpret=it),
+        delta, block_n, blocks, interpret, flags=_plan_flags(plan))
     return out[:, :n].reshape(shape)
 
+
+def checksum(c: jax.Array, *, block_n: int = 1024, blocks: Blocks = None,
+             interpret=None) -> jax.Array:
+    """Checksum stream r = sum_m c_m for [M, ...] inputs -> [...]."""
+    out, n, shape = _codec_pass(
+        "checksum",
+        lambda p, bn, it: checksum_pallas(p, block_n=bn, interpret=it),
+        c, block_n, blocks, interpret)
+    return out[0, :n].reshape(shape[1:])
+
+
+# ------------------------------------------------------------- LSB ops ------
 
 def entangled_matmul(c: jax.Array, g: jax.Array, plan: EntanglePlan, *,
+                     fuse_epilogue: bool = False,
+                     failed: Optional[int] = None,
                      bb: int = 128, bn: int = 128, bk: int = 128,
-                     interpret=None) -> jax.Array:
-    """Fused entangle+GEMM: c [M, B, K], g [K, N] -> entangled outputs
-    [M, B, N]. Pads B/K/N to block multiples (zero padding is exact for
-    integer GEMM)."""
+                     blocks: Blocks = None, interpret=None) -> jax.Array:
+    """Fused entangle+GEMM[+extract]: c [M, B, K], g [K, N] int.
+
+    ``fuse_epilogue=False`` -> entangled products [M, B, N] (recover later
+    via :func:`disentangle`). ``fuse_epilogue=True`` -> true products, the
+    codec never leaving the kernel; ``failed`` statically excludes one
+    stream's accumulator from the in-kernel extraction.
+    """
     M, B, K = c.shape
+    N = g.shape[1]
     c32 = c.astype(jnp.int32)
     g32 = g.astype(jnp.int32)
-    cp, _ = _pad_to(c32, 1, bb)
-    cp, _ = _pad_to(cp, 2, bk)
-    gp, _ = _pad_to(g32, 0, bk)
-    gp, _ = _pad_to(gp, 1, bn)
-    out = entangled_matmul_pallas(
-        cp, gp, l=plan.l, bb=bb, bn=bn, bk=bk,
-        interpret=_interpret_default(interpret),
-    )
-    return out[:, :B, : g.shape[1]]
+    interp = _interpret_default(interpret)
+    r = 0 if failed is None else failed
+
+    def call(bl, cc, gg):
+        cp, _ = _pad_to(cc, 1, bl["bb"])
+        cp, _ = _pad_to(cp, 2, bl["bk"])
+        gp, _ = _pad_to(gg, 0, bl["bk"])
+        gp, _ = _pad_to(gp, 1, bl["bn"])
+        return entangled_matmul_pallas(
+            cp, gp, plan=plan, fuse_epilogue=fuse_epilogue, failed=r,
+            bb=bl["bb"], bn=bl["bn"], bk=bl["bk"], interpret=interp)
+
+    bl = _resolve_blocks(
+        "entangled_matmul", {"bb": bb, "bn": bn, "bk": bk}, blocks,
+        (M, B, K, N), interp, lambda b: (lambda: call(b, c32, g32)),
+        flags=_plan_flags(plan) + (("fused",) if fuse_epilogue else ()))
+    out = call(bl, c32, g32)
+    return out[:, :B, :N]
+
+
+def entangled_conv1d(x: jax.Array, w: jax.Array, plan: EntanglePlan, *,
+                     fuse_epilogue: bool = False,
+                     failed: Optional[int] = None,
+                     bd: int = 128, bt: int = 512,
+                     blocks: Blocks = None, interpret=None) -> jax.Array:
+    """Fused entangle+depthwise-causal-conv[+extract]: x [M, B, D, T],
+    w [D, K_f] int. Same fusion semantics as :func:`entangled_matmul`."""
+    M, B, D, T = x.shape
+    kf = w.shape[1]
+    x32 = x.astype(jnp.int32)
+    w32 = w.astype(jnp.int32)
+    if kf == 1:  # kernel needs a halo; a zero leading tap is exact
+        w32 = jnp.pad(w32, ((0, 0), (1, 0)))
+        kf = 2
+    interp = _interpret_default(interpret)
+    r = 0 if failed is None else failed
+
+    def call(bl, xx, ww):
+        xp, _ = _pad_to(xx, 2, bl["bd"])
+        xp, _ = _pad_to(xp, 3, bl["bt"])
+        wp, _ = _pad_to(ww, 0, bl["bd"])
+        return entangled_conv1d_pallas(
+            xp, wp, plan=plan, fuse_epilogue=fuse_epilogue, failed=r,
+            bd=bl["bd"], bt=bl["bt"], interpret=interp)
+
+    bl = _resolve_blocks(
+        "entangled_conv1d", {"bd": bd, "bt": bt}, blocks,
+        (M, B, D, T, kf), interp, lambda b: (lambda: call(b, x32, w32)),
+        flags=_plan_flags(plan) + (("fused",) if fuse_epilogue else ()))
+    out = call(bl, x32, w32)
+    return out[:, :, :D, :T]
 
 
 def conv1d_causal(x: jax.Array, w: jax.Array, *, bd: int = 128, bt: int = 512,
-                  interpret=None) -> jax.Array:
-    """Depthwise causal conv1d: x [B, D, T], w [D, K_f]."""
+                  blocks: Blocks = None, interpret=None) -> jax.Array:
+    """Depthwise causal conv1d (unentangled): x [B, D, T], w [D, K_f]."""
     B, D, T = x.shape
-    xp, _ = _pad_to(x.astype(jnp.int32), 1, bd)
-    xp, _ = _pad_to(xp, 2, bt)
-    wp, _ = _pad_to(w.astype(jnp.int32), 0, bd)
-    out = conv1d_causal_pallas(
-        xp, wp, bd=bd, bt=bt, interpret=_interpret_default(interpret)
-    )
+    x32 = x.astype(jnp.int32)
+    w32 = w.astype(jnp.int32)
+    if w32.shape[1] == 1:  # kernel's halo slice needs K_f >= 2; a zero
+        w32 = jnp.pad(w32, ((0, 0), (1, 0)))  # leading tap is exact
+    interp = _interpret_default(interpret)
+
+    def call(bl, xx, ww):
+        xp, _ = _pad_to(xx, 1, bl["bd"])
+        xp, _ = _pad_to(xp, 2, bl["bt"])
+        wp, _ = _pad_to(ww, 0, bl["bd"])
+        return conv1d_causal_pallas(
+            xp, wp, bd=bl["bd"], bt=bl["bt"], interpret=interp)
+
+    bl = _resolve_blocks(
+        "conv1d", {"bd": bd, "bt": bt}, blocks,
+        (B, D, T, w.shape[1]), interp, lambda b: (lambda: call(b, x32, w32)))
+    out = call(bl, x32, w32)
     return out[:, :D, :T]
-
-
-def checksum(c: jax.Array, *, block_n: int = 1024, interpret=None) -> jax.Array:
-    """Checksum stream r = sum_m c_m for [M, ...] inputs -> [...]."""
-    shape = c.shape
-    flat = c.reshape(shape[0], -1).astype(jnp.int32)
-    padded, n = _pad_to(flat, 1, block_n)
-    out = checksum_pallas(
-        padded, block_n=block_n, interpret=_interpret_default(interpret)
-    )
-    return out[0, :n].reshape(shape[1:])

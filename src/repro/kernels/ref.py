@@ -32,6 +32,29 @@ def entangled_matmul_ref(c: jax.Array, g: jax.Array, l: int) -> jax.Array:
     ).astype(jnp.int32)
 
 
+def entangled_matmul_fused_ref(c: jax.Array, g: jax.Array, plan,
+                               r: int = 0) -> jax.Array:
+    """Oracle for the fused epilogue: disentangled entangled products."""
+    from repro.core.entangle import disentangle
+
+    return disentangle(entangled_matmul_ref(c, g, plan.l), plan, failed=r)
+
+
+def entangled_conv1d_ref(x: jax.Array, w: jax.Array, l: int) -> jax.Array:
+    """delta[m] = conv1d_causal(E x)[m] for x [M, B, D, T], w [D, K_f]."""
+    eps = entangle_ref(x, l)
+    M = x.shape[0]
+    return jnp.stack([conv1d_causal_ref(eps[m], w) for m in range(M)], 0)
+
+
+def entangled_conv1d_fused_ref(x: jax.Array, w: jax.Array, plan,
+                               r: int = 0) -> jax.Array:
+    """Oracle for the fused conv epilogue: true per-stream conv outputs."""
+    from repro.core.entangle import disentangle
+
+    return disentangle(entangled_conv1d_ref(x, w, plan.l), plan, failed=r)
+
+
 def conv1d_causal_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     """out[b,d,t] = sum_j w[d,j] * x[b,d,t-K_f+1+j] with zero left-pad."""
     B, D, T = x.shape

@@ -14,6 +14,8 @@ graph size as a 2-layer smoke model. Block registry:
 """
 from __future__ import annotations
 
+import math
+
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
@@ -237,4 +239,9 @@ def logits_head(p, x, cfg: ModelConfig):
     h = L.apply_norm(p["final_norm"], x, cfg)
     w = p["tok"].T if cfg.tie_embeddings else p["head"]
     logits = jnp.einsum("btd,dv->btv", h, w.astype(L.ACT_DTYPE))
+    # muP-style readout temperature: post-norm h has unit RMS per dim, so
+    # 1/sqrt(fan_in)-init weights give unit-variance logits and an initial
+    # CE of ln(V) + ~0.5; the extra 1/sqrt(d) starts training at the
+    # uniform-distribution loss instead (identical argmax ordering)
+    logits = logits * (1.0 / math.sqrt(cfg.d_model))
     return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")

@@ -20,6 +20,17 @@ class AdamWConfig:
     warmup_steps: int = 100
     total_steps: int = 10_000
     state_dtype: Optional[str] = None  # None=f32 | 'bfloat16'
+    # muP-style width transfer: ``lr`` is tuned at ``mup_base_width``; the
+    # effective rate scales by base/d_model so narrow smoke models and wide
+    # production models share one tuning (None disables scaling)
+    mup_base_width: Optional[int] = 2048
+
+
+def effective_lr_config(cfg: AdamWConfig, d_model: int) -> AdamWConfig:
+    """Width-transferred copy of ``cfg`` for a model of width ``d_model``."""
+    if not cfg.mup_base_width or d_model <= 0 or d_model == cfg.mup_base_width:
+        return cfg
+    return dataclasses.replace(cfg, lr=cfg.lr * cfg.mup_base_width / d_model)
 
 
 def schedule(cfg: AdamWConfig, step):

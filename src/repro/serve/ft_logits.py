@@ -4,10 +4,13 @@ hot path.
 The head GEMM (hidden [B, D] x head [D, V]) is sesquilinear, so it runs
 directly on entangled inputs: the batch is split into M request groups
 (streams), activations are fixed-point-quantized within the plan's eq. (13)
-budget (a K-deep integer dot needs K * |a|max * |w|max <= D_max), entangled
-across groups, multiplied by the int8 weight ONCE per group on M independent
-shards (the fused Pallas kernel entangles on load), and any single group's
-fail-stop is rolled forward from the other M-1 entangled outputs.
+budget (a K-deep integer dot needs K * |a|max * |w|max <= D_max), and run
+through the fused Pallas kernel — entangle-on-load, int GEMM, extraction in
+the flush epilogue, one pallas_call, no codec HBM sweeps. Any single
+group's fail-stop is rolled forward from the other M-1 entangled
+accumulators inside the same kernel (``fuse_epilogue=False`` keeps the
+separate disentangle pass for callers that must inject/persist entangled
+outputs).
 
 Returns dequantized float logits. Integer recovery is EXACT (tests assert
 bit-equality under injected failure); the quantization itself trades logits
@@ -42,6 +45,8 @@ def ft_logits(
     plan: Optional[EntanglePlan] = None,
     failed_group: Optional[int] = None,
     use_pallas: bool = True,
+    fuse_epilogue: bool = True,
+    blocks=None,
 ) -> jax.Array:
     B, D = h.shape
     V = head_q.shape[1]
@@ -55,16 +60,25 @@ def ft_logits(
     a_scale = a_budget / amax
     hq = jnp.round(h * a_scale).astype(jnp.int32).reshape(M, B // M, D)
 
-    if use_pallas:
-        delta = kops.entangled_matmul(hq, head_q, plan)
+    if use_pallas and fuse_epilogue:
+        # production hot path: entangle -> GEMM -> extract in ONE
+        # pallas_call; a fail-stopped group is rolled forward in-kernel by
+        # statically excluding its accumulator from the extraction (the
+        # algebra never reads it, so injecting garbage is equivalent)
+        rec = kops.entangled_matmul(
+            hq, head_q, plan, fuse_epilogue=True, failed=failed_group,
+            blocks=blocks)
     else:
-        from repro.core.entangle import entangle
+        if use_pallas:
+            delta = kops.entangled_matmul(hq, head_q, plan, blocks=blocks)
+        else:
+            from repro.core.entangle import entangle
 
-        eps = entangle(hq, plan)
-        delta = jnp.einsum("mbk,kv->mbv", eps, head_q).astype(jnp.int32)
+            eps = entangle(hq, plan)
+            delta = jnp.einsum("mbk,kv->mbv", eps, head_q).astype(jnp.int32)
 
-    if failed_group is not None:
-        delta = delta.at[failed_group].set(GARBAGE)
-    rec = disentangle(delta, plan, failed=failed_group)  # [M, B/M, V] int32
+        if failed_group is not None:
+            delta = delta.at[failed_group].set(GARBAGE)
+        rec = disentangle(delta, plan, failed=failed_group)  # [M, B/M, V]
     logits = rec.astype(jnp.float32) / (a_scale * w_scale)
     return logits.reshape(B, V)

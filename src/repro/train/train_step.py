@@ -26,6 +26,9 @@ from repro.optim.adamw import AdamWConfig
 class TrainConfig:
     adamw: AdamWConfig = AdamWConfig()
     grad_sync: str = "spmd"  # spmd | entangle | checksum
+    grad_codec: str = "xla"  # xla | pallas — entangle/disentangle impl used
+    #   by the FT sync ('pallas' routes through the fused kernel layer;
+    #   'xla' is the jnp codec, fastest off-TPU and under shard_map)
     ft_M: int = 4
     max_seq: int = 4096
     grad_accum: int = 1  # microbatches per step (activation-memory lever:
@@ -77,7 +80,7 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
 
             grads, diag = ft_grad_sync(
                 grads, axis_name=None, n_replicas=1, M=tcfg.ft_M,
-                failed_block=failed_block)
+                failed_block=failed_block, codec=tcfg.grad_codec)
         elif tcfg.grad_sync == "checksum":
             from repro.dist.collectives import checksum_grad_sync
 
@@ -88,7 +91,8 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree.leaves(grads)))
         params, opt = adamw_mod.update(
-            grads, state["opt"], state["params"], state["step"], tcfg.adamw)
+            grads, state["opt"], state["params"], state["step"],
+            adamw_mod.effective_lr_config(tcfg.adamw, cfg.d_model))
         new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
         metrics = {"loss": loss, "grad_norm": gnorm, **diag}
         return new_state, metrics

@@ -38,6 +38,20 @@ class LoopConfig:
 
 def train_loop(cfg: ModelConfig, tcfg: TrainConfig, dcfg: DataConfig,
                loop: LoopConfig, log: Callable[[str], None] = print):
+    # the LR schedule is defined over the run: a loop shorter than the
+    # configured warmup would otherwise train at ~0 lr for its whole life
+    # (smoke runs, short fine-tunes)
+    if tcfg.adamw.total_steps > loop.total_steps:
+        tcfg = dataclasses.replace(
+            tcfg,
+            adamw=dataclasses.replace(
+                tcfg.adamw,
+                total_steps=loop.total_steps,
+                warmup_steps=min(tcfg.adamw.warmup_steps,
+                                 max(loop.total_steps // 10, 1)),
+            ),
+        )
+
     data = SyntheticLM(dcfg)
     ckpt = CheckpointManager(loop.ckpt_dir)
     key = jax.random.PRNGKey(loop.seed)

@@ -1,0 +1,197 @@
+"""Fused-codec kernel layer: property tests against the int64 oracle, the
+autotuner cache contract, and the fused serving/training routes.
+
+The fused kernels (entangle -> op -> extract in one pallas_call) must be
+bit-identical to running the codec as separate passes, for every plan temp
+mode (int32 single-word AND the dualword path of core/wideint.py), for
+failure-free extraction and for every failed-stream index r — on ragged,
+non-block-multiple shapes (ops.py pads/unpads).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entangle import disentangle_oracle_np
+from repro.core.plan import make_plan
+from repro.kernels import autotune, ops, ref
+
+SET = settings(max_examples=8, deadline=None)
+
+# (M, w, temp): spans the int32 single-word temp and the dualword temp
+PLANS = [(3, 16, None), (4, 32, None), (3, 32, "dualword"), (8, 32, None)]
+
+
+def _entangled_delta_np(d: np.ndarray, l: int) -> np.ndarray:
+    return ((np.roll(d, 1, 0) << l) + d).astype(np.int32)
+
+
+@st.composite
+def matmul_case(draw):
+    M, w, temp = draw(st.sampled_from(PLANS))
+    plan = make_plan(M, w, temp=temp)
+    B = draw(st.integers(3, 33))
+    K = draw(st.integers(3, 40))
+    N = draw(st.integers(3, 65))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return plan, B, K, N, seed
+
+
+@given(matmul_case())
+@SET
+def test_fused_matmul_matches_oracle_all_failures(case):
+    plan, B, K, N, seed = case
+    rng = np.random.default_rng(seed)
+    lim = max(int(np.sqrt(plan.max_output_magnitude / K)) // 2, 1)
+    lim = min(lim, 15)
+    c = jnp.asarray(rng.integers(-lim, lim + 1, size=(plan.M, B, K)).astype(np.int32))
+    g = jnp.asarray(rng.integers(-lim, lim + 1, size=(K, N)).astype(np.int32))
+
+    delta = ops.entangled_matmul(c, g, plan, bb=16, bn=32, bk=32)
+    np.testing.assert_array_equal(
+        np.asarray(delta), np.asarray(ref.entangled_matmul_ref(c, g, plan.l)))
+
+    true = np.einsum("mbk,kn->mbn", np.asarray(c, np.int64),
+                     np.asarray(g, np.int64))
+    for r in [None] + list(range(plan.M)):
+        fused = ops.entangled_matmul(
+            c, g, plan, fuse_epilogue=True, failed=r, bb=16, bn=32, bk=32)
+        # fused epilogue == the numpy int64 oracle on the entangled product
+        oracle = disentangle_oracle_np(np.asarray(delta), plan,
+                                       0 if r is None else r)
+        np.testing.assert_array_equal(np.asarray(fused), oracle)
+        np.testing.assert_array_equal(np.asarray(fused), true)
+
+
+@st.composite
+def conv_case(draw):
+    M, w, temp = draw(st.sampled_from(PLANS))
+    plan = make_plan(M, w, temp=temp)
+    B = draw(st.integers(1, 3))
+    D = draw(st.integers(3, 40))
+    T = draw(st.integers(5, 70))
+    kf = draw(st.integers(1, 4))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return plan, B, D, T, kf, seed
+
+
+@given(conv_case())
+@SET
+def test_fused_conv1d_matches_oracle_all_failures(case):
+    plan, B, D, T, kf, seed = case
+    rng = np.random.default_rng(seed)
+    lim = max(int(np.sqrt(plan.max_output_magnitude / kf)) // 2, 1)
+    lim = min(lim, 15)
+    x = jnp.asarray(
+        rng.integers(-lim, lim + 1, size=(plan.M, B, D, T)).astype(np.int32))
+    w = jnp.asarray(rng.integers(-lim, lim + 1, size=(D, kf)).astype(np.int32))
+
+    delta = ops.entangled_conv1d(x, w, plan, bd=16, bt=32)
+    np.testing.assert_array_equal(
+        np.asarray(delta), np.asarray(ref.entangled_conv1d_ref(x, w, plan.l)))
+
+    for r in [None] + list(range(plan.M)):
+        fused = ops.entangled_conv1d(
+            x, w, plan, fuse_epilogue=True, failed=r, bd=16, bt=32)
+        flat = np.asarray(delta).reshape(plan.M, -1)
+        oracle = disentangle_oracle_np(flat, plan, 0 if r is None else r)
+        np.testing.assert_array_equal(
+            np.asarray(fused).reshape(plan.M, -1), oracle)
+
+
+def test_fused_equals_separate_three_pass():
+    """One fused pallas_call == entangle -> GEMM -> disentangle passes."""
+    plan = make_plan(4, 32)
+    rng = np.random.default_rng(7)
+    c = jnp.asarray(rng.integers(-15, 16, size=(4, 24, 48)).astype(np.int32))
+    g = jnp.asarray(rng.integers(-15, 16, size=(48, 40)).astype(np.int32))
+    fused = ops.entangled_matmul(c, g, plan, fuse_epilogue=True,
+                                 bb=16, bn=32, bk=16)
+    delta = ops.entangled_matmul(c, g, plan, bb=16, bn=32, bk=16)
+    separate = ops.disentangle(delta, plan)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(separate))
+
+
+# ---------------------------------------------------------------- autotune --
+
+def test_autotune_cache_hit_and_persistence(tmp_path):
+    path = tmp_path / "autotune.json"
+    cache = autotune.reset_cache(str(path))
+    try:
+        rng = np.random.default_rng(3)
+        plan = make_plan(4, 32)
+        c = jnp.asarray(rng.integers(-15, 16, size=(4, 16, 32)).astype(np.int32))
+        g = jnp.asarray(rng.integers(-15, 16, size=(32, 16)).astype(np.int32))
+
+        out1 = ops.entangled_matmul(c, g, plan, fuse_epilogue=True,
+                                    blocks="auto")
+        assert cache.sweeps == 1 and cache.hits == 0
+        out2 = ops.entangled_matmul(c, g, plan, fuse_epilogue=True,
+                                    blocks="auto")
+        assert cache.sweeps == 1 and cache.hits == 1  # in-process hit
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        # tuned blocks don't change numerics vs the oracle
+        true = np.einsum("mbk,kn->mbn", np.asarray(c, np.int64),
+                         np.asarray(g, np.int64))
+        np.testing.assert_array_equal(np.asarray(out1), true)
+
+        # a fresh process (fresh in-proc dict) hits the JSON file instead
+        cache2 = autotune.reset_cache(str(path))
+        out3 = ops.entangled_matmul(c, g, plan, fuse_epilogue=True,
+                                    blocks="auto")
+        assert cache2.sweeps == 0 and cache2.hits == 1
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out3))
+
+        # a different shape is a different key -> new sweep
+        c2 = jnp.asarray(rng.integers(-15, 16, size=(4, 16, 64)).astype(np.int32))
+        g2 = jnp.asarray(rng.integers(-15, 16, size=(64, 16)).astype(np.int32))
+        ops.entangled_matmul(c2, g2, plan, fuse_epilogue=True, blocks="auto")
+        assert cache2.sweeps == 1
+        assert path.exists() and "entangled_matmul" in path.read_text()
+    finally:
+        autotune.reset_cache(None)  # don't leak the tmp cache to other tests
+
+
+def test_explicit_blocks_dict_overrides_defaults():
+    plan = make_plan(4, 32)
+    rng = np.random.default_rng(5)
+    c = jnp.asarray(rng.integers(-15, 16, size=(4, 8, 16)).astype(np.int32))
+    g = jnp.asarray(rng.integers(-15, 16, size=(16, 8)).astype(np.int32))
+    a = ops.entangled_matmul(c, g, plan, fuse_epilogue=True,
+                             blocks={"bb": 8, "bn": 8, "bk": 8})
+    b = ops.entangled_matmul(c, g, plan, fuse_epilogue=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        ops.entangled_matmul(c, g, plan, blocks="nope")
+
+
+# ------------------------------------------------------- fused route users --
+
+def test_ft_logits_fused_equals_separate_pass():
+    from repro.serve.ft_logits import ft_logits, quantize_head
+
+    rng = np.random.default_rng(11)
+    h = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    head = jnp.asarray(rng.normal(size=(32, 48)).astype(np.float32))
+    hq, ws = quantize_head(head)
+    base = ft_logits(h, hq, ws, M=4, fuse_epilogue=False)
+    for fg in [None, 0, 2]:
+        fused = ft_logits(h, hq, ws, M=4, failed_group=fg, fuse_epilogue=True)
+        sep = ft_logits(h, hq, ws, M=4, failed_group=fg, fuse_epilogue=False)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(sep))
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(base))
+
+
+def test_ft_grad_sync_pallas_codec_matches_xla():
+    from repro.dist.collectives import ft_grad_sync
+
+    rng = np.random.default_rng(13)
+    g = {"a": jnp.asarray(rng.normal(size=(700,)).astype(np.float32)),
+         "b": jnp.asarray(rng.normal(size=(13, 9)).astype(np.float32))}
+    for fb in [None, 1, 3]:
+        x, dx = ft_grad_sync(g, axis_name=None, n_replicas=1, M=4,
+                             failed_block=fb, codec="xla")
+        p, dp = ft_grad_sync(g, axis_name=None, n_replicas=1, M=4,
+                             failed_block=fb, codec="pallas")
+        for k in g:
+            np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(p[k]))
