@@ -5,6 +5,8 @@
   fig2_conv_throughput paper Fig. 2 (conv throughput, NE vs checksum)
   gemm_overhead        Sec. IV GEMM cost, measured (beyond-paper)
   kernel_micro         codec bandwidth + fused-vs-separate ledger
+  serve_throughput     batched vs per-slot engine tok/s + entangled-head
+                       overhead (writes BENCH_serve.json)
   roofline_report      dry-run three-term roofline summary (if artifacts)
 
 Prints ``name,us_per_call,derived`` CSV and writes every record to
@@ -42,7 +44,7 @@ def main() -> None:
         if args.only:
             return name in args.only.split(",")
         if args.smoke:
-            return name in ("table1", "complexity", "gemm", "micro")
+            return name in ("table1", "complexity", "gemm", "micro", "serve")
         return True
 
     if want("table1"):
@@ -71,6 +73,12 @@ def main() -> None:
         )
         ok &= kernel_micro.run(emit, n=1 << (18 if quick else 20),
                                fusion_sizes=fusion_sizes)
+    if want("serve"):
+        from benchmarks import serve_throughput
+
+        # not shrunk under --quick/--smoke: waves shorter than ~16x8 tokens
+        # are dispatch-noise-dominated and make the 2x gate flaky
+        ok &= serve_throughput.run(emit)
     if want("roofline"):
         from benchmarks import roofline_report
 

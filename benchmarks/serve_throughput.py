@@ -1,0 +1,107 @@
+"""Serving throughput: batched continuous-batching engine vs the per-slot
+baseline, with the entangled-head overhead — writes ``BENCH_serve.json``.
+
+Measures steady-state tokens/s (second wave on a warm engine, so jit
+compilation is amortized like a long-running server) for:
+
+  * ``serve_per_slot``    — PerSlotEngine, one batch-1 decode per slot/step
+  * ``serve_batched``     — ServeEngine, ONE jitted decode per step
+  * ``serve_batched_ft``  — ServeEngine with the fused entangled int8 head
+                            GEMM on every decode step (ft_mode='entangle')
+
+Derived records: ``serve_speedup`` (batched vs per-slot, the >= 2x
+acceptance gate) and ``serve_ft_overhead`` (entangle vs plain batched, %).
+The CPU numbers run the Pallas head in interpret mode — the FT overhead %
+here is an upper bound; the paper's 1.8-2.8% band is the compiled-TPU
+target tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve import PerSlotEngine, Request, ServeConfig, ServeEngine
+
+
+def _wave(eng, prompts, max_new: int) -> tuple[float, int, int]:
+    """Run one request wave to completion; returns (seconds, tokens,
+    decode_calls) for THIS wave only."""
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=p.copy(), max_new=max_new))
+    calls0 = eng.decode_calls
+    t0 = time.perf_counter()
+    done = eng.run_to_completion(max_steps=100_000)
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    eng.done = []
+    return dt, toks, eng.decode_calls - calls0
+
+
+def run(emit, *, max_batch: int = 8, n_requests: int = 16,
+        max_new: int = 16, ft_M: int = 4, repeats: int = 3) -> bool:
+    cfg = get_smoke_config("llama3.2-1b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg, max_seq=64)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+               for _ in range(n_requests)]
+
+    variants = {
+        "serve_per_slot": PerSlotEngine(
+            cfg, ServeConfig(max_batch=max_batch, max_seq=64), params),
+        "serve_batched": ServeEngine(
+            cfg, ServeConfig(max_batch=max_batch, max_seq=64), params),
+        "serve_batched_ft": ServeEngine(
+            cfg, ServeConfig(max_batch=max_batch, max_seq=64,
+                             ft_mode="entangle", ft_M=ft_M), params),
+    }
+
+    records = []
+    tps = {}
+    for name, eng in variants.items():
+        _wave(eng, prompts, max_new)  # warm: compile every program
+        best_dt, toks, calls = min(
+            (_wave(eng, prompts, max_new) for _ in range(repeats)),
+            key=lambda r: r[0])
+        tps[name] = toks / best_dt
+        emit(name, best_dt / max(toks, 1) * 1e6, f"{tps[name]:.1f} tok/s")
+        records.append({"name": name, "tokens_per_s": round(tps[name], 1),
+                        "seconds": round(best_dt, 4), "tokens": toks,
+                        "decode_calls": calls})
+
+    speedup = tps["serve_batched"] / tps["serve_per_slot"]
+    ft_overhead = (tps["serve_batched"] / tps["serve_batched_ft"] - 1) * 100
+    # a small/negative delta is run-to-run noise, not a real negative cost —
+    # clamp so the artifact never claims an impossible "upper bound"
+    below_noise = ft_overhead < 2.0
+    ft_overhead = max(ft_overhead, 0.0)
+    ok = speedup >= 2.0
+    emit("serve_speedup", 0.0,
+         f"batched/per-slot {speedup:.2f}x (gate >= 2x: "
+         f"{'PASS' if ok else 'FAIL'})")
+    emit("serve_ft_overhead", 0.0,
+         f"entangled head +{ft_overhead:.1f}%"
+         f"{' (below measurement noise)' if below_noise else ''} "
+         f"(interpret CPU upper bound)")
+    records.append({"name": "serve_speedup", "value": round(speedup, 2),
+                    "gate": ">= 2.0", "ok": ok})
+    records.append({"name": "serve_ft_overhead_pct",
+                    "value": round(ft_overhead, 1),
+                    "below_noise": below_noise,
+                    "note": "interpret CPU upper bound; TPU target is the "
+                            "paper's 1.8-2.8% band"})
+
+    path = pathlib.Path.cwd() / "BENCH_serve.json"
+    path.write_text(json.dumps({
+        "meta": {"backend": jax.default_backend(),
+                 "max_batch": max_batch, "n_requests": n_requests,
+                 "max_new": max_new, "ft_M": ft_M, "ok": ok},
+        "records": records,
+    }, indent=1))
+    return ok

@@ -1,5 +1,6 @@
-"""Serving example: batched requests through the slot engine, with the
-entangled int8 logits projection protecting M=4 request groups, plus a
+"""Serving example: batched continuous-batching engine with the entangled
+int8 logits projection protecting M=4 request groups ON the decode hot path
+(one fused GEMM per engine step, slot -> group = slot % M), plus a
 deadline-straggler drill using the host-side DeadlineExecutor.
 
     PYTHONPATH=src python examples/serve_lm.py
@@ -12,11 +13,24 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import get_model
-from repro.serve.engine import Request, ServeConfig, ServeEngine
-from repro.serve.ft_logits import ft_logits, quantize_head
+from repro.serve import (PerSlotEngine, Request, ServeConfig, ServeEngine,
+                         ft_logits, quantize_head)
 from repro.train.straggler import DeadlineExecutor
 
 rng = np.random.default_rng(0)
+
+
+PROMPTS = [rng.integers(0, 256, 8).astype(np.int32) for _ in range(8)]
+
+
+def _serve_wave(eng, failed_group=None):
+    for r, p in enumerate(PROMPTS):
+        eng.submit(Request(rid=r, prompt=p.copy(), max_new=8))
+    if failed_group is None:
+        done = eng.run_to_completion()
+    else:
+        done = eng.run_to_completion(failed_group=failed_group)
+    return {r.rid: np.asarray(r.out) for r in done}
 
 
 def main():
@@ -24,32 +38,46 @@ def main():
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(0), cfg, max_seq=128)
 
-    # --- 1) batched request serving ----------------------------------------
-    eng = ServeEngine(cfg, ServeConfig(max_batch=4, max_seq=128), params)
-    for r in range(8):
-        eng.submit(Request(rid=r,
-                           prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
-                           max_new=8))
+    # --- 1) batched vs per-slot serving ------------------------------------
+    scfg = ServeConfig(max_batch=4, max_seq=128)
     t0 = time.monotonic()
-    done = eng.run_to_completion()
-    print(f"[serve_lm] {len(done)} requests served in "
-          f"{time.monotonic()-t0:.1f}s; sample output: {list(done[0].out[:6])}")
+    ref = _serve_wave(PerSlotEngine(cfg, scfg, params))
+    t_ref = time.monotonic() - t0
+    eng = ServeEngine(cfg, scfg, params)
+    t0 = time.monotonic()
+    out = _serve_wave(eng)
+    t_bat = time.monotonic() - t0
+    assert all(np.array_equal(ref[r], out[r]) for r in ref)
+    print(f"[serve_lm] 8 requests: per-slot {t_ref:.2f}s vs batched "
+          f"{t_bat:.2f}s ({eng.decode_calls} decode calls); outputs "
+          f"bit-identical; sample: {list(out[0][:6])}")
 
-    # --- 2) entangled int8 logits across M=4 request groups ----------------
+    # --- 2) entangled head on the hot path: fail-stop roll-forward ---------
+    ft_cfg = ServeConfig(max_batch=4, max_seq=128, ft_mode="entangle", ft_M=4)
+    healthy = _serve_wave(ServeEngine(cfg, ft_cfg, params))
+    for fg in range(4):
+        injected = _serve_wave(ServeEngine(cfg, ft_cfg, params),
+                               failed_group=fg)
+        assert all(np.array_equal(healthy[r], injected[r]) for r in healthy)
+    print("[serve_lm] entangled int8 head on every decode step: tokens "
+          "bit-identical under a fail-stop in any of the 4 request groups")
+
+    # --- 3) the standalone fused projection (library form) -----------------
     B, D = 8, cfg.d_model
     h = jnp.asarray(rng.normal(size=(B, D)).astype(np.float32))
     head = jnp.asarray(rng.normal(size=(D, cfg.vocab_size)).astype(np.float32) * 0.02)
     hq, ws = quantize_head(head)
-    healthy = ft_logits(h, hq, ws, M=4)
+    base = ft_logits(h, hq, ws, M=4)
     for fg in range(4):
-        out = ft_logits(h, hq, ws, M=4, failed_group=fg)
-        assert np.array_equal(np.asarray(out), np.asarray(healthy))
-    agree = float(jnp.mean((jnp.argmax(healthy, -1) ==
+        assert np.array_equal(np.asarray(ft_logits(h, hq, ws, M=4,
+                                                   failed_group=fg)),
+                              np.asarray(base))
+    agree = float(jnp.mean((jnp.argmax(base, -1) ==
                             jnp.argmax(h @ head, -1)).astype(jnp.float32)))
-    print(f"[serve_lm] entangled int8 logits: bit-identical under any single "
-          f"group fail-stop; argmax agreement with f32 head: {agree:.2f}")
+    print(f"[serve_lm] standalone ft_logits: exact under any single-group "
+          f"fail-stop; argmax agreement with f32 head: {agree:.2f}")
 
-    # --- 3) straggler-as-fail-stop drill ------------------------------------
+    # --- 4) straggler-as-fail-stop drill ------------------------------------
     def group_work(delay):
         def fn():
             time.sleep(delay)
@@ -61,8 +89,8 @@ def main():
                       group_work(5.0), group_work(0.015)])  # group 2 hangs
     failed = DeadlineExecutor.failed_index(results)
     print(f"[serve_lm] deadline drill: group {failed} missed the deadline -> "
-          f"rolled forward via disentanglement (see ft_logits above); "
-          f"no request waited for the straggler")
+          f"rolled forward via the entangled head (as in 2); no request "
+          f"waited for the straggler")
     assert failed == 2
 
 

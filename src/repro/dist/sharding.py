@@ -24,6 +24,8 @@ import math
 import threading
 from typing import Optional, Sequence
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -104,6 +106,23 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     assert len(logical) == x.ndim, (logical, x.shape)
     spec = logical_to_spec(logical, mesh, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def serve_mesh(min_devices: int = 2) -> Optional[Mesh]:
+    """Mesh for the batched serving engine: all local devices on one
+    ``data`` axis.
+
+    Returns None on a single device (the engine runs unsharded — the common
+    CPU/test case). With devices > 1 the engine traces its decode step and
+    head GEMM under ``axis_rules(serve_mesh())``, so every ``batch``-tagged
+    activation — including the slot batch feeding the entangled head GEMM —
+    shards across devices; the entanglement groups stay device-local because
+    the group axis is folded out of the batch before the kernel call.
+    """
+    n = jax.device_count()
+    if n < min_devices:
+        return None
+    return Mesh(np.asarray(jax.devices()), ("data",))
 
 
 def axis_extent(name: str) -> int:

@@ -40,6 +40,7 @@ __all__ = [
     "candidates_for",
     "get_cache",
     "reset_cache",
+    "stats",
     "tune",
 ]
 
@@ -179,6 +180,15 @@ def reset_cache(path: Optional[str] = None) -> AutotuneCache:
     global _cache
     _cache = AutotuneCache(path)
     return _cache
+
+
+def stats() -> dict:
+    """Cache counters for startup-warmup reporting (launch/serve --smoke):
+    sweeps = shapes tuned this process, hits = cache hits (in-process or
+    loaded from the JSON file), keys = distinct winners known."""
+    c = get_cache()
+    c._load_file()
+    return {"hits": c.hits, "sweeps": c.sweeps, "keys": len(c._mem)}
 
 
 def _time_once(thunk: Callable[[], Any]) -> float:

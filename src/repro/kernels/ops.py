@@ -169,9 +169,37 @@ def entangled_matmul(c: jax.Array, g: jax.Array, plan: EntanglePlan, *,
     bl = _resolve_blocks(
         "entangled_matmul", {"bb": bb, "bn": bn, "bk": bk}, blocks,
         (M, B, K, N), interp, lambda b: (lambda: call(b, c32, g32)),
-        flags=_plan_flags(plan) + (("fused",) if fuse_epilogue else ()))
+        flags=_matmul_flags(plan, fuse_epilogue))
     out = call(bl, c32, g32)
     return out[:, :B, :N]
+
+
+def _matmul_flags(plan: EntanglePlan, fuse_epilogue: bool) -> tuple:
+    """Autotune flags for the fused GEMM — single source of truth for the
+    wrapper's tune call and the startup warm's cache lookup."""
+    return _plan_flags(plan) + (("fused",) if fuse_epilogue else ())
+
+
+def warm_entangled_matmul(M: int, B: int, K: int, N: int, plan: EntanglePlan,
+                          *, fuse_epilogue: bool = True,
+                          interpret=None) -> dict:
+    """Eagerly autotune the fused GEMM for one (M, B, K, N) serving shape.
+
+    The serving engine calls this at startup for every shape in its census:
+    the sweep runs HERE, eagerly on real buffers, so that ``blocks="auto"``
+    inside the engine's jitted decode step is a pure in-process cache hit
+    (a sweep during tracing would time tracers, not kernels). ``failed`` is
+    deliberately not part of the autotune key, so one warm covers healthy
+    and every fail-stop-injected variant. Returns the winning block sizes.
+    """
+    c = jnp.zeros((M, B, K), jnp.int32)
+    g = jnp.zeros((K, N), jnp.int32)
+    entangled_matmul(c, g, plan, fuse_epilogue=fuse_epilogue, blocks="auto",
+                     interpret=interpret)
+    interp = _interpret_default(interpret)
+    key = at.cache_key("entangled_matmul", (M, B, K, N),
+                       _backend_tag(interp), _matmul_flags(plan, fuse_epilogue))
+    return at.get_cache().get(key) or {}
 
 
 def entangled_conv1d(x: jax.Array, w: jax.Array, plan: EntanglePlan, *,

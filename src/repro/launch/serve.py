@@ -1,8 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> --smoke``
 
-Boots the slot engine with random weights (or a checkpoint directory) and
-runs a synthetic request wave; the same engine scales to the dry-run meshes
-on real hardware.
+Boots the batched continuous-batching engine with random weights (or a
+checkpoint directory) and runs a synthetic request wave. Fault tolerance is
+first-class: ``--ft-mode entangle`` turns on the fused entangled int8 head
+GEMM on every decode step (slot -> group = slot % ft_M), ``--failed-group r``
+injects a fail-stop into group r's compute on every step, and ``--smoke``
+prints a recovery summary (healthy vs injected outputs compared
+token-by-token) plus the engine's prefill/decode shape census and the
+autotune warmup counters.
 """
 import argparse
 
@@ -10,9 +15,22 @@ import numpy as np
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.kernels import autotune
 from repro.models import get_model
 from repro.serve.engine import Request, ServeConfig, ServeEngine
 from repro.train.checkpoint import CheckpointManager
+
+
+def _wave(eng: ServeEngine, n_requests: int, vocab: int, max_new: int,
+          failed_group):
+    rng = np.random.default_rng(0)
+    for r in range(n_requests):
+        eng.submit(Request(
+            rid=r,
+            prompt=rng.integers(0, vocab, size=8).astype(np.int32),
+            max_new=max_new))
+    done = eng.run_to_completion(max_steps=10_000, failed_group=failed_group)
+    return {r.rid: np.asarray(r.out) for r in done}
 
 
 def main():
@@ -24,6 +42,18 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ft-mode", default="none", choices=["none", "entangle"],
+                    help="entangle: fused entangled int8 head GEMM on every "
+                         "decode step")
+    ap.add_argument("--ft-M", type=int, default=4,
+                    help="entangled request groups (max-batch %% ft-M == 0)")
+    ap.add_argument("--failed-group", type=int, default=-1,
+                    help=">= 0: inject a fail-stop into this group's head "
+                         "GEMM on every decode step (rolled forward "
+                         "in-kernel)")
+    ap.add_argument("--blocks", default="",
+                    help="head-GEMM block sizes: '' (defaults) or 'auto' "
+                         "(autotune warmup at startup)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -36,17 +66,46 @@ def main():
         params = restored["params"]
         print(f"[launch.serve] restored params from step {step}")
 
-    eng = ServeEngine(cfg, ServeConfig(max_batch=args.max_batch,
-                                       max_seq=args.max_seq), params)
-    rng = np.random.default_rng(0)
-    for r in range(args.requests):
-        eng.submit(Request(
-            rid=r,
-            prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
-            max_new=args.max_new))
-    done = eng.run_to_completion()
-    print(f"[launch.serve] {len(done)}/{args.requests} requests completed; "
-          f"first output: {list(done[0].out[:8])}")
+    scfg = ServeConfig(
+        max_batch=args.max_batch, max_seq=args.max_seq,
+        ft_mode=args.ft_mode, ft_M=args.ft_M,
+        blocks=(args.blocks or None))
+    failed = args.failed_group if args.failed_group >= 0 else None
+    if failed is not None and args.ft_mode != "entangle":
+        ap.error("--failed-group requires --ft-mode entangle")
+    if failed is not None and failed >= args.ft_M:
+        ap.error(f"--failed-group must be < --ft-M ({args.ft_M})")
+
+    eng = ServeEngine(cfg, scfg, params)
+    outs = _wave(eng, args.requests, cfg.vocab_size, args.max_new, failed)
+    first = list(outs[0][:8]) if 0 in outs else "<request 0 not completed>"
+    print(f"[launch.serve] {len(outs)}/{args.requests} requests completed in "
+          f"{eng.decode_calls} batched decode calls; first output: {first}")
+    print(f"[launch.serve] shape census: {eng.census}")
+
+    if args.smoke and args.ft_mode == "entangle":
+        # recovery summary: the wave above is one side of the comparison
+        # (healthy if no --failed-group, injected otherwise); run only the
+        # missing side — the entangled head must roll the failure forward
+        # so the decoded tokens match token-for-token.
+        inj = failed if failed is not None else 0
+        other = _wave(ServeEngine(cfg, scfg, params), args.requests,
+                      cfg.vocab_size, args.max_new,
+                      inj if failed is None else None)
+        healthy, injected = (outs, other) if failed is None else (other, outs)
+        mismatches = sum(
+            0 if np.array_equal(healthy[r], injected[r]) else 1
+            for r in healthy)
+        tokens = sum(len(v) for v in healthy.values())
+        print(f"[launch.serve] recovery summary: failed_group={inj} injected "
+              f"on every decode step; {len(healthy)} requests / {tokens} "
+              f"tokens compared; mismatching requests: {mismatches} "
+              f"({'EXACT ROLL-FORWARD' if mismatches == 0 else 'RECOVERY FAILED'})")
+        if args.blocks == "auto":
+            print(f"[launch.serve] autotune: {autotune.stats()}; head-GEMM "
+                  f"winners: {eng.census.get('head_gemm')}")
+        if mismatches:
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,15 @@
     cache  = model.init_cache(cfg, batch_size, max_seq)
     logits, cache = model.prefill(params, batch, cfg, cache)  # fills cache
     logits, cache = model.decode_step(params, tok, cache, pos, cfg)
+    h, cache      = model.decode_hidden(params, tok, cache, pos, cfg)
+
+``decode_step``/``decode_hidden`` accept ``pos`` as a scalar (whole batch at
+one position) or an int32 vector [B] of per-row positions — the batched
+serving engine decodes every active slot at its own position in ONE call.
+``decode_hidden`` returns the final-norm'd hidden states [B, D] *before* the
+vocab projection, so serving can route the head GEMM through the
+FT-protected entangled int8 path (serve/ft_logits) instead;
+``decode_step`` == head_project(decode_hidden).
 
 batch dicts:
   dense/moe/ssm/hybrid: {tokens [B,T]}
@@ -32,6 +41,9 @@ class Model(NamedTuple):
     forward_train: Callable
     prefill: Callable
     decode_step: Callable
+    decode_hidden: Callable  # pre-head hidden states for the FT serving path
+    head_project: Callable  # (params, h [B, D], cfg) -> logits [B, V]
+    head_weights: Callable  # (params, cfg) -> [D, V] f32 head matrix
     init_cache: Callable
 
 
@@ -107,11 +119,28 @@ def _dec_prefill(p, batch, cfg: ModelConfig, cache):
     return logits[:, 0], new_cache
 
 
-def _dec_decode(p, tok, cache, pos, cfg: ModelConfig):
+def _dec_decode_hidden(p, tok, cache, pos, cfg: ModelConfig):
     x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
     h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache, pos=pos, mode="decode")
-    logits = T.logits_head(p["embed"], h, cfg)
+    return T.final_hidden(p["embed"], h, cfg)[:, 0], new_cache
+
+
+def _dec_decode(p, tok, cache, pos, cfg: ModelConfig):
+    h, new_cache = _dec_decode_hidden(p, tok, cache, pos, cfg)
+    logits = T.head_project(p["embed"], h[:, None], cfg)
     return logits[:, 0], new_cache
+
+
+def _head_project(p, h, cfg: ModelConfig):
+    """Vocab projection of decode-shaped hidden states h [B, D]."""
+    return T.head_project(p["embed"], h[:, None], cfg)[:, 0]
+
+
+def _head_weights(p, cfg: ModelConfig):
+    """The [D, V] head matrix (shared-embedding transpose when tied) — what
+    the serving engine int8-quantizes once for the entangled logits path."""
+    w = p["embed"]["tok"].T if cfg.tie_embeddings else p["embed"]["head"]
+    return w.astype(jnp.float32)
 
 
 DECODER_MODEL = Model(
@@ -119,6 +148,9 @@ DECODER_MODEL = Model(
     forward_train=_dec_forward_train,
     prefill=_dec_prefill,
     decode_step=_dec_decode,
+    decode_hidden=_dec_decode_hidden,
+    head_project=_head_project,
+    head_weights=_head_weights,
     init_cache=_dec_init_cache,
 )
 
@@ -262,7 +294,7 @@ def _ed_prefill(p, batch, cfg: ModelConfig, cache):
     return logits[:, 0], new_cache
 
 
-def _ed_decode(p, tok, cache, pos, cfg: ModelConfig):
+def _ed_decode_hidden(p, tok, cache, pos, cfg: ModelConfig):
     x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
 
     def body(carry, xs):
@@ -271,7 +303,12 @@ def _ed_decode(p, tok, cache, pos, cfg: ModelConfig):
         return h, nc
 
     x, new_cache = lax.scan(body, x, (p["stack"], cache))
-    logits = T.logits_head(p["embed"], x, cfg)
+    return T.final_hidden(p["embed"], x, cfg)[:, 0], new_cache
+
+
+def _ed_decode(p, tok, cache, pos, cfg: ModelConfig):
+    h, new_cache = _ed_decode_hidden(p, tok, cache, pos, cfg)
+    logits = T.head_project(p["embed"], h[:, None], cfg)
     return logits[:, 0], new_cache
 
 
@@ -280,6 +317,9 @@ ENCDEC_MODEL = Model(
     forward_train=_ed_forward_train,
     prefill=_ed_prefill,
     decode_step=_ed_decode,
+    decode_hidden=_ed_decode_hidden,
+    head_project=_head_project,
+    head_weights=_head_weights,
     init_cache=_ed_init_cache,
 )
 

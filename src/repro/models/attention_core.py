@@ -263,13 +263,18 @@ def attend(q, k, v, *, kind: str, window: int = 0, kv_len: int = 0,
 
 def attend_decode(q, k, v, *, abs_pos, scale: float | None = None):
     """Single-position decode: q [B,Hkv,G,1,dk] against cache k/v [B,Hkv,S,*].
-    abs_pos: [S] absolute position of each cache slot (-1 = invalid) — covers
-    both linear caches (arange) and rolling local-attention buffers.
+    abs_pos: [S] (shared positions) or [B, S] (per-row positions, the batched
+    serving engine) absolute position of each cache slot (-1 = invalid) —
+    covers both linear caches (arange) and rolling local-attention buffers.
     """
     scale = scale or (1.0 / math.sqrt(q.shape[-1]))
     s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    ok = (abs_pos >= 0)[None, None, None, None, :]
+    ok = abs_pos >= 0
+    if ok.ndim == 1:
+        ok = ok[None, None, None, None, :]
+    else:  # [B, S]: each batch row masks against its own positions
+        ok = ok[:, None, None, None, :]
     s = jnp.where(ok, s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))

@@ -115,13 +115,43 @@ def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, window: int = 0)
     }
 
 
+def _is_pos_vector(pos) -> bool:
+    """True when ``pos`` is a per-row position vector [B] (batched serving
+    decode) rather than a scalar shared across the batch."""
+    return pos is not None and jnp.ndim(pos) == 1
+
+
+def _decode_positions(pos, B: int, T: int) -> jax.Array:
+    """[B, T] absolute positions of the decode step (T == 1 tokens)."""
+    if _is_pos_vector(pos):
+        return jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[:, None], (B, T))
+    return jnp.full((B, T), pos, dtype=jnp.int32)
+
+
+def _cache_write(buf: jax.Array, new: jax.Array, write):
+    """Write the decode-step entry ``new`` [B, 1, ...] into cache ``buf``
+    [B, S, ...] at slot ``write`` — shared scalar (dynamic_update_slice) or
+    per-row vector [B] (one scatter row per batch element)."""
+    if _is_pos_vector(write):
+        B = buf.shape[0]
+        return buf.at[jnp.arange(B), write].set(new[:, 0])
+    idx = (0, write) + (0,) * (buf.ndim - 2)
+    return lax.dynamic_update_slice(buf, new, idx)
+
+
 def _cache_abs_pos(S: int, pos, window: int):
     """Absolute position of each cache slot during decode (-1 = not valid).
 
     Linear cache: slot s holds position s, valid while s <= pos.
     Rolling window cache: slot s holds the latest position congruent to s
-    (mod window) that is <= pos."""
+    (mod window) that is <= pos.
+
+    ``pos`` may be a scalar (-> [S]) or a per-row vector [B] (-> [B, S],
+    the batched serving engine's per-slot positions)."""
     slot = jnp.arange(S)
+    if _is_pos_vector(pos):
+        slot = slot[None, :]
+        pos = jnp.asarray(pos)[:, None]
     if not window:
         return jnp.where(slot <= pos, slot, -1)
     base = (pos // window) * window
@@ -158,7 +188,7 @@ def apply_attention(
         v = dense(p["wv"], h).reshape(B, T, Hkv, hd)
         if rope_theta:
             if mode == "decode":
-                positions = jnp.full((B, T), pos, dtype=jnp.int32)
+                positions = _decode_positions(pos, B, T)
             else:
                 positions = jnp.broadcast_to(jnp.arange(T), (B, T))
             q = rope(q, positions, rope_theta)
@@ -171,8 +201,8 @@ def apply_attention(
             assert cache is not None
             S = cache["k"].shape[1]
             write = (pos % window) if window else pos
-            k_all = lax.dynamic_update_slice(cache["k"], k, (0, write, 0, 0))
-            v_all = lax.dynamic_update_slice(cache["v"], v, (0, write, 0, 0))
+            k_all = _cache_write(cache["k"], k, write)
+            v_all = _cache_write(cache["v"], v, write)
             new_cache = {"k": k_all, "v": v_all}
             k, v = k_all, v_all
             Tk = S
@@ -276,7 +306,7 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
     k_rope_new = kv[..., m.kv_lora_rank :]  # [B, T, dr] shared across heads
 
     if mode == "decode":
-        positions = jnp.full((B, T), pos, dtype=jnp.int32)
+        positions = _decode_positions(pos, B, T)
     else:
         positions = jnp.broadcast_to(jnp.arange(T), (B, T))
     q_rope = rope(q_rope, positions, cfg.rope_theta)
@@ -285,8 +315,8 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
     new_cache = cache
     if mode == "decode":
         assert cache is not None
-        ckv_all = lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
-        kr_all = lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, pos, 0))
+        ckv_all = _cache_write(cache["ckv"], ckv, pos)
+        kr_all = _cache_write(cache["krope"], k_rope_new, pos)
         new_cache = {"ckv": ckv_all, "krope": kr_all}
         ckv_s, kr_s = ckv_all, kr_all
         Tk = ckv_all.shape[1]
@@ -317,7 +347,11 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
                             kr_s.astype(jnp.float32))
         s = (s_nope + s_rope) * scale
         slot = jnp.arange(Tk)
-        s = jnp.where((slot <= pos)[None, None, None], s, -1e30)
+        if _is_pos_vector(pos):  # per-row positions: mask [B, S]
+            ok = slot[None, :] <= jnp.asarray(pos)[:, None]
+            s = jnp.where(ok[:, None, None, :], s, -1e30)
+        else:
+            s = jnp.where((slot <= pos)[None, None, None], s, -1e30)
         probs = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bhts,bsr->bthr", probs, ckv_s.astype(jnp.float32))
         o = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(jnp.float32))

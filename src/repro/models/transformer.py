@@ -230,18 +230,35 @@ def embed_tokens(p, tokens, cfg: ModelConfig, pos=None):
         T = tokens.shape[1]
         if pos is None:
             x = x + p["pos"][:T][None].astype(L.ACT_DTYPE)
+        elif jnp.ndim(pos) == 1:  # per-row positions, batched decode (T == 1)
+            x = x + jnp.take(p["pos"], pos, axis=0)[:, None].astype(L.ACT_DTYPE)
         else:
             x = x + lax.dynamic_slice_in_dim(p["pos"], pos, T, 0)[None].astype(L.ACT_DTYPE)
     return constrain(x, "batch", "seq", "embed")
 
 
-def logits_head(p, x, cfg: ModelConfig):
-    h = L.apply_norm(p["final_norm"], x, cfg)
+def final_hidden(p, x, cfg: ModelConfig):
+    """Final-norm'd hidden states — the input the FT-protected serving head
+    (serve/ft_logits) quantizes; ``logits_head`` is head_project of this."""
+    return L.apply_norm(p["final_norm"], x, cfg)
+
+
+def readout_scale(cfg: ModelConfig) -> float:
+    """muP-style readout temperature: post-norm h has unit RMS per dim, so
+    1/sqrt(fan_in)-init weights give unit-variance logits and an initial
+    CE of ln(V) + ~0.5; the extra 1/sqrt(d) starts training at the
+    uniform-distribution loss instead (identical argmax ordering). Shared
+    with the FT serving head so ft and plain logits stay on one scale."""
+    return 1.0 / math.sqrt(cfg.d_model)
+
+
+def head_project(p, h, cfg: ModelConfig):
+    """Project final-norm'd hidden states to vocab logits."""
     w = p["tok"].T if cfg.tie_embeddings else p["head"]
     logits = jnp.einsum("btd,dv->btv", h, w.astype(L.ACT_DTYPE))
-    # muP-style readout temperature: post-norm h has unit RMS per dim, so
-    # 1/sqrt(fan_in)-init weights give unit-variance logits and an initial
-    # CE of ln(V) + ~0.5; the extra 1/sqrt(d) starts training at the
-    # uniform-distribution loss instead (identical argmax ordering)
-    logits = logits * (1.0 / math.sqrt(cfg.d_model))
+    logits = logits * readout_scale(cfg)
     return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def logits_head(p, x, cfg: ModelConfig):
+    return head_project(p, final_hidden(p, x, cfg), cfg)

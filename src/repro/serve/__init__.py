@@ -1,0 +1,25 @@
+"""Serving layer: the batched fault-tolerant engine and its entangled head.
+
+  engine.ServeEngine     batched continuous-batching engine — one jitted
+                         decode step for the whole slot pool, per-slot
+                         positions, entangled int8 head GEMM on every decode
+                         step when ft_mode='entangle' (slot -> group =
+                         slot % M), startup autotune warmup
+  reference.PerSlotEngine  the pre-batching per-slot baseline (A/B tests,
+                         throughput benchmarks)
+  ft_logits              the fused entangled int8 logits projection and its
+                         batched-decode entry (ft_logits_decode)
+"""
+from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.ft_logits import ft_logits, ft_logits_decode, quantize_head
+from repro.serve.reference import PerSlotEngine
+
+__all__ = [
+    "PerSlotEngine",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+    "ft_logits",
+    "ft_logits_decode",
+    "quantize_head",
+]

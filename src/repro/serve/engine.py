@@ -1,17 +1,42 @@
-"""Serving engine: slot-batched prefill/decode with FT-protected logits path.
+"""Batched continuous-batching serving engine with the entangled logits
+head on the real hot path.
 
-Continuous-batching-lite: a fixed pool of B slots; new requests prefill into
-free slots, active slots decode one token per engine step (prefill and decode
-are separate jitted programs, as in production TPU serving).
+One engine step issues ONE jitted decode call over the whole slot pool:
+
+  * the KV/recurrent cache is slot-batched — a single pytree with batch
+    dim ``max_batch``, every slot one row;
+  * each slot decodes at its own position (the model decode contract takes
+    an int32 position VECTOR [B]); admission and eviction only flip values
+    in the position/active arrays, never shapes, so the decode program
+    compiles once and is never retraced as traffic churns;
+  * admission prefills a request at batch 1 (retraced per prompt length,
+    like any bucketed prefill), then scatters the fresh slot cache into the
+    batched cache with a jitted dynamic-slice insert;
+  * slot recycling is explicit: a finished slot's cache row is overwritten
+    with zeros, so no tenant can observe a predecessor's KV or recurrent
+    state.
 
 Fault tolerance (the paper's technique in the serving path): with
-``ft_mode='entangle'`` the final (int8-quantized) logits projection runs as
-the fused entangled GEMM over M request groups — a fail-stop/straggler in
-one group's compute is rolled forward from the other M-1 groups' entangled
-outputs, so no request in the batch observes the failure.
+``ft_mode='entangle'`` the final logits projection of EVERY decode step runs
+as the fused entangled int8 GEMM over M request groups
+(serve/ft_logits.ft_logits_decode), slots mapped round-robin to groups
+(slot -> group = slot % M). ``step(failed_group=r)`` injects a fail-stop
+into group r's compute; the in-kernel roll-forward recovers its logits from
+the other M-1 groups' entangled accumulators, so decoded tokens are
+bit-identical with and without the failure — no request observes it.
+
+Autotune warmup contract: with ``blocks='auto'`` the engine sweeps the head
+GEMM's block sizes at startup (``warm_autotune``) for its decode shape
+census, so the in-jit ``blocks='auto'`` resolution is a pure cache hit —
+sweeps must never run inside a traced decode step.
+
+On hosts with more than one device the decode step traces under
+``dist.sharding.serve_mesh()``, sharding the slot batch (and the head GEMM)
+across devices.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Optional
 
@@ -20,7 +45,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.plan import make_plan
+from repro.dist import sharding
+from repro.kernels import ops as kops
 from repro.models.api import get_model
+from repro.models.transformer import readout_scale
+from repro.serve.ft_logits import ft_logits_decode, quantize_head
 
 
 @dataclasses.dataclass
@@ -31,6 +61,9 @@ class ServeConfig:
     ft_M: int = 4
     ft_w: int = 32
     greedy: bool = True
+    # head-GEMM block sizes: None | dict | "auto" (autotuned at startup)
+    blocks: Optional[object] = None
+    use_pallas: bool = True  # entangled head via Pallas (False: XLA einsum)
 
 
 @dataclasses.dataclass
@@ -44,70 +77,218 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
         self.cfg, self.scfg, self.params = cfg, scfg, params
+        if not scfg.greedy:
+            raise NotImplementedError("only greedy decode is implemented")
         self.model = get_model(cfg)
         B, S = scfg.max_batch, scfg.max_seq
-        self.cache = self.model.init_cache(cfg, 1, S)  # per-slot caches
+        # THE slot-batched cache: one pytree, slot i = batch row i
+        self.cache = self.model.init_cache(cfg, B, S)
+        # zero slot template: source for admission prefills and recycling
+        self._fresh_slot = self.model.init_cache(cfg, 1, S)
         self.slots: list[Optional[dict]] = [None] * B
         self.queue: list[Request] = []
         self.done: list[Request] = []
+        self.pos = np.zeros(B, np.int32)  # per-slot next decode position
+        self.last_tok = np.zeros(B, np.int32)
+        self.census: dict[str, dict] = {"prefill": {}, "decode": {}}
+        self.decode_calls = 0  # jitted decode invocations (one per step)
+        self.mesh = sharding.serve_mesh()
+
+        if scfg.ft_mode == "entangle":
+            if B % scfg.ft_M:
+                raise ValueError(
+                    f"max_batch={B} must be divisible by ft_M={scfg.ft_M}")
+            # plan reuse: made ONCE, every decode step and autotune key
+            # shares it (no per-step (l, k) re-planning)
+            self.plan = make_plan(scfg.ft_M, scfg.ft_w)
+            self.head_q, self.w_scale = quantize_head(
+                self.model.head_weights(params, cfg))
+        elif scfg.ft_mode != "none":
+            raise ValueError(f"unknown ft_mode {scfg.ft_mode!r}")
+        self._head_blocks = self._default_head_blocks()
+
+        # donate the slot-batched cache through decode/insert so XLA aliases
+        # it in place instead of copying the engine's largest buffer every
+        # token (donation is a no-op warning on CPU, so gate it)
+        donate = jax.default_backend() != "cpu"
         self._prefill = jax.jit(
             lambda p, b, c: self.model.prefill(p, b, self.cfg, c))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: self.model.decode_step(p, t, c, pos, self.cfg))
-        self._slot_cache = [self.model.init_cache(cfg, 1, S) for _ in range(B)]
+        self._insert = jax.jit(self._insert_impl,
+                               donate_argnums=(0,) if donate else ())
+        self._decode = jax.jit(self._decode_impl,
+                               static_argnames=("failed_group",),
+                               donate_argnums=(1,) if donate else ())
+        if scfg.blocks == "auto":
+            self.warm_autotune()
 
     def submit(self, req: Request):
+        # loud capacity check: past max_seq the vector cache scatter would
+        # silently DROP K/V writes (and the reference engine would clamp),
+        # turning overflow into wrong tokens instead of an error
+        need = len(req.prompt) + req.max_new
+        if need > self.scfg.max_seq:
+            raise ValueError(
+                f"request rid={req.rid} needs {need} positions "
+                f"(prompt {len(req.prompt)} + max_new {req.max_new}) "
+                f"> max_seq={self.scfg.max_seq}")
         self.queue.append(req)
 
-    def _sample(self, logits: jax.Array) -> int:
-        return int(jnp.argmax(logits, -1))
+    def _default_head_blocks(self):
+        """Head-GEMM block sizes when the user gave none: the per-group
+        decode batch is tiny (max_batch / M rows), so the wrapper's
+        MXU-aligned bb=128 default would pad it ~64x with zero rows every
+        step — clamp bb to the smallest power of two covering the group."""
+        if self.scfg.blocks is not None or self.scfg.ft_mode != "entangle":
+            return self.scfg.blocks
+        gsz = self.scfg.max_batch // self.scfg.ft_M
+        bb = 8
+        while bb < min(gsz, 128):
+            bb *= 2
+        return {"bb": bb}
+
+    # -- jitted programs ------------------------------------------------------
+
+    def _insert_impl(self, cache, slot_cache, i):
+        """Scatter a batch-1 slot cache into batch row ``i`` of the batched
+        cache. ``i`` is traced — admit/evict never retraces."""
+        def ins(big, small):
+            return jax.lax.dynamic_update_slice_in_dim(big, small, i, axis=1)
+        return jax.tree.map(ins, cache, slot_cache)
+
+    def _decode_impl(self, params, cache, last_tok, pos, active, head,
+                     failed_group: Optional[int] = None):
+        """ONE decode step for the whole slot pool. ``pos`` is the per-slot
+        position vector; ``active`` masks which rows carry live requests
+        (inactive rows compute garbage that admission later overwrites).
+        ``head`` is (head_q, w_scale) — passed as a jit argument, not a
+        closure constant, so every failed_group retrace shares ONE device
+        buffer for the [D, V] quantized head (None when ft is off)."""
+        ctx = (sharding.axis_rules(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            tok = last_tok[:, None]
+            h, new_cache = self.model.decode_hidden(
+                params, tok, cache, pos, self.cfg)
+            if self.scfg.ft_mode == "entangle":
+                head_q, w_scale = head
+                # inactive rows are zeroed so their garbage cannot poison
+                # the shared activation quantization scale
+                hf = jnp.where(active[:, None], h.astype(jnp.float32), 0.0)
+                logits = ft_logits_decode(
+                    hf, head_q, w_scale, plan=self.plan,
+                    failed_group=failed_group,
+                    use_pallas=self.scfg.use_pallas,
+                    blocks=self._head_blocks)
+                # match head_project's muP readout temperature (argmax-
+                # neutral; keeps ft and plain logits on one scale)
+                logits = logits * readout_scale(self.cfg)
+            else:
+                logits = self.model.head_project(params, h, self.cfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_cache
+
+    # -- engine steps ---------------------------------------------------------
+
+    def _census_bump(self, kind: str, sig: tuple):
+        self.census[kind][sig] = self.census[kind].get(sig, 0) + 1
+
+    def _admit(self, i: int, req: Request):
+        tokens = jnp.asarray(req.prompt[None, :].astype(np.int32))
+        logits, slot_cache = self._prefill(
+            self.params, {"tokens": tokens}, self._fresh_slot)
+        self._census_bump("prefill", (1, int(tokens.shape[1])))
+        tok = int(jnp.argmax(logits[0], -1))
+        self.cache = self._insert(self.cache, slot_cache, jnp.int32(i))
+        self.slots[i] = {"req": req, "toks": [tok]}
+        self.pos[i] = len(req.prompt)
+        self.last_tok[i] = tok
+        if req.max_new <= 1:
+            self._finish(i)
+
+    def _finish(self, i: int):
+        s = self.slots[i]
+        req = s["req"]
+        req.out = np.asarray(s["toks"][: req.max_new], np.int32)
+        self.done.append(req)
+        self._recycle(i)
+
+    def _recycle(self, i: int):
+        """Explicit slot recycling: zero the slot's cache row so no later
+        tenant (or FT quantization scan) can see the old request's state.
+
+        Admission would overwrite the row anyway, so this buys the
+        invariant "a free slot holds zeros" at the cost of one jitted
+        insert per FINISHED REQUEST (not per token) — kept for the loud
+        state boundary, cheap relative to the request's decode steps."""
+        self.slots[i] = None
+        self.pos[i] = 0
+        self.last_tok[i] = 0
+        self.cache = self._insert(self.cache, self._fresh_slot, jnp.int32(i))
 
     def step(self, failed_group: Optional[int] = None) -> int:
-        """One engine step: admit + prefill new requests, decode active.
-        Returns number of active slots. ``failed_group`` injects a fail-stop
-        into the entangled logits path of the decode batch."""
-        # admit
+        """One engine step: admit + prefill queued requests into free slots,
+        then ONE batched jitted decode call for all active slots. Returns
+        the number of active slots. ``failed_group`` injects a fail-stop
+        into that entangled group's head-GEMM compute for this step; the
+        kernel rolls it forward, so outputs are unchanged."""
+        if failed_group is not None:
+            if self.scfg.ft_mode != "entangle":
+                raise ValueError("failed_group requires ft_mode='entangle'")
+            if not 0 <= failed_group < self.scfg.ft_M:
+                # the kernel indexes streams mod M; wrapping silently would
+                # make an injection drill report a group it never failed
+                raise ValueError(
+                    f"failed_group={failed_group} out of range for "
+                    f"ft_M={self.scfg.ft_M}")
         for i in range(len(self.slots)):
             if self.slots[i] is None and self.queue:
-                req = self.queue.pop(0)
-                tokens = jnp.asarray(req.prompt[None, :])
-                logits, cache = self._prefill(
-                    self.params, {"tokens": tokens}, self._slot_cache[i])
-                tok = self._sample(logits[0])
-                self.slots[i] = {
-                    "req": req, "cache": cache, "pos": len(req.prompt),
-                    "toks": [tok],
-                }
-        # decode active slots
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        for i in active:
-            s = self.slots[i]
-            tok_in = jnp.asarray([[s["toks"][-1]]], dtype=jnp.int32)
-            logits, s["cache"] = self._decode(
-                self.params, tok_in, s["cache"], s["pos"])
-            if self.scfg.ft_mode == "entangle":
-                logits = self._ft_logits_check(logits, i, failed_group)
-            s["pos"] += 1
-            s["toks"].append(self._sample(logits[0]))
-            req = s["req"]
-            if len(s["toks"]) > req.max_new:
-                req.out = np.asarray(s["toks"][: req.max_new], np.int32)
-                self.done.append(req)
-                self.slots[i] = None
+                self._admit(i, self.queue.pop(0))
+        active_idx = [i for i, s in enumerate(self.slots) if s is not None]
+        if active_idx:
+            B = self.scfg.max_batch
+            active = np.zeros(B, bool)
+            active[active_idx] = True
+            head = (None if self.scfg.ft_mode != "entangle"
+                    else (self.head_q, self.w_scale))
+            nxt, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self.last_tok),
+                jnp.asarray(self.pos), jnp.asarray(active), head,
+                failed_group=failed_group)
+            self.decode_calls += 1
+            self._census_bump("decode", (len(active_idx), B))
+            nxt = np.asarray(nxt)
+            for i in active_idx:
+                s = self.slots[i]
+                self.pos[i] += 1
+                s["toks"].append(int(nxt[i]))
+                self.last_tok[i] = nxt[i]
+                if len(s["toks"]) >= s["req"].max_new:
+                    self._finish(i)
         return sum(s is not None for s in self.slots)
 
-    # -- FT path: entangled int8 logits GEMM across M request groups --------
-    def _ft_logits_check(self, logits, slot, failed_group):
-        # per-slot engine: group index = slot % M; a failed group's logits
-        # would be recovered from the entangled outputs of other groups.
-        # The full batched path (with recovery) lives in serve/ft_logits.py
-        # and examples/serve_lm.py; here we only tag the group.
-        del slot, failed_group
-        return logits
-
-    def run_to_completion(self, max_steps: int = 1000) -> list[Request]:
+    def run_to_completion(self, max_steps: int = 1000,
+                          failed_group: Optional[int] = None) -> list[Request]:
+        """Drain the queue. ``failed_group`` injects the fail-stop on EVERY
+        decode step — the strongest roll-forward drill."""
         steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) and steps < max_steps:
-            self.step()
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step(failed_group=failed_group)
             steps += 1
         return self.done
+
+    # -- startup autotune warmup ---------------------------------------------
+
+    def warm_autotune(self) -> dict:
+        """Warm the kernel autotune cache for the engine's head-GEMM shape
+        census (the ROADMAP contract). Sweeps run HERE, eagerly; the in-jit
+        ``blocks='auto'`` resolution then only ever cache-hits. No-op unless
+        the entangled head is on and ``blocks == 'auto'``."""
+        if self.scfg.ft_mode != "entangle" or self.scfg.blocks != "auto":
+            return {}
+        M, B = self.plan.M, self.scfg.max_batch
+        D, V = self.head_q.shape
+        won = kops.warm_entangled_matmul(M, B // M, D, V, self.plan,
+                                         fuse_epilogue=True)
+        self.census.setdefault("head_gemm", {})[(M, B // M, D, V)] = won
+        return won

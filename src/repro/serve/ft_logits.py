@@ -12,6 +12,13 @@ accumulators inside the same kernel (``fuse_epilogue=False`` keeps the
 separate disentangle pass for callers that must inject/persist entangled
 outputs).
 
+:func:`ft_logits` is the library form (caller-chosen contiguous grouping).
+:func:`ft_logits_decode` is the batched serving engine's per-step entry:
+slots map round-robin to groups (slot -> group = slot % M) so every group
+stays populated under continuous batching, and the
+:class:`~repro.core.plan.EntanglePlan` is made once at engine startup and
+reused every step.
+
 Returns dequantized float logits. Integer recovery is EXACT (tests assert
 bit-equality under injected failure); the quantization itself trades logits
 precision for protection like any int8 serving path.
@@ -22,6 +29,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.entangle import disentangle
 from repro.core.failstop import GARBAGE
@@ -82,3 +90,49 @@ def ft_logits(
         rec = disentangle(delta, plan, failed=failed_group)  # [M, B/M, V]
     logits = rec.astype(jnp.float32) / (a_scale * w_scale)
     return logits.reshape(B, V)
+
+
+# -- batched-decode entry -----------------------------------------------------
+
+def decode_group_order(B: int, M: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static permutation realizing the engine's slot -> group = slot % M
+    mapping on top of :func:`ft_logits`'s contiguous [M, B/M] grouping.
+
+    ``order[g * B//M + j] = j * M + g`` — position p of the permuted batch
+    holds slot ``order[p]``; ``inv`` undoes it (``inv[slot]`` = position of
+    that slot's logits in the permuted output). Round-robin grouping keeps
+    every entangled group populated whenever >= M slots are active, so a
+    fail-stop in any group is recoverable from M-1 *other* live groups.
+    """
+    assert B % M == 0, f"batch {B} must split into M={M} request groups"
+    order = np.arange(B, dtype=np.int32).reshape(B // M, M).T.reshape(B)
+    inv = np.argsort(order).astype(np.int32)
+    return order, inv
+
+
+def ft_logits_decode(
+    h: jax.Array,  # [B, D] hidden states of ONE engine decode step
+    head_q: jax.Array,  # [D, V] int8-range int32 weights
+    w_scale: jax.Array,
+    *,
+    plan: EntanglePlan,
+    failed_group: Optional[int] = None,
+    use_pallas: bool = True,
+    fuse_epilogue: bool = True,
+    blocks=None,
+) -> jax.Array:
+    """The serving engine's per-step entry: one fused entangled head GEMM
+    over the whole slot batch, slots mapped round-robin to groups
+    (slot -> group = slot % plan.M).
+
+    Unlike :func:`ft_logits` the plan is REQUIRED: the engine makes it once
+    at startup and reuses it every step, so no per-step (l, k) re-planning
+    and a stable autotune/compile key across the serving lifetime.
+    """
+    B = h.shape[0]
+    order, inv = decode_group_order(B, plan.M)
+    logits = ft_logits(
+        h[order], head_q, w_scale, M=plan.M, plan=plan,
+        failed_group=failed_group, use_pallas=use_pallas,
+        fuse_epilogue=fuse_epilogue, blocks=blocks)
+    return logits[inv]

@@ -1,0 +1,110 @@
+"""Per-slot reference serving engine — the pre-batching baseline.
+
+This is the seed engine's control flow (one batch-1 jitted decode call per
+active slot per engine step), kept as a first-class reference:
+
+  * the batched :class:`repro.serve.engine.ServeEngine` must produce
+    bit-identical greedy outputs to this engine (tested in
+    tests/test_serve_engine.py);
+  * benchmarks/serve_throughput.py uses it as the throughput baseline the
+    batched engine is measured against.
+
+Differences from the seed version (cleanups that do not change outputs):
+the dead never-read engine-level cache is gone, prefill always starts from
+one shared zeroed slot-cache template (slot recycling is explicit — a
+recycled slot can never see the previous tenant's KV or recurrent state),
+and generation stops after exactly ``max_new`` tokens instead of decoding
+one extra token and truncating.
+
+Fault tolerance is NOT implemented here: protecting one slot at a time is
+pointless (recovery needs M live groups in the same GEMM), which is exactly
+why the batched engine exists. ``ft_mode`` must be ``"none"``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.api import get_model
+from repro.serve.engine import Request, ServeConfig
+
+
+class PerSlotEngine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        if scfg.ft_mode != "none":
+            raise ValueError(
+                "PerSlotEngine is the unprotected baseline; entangled "
+                "serving needs the batched ServeEngine (M groups must share "
+                "one GEMM)")
+        self.cfg, self.scfg, self.params = cfg, scfg, params
+        self.model = get_model(cfg)
+        B, S = scfg.max_batch, scfg.max_seq
+        self.slots: list[Optional[dict]] = [None] * B
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+        self._prefill = jax.jit(
+            lambda p, b, c: self.model.prefill(p, b, self.cfg, c))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: self.model.decode_step(p, t, c, pos, self.cfg))
+        # one shared zero template: prefill is functional, so every admit
+        # starts from pristine state (explicit recycling, no stale KV)
+        self._fresh_slot = self.model.init_cache(cfg, 1, S)
+        self.decode_calls = 0  # jitted decode invocations (A/B observability)
+
+    def submit(self, req: Request):
+        need = len(req.prompt) + req.max_new
+        if need > self.scfg.max_seq:  # same capacity contract as ServeEngine
+            raise ValueError(
+                f"request rid={req.rid} needs {need} positions "
+                f"> max_seq={self.scfg.max_seq}")
+        self.queue.append(req)
+
+    def _sample(self, logits: jax.Array) -> int:
+        return int(jnp.argmax(logits, -1))
+
+    def _finish(self, i: int):
+        s = self.slots[i]
+        req = s["req"]
+        req.out = np.asarray(s["toks"][: req.max_new], np.int32)
+        self.done.append(req)
+        self.slots[i] = None  # recycled: next admit starts from _fresh_slot
+
+    def step(self) -> int:
+        """One engine step: admit + prefill new requests, then one batch-1
+        decode call PER active slot. Returns the number of active slots."""
+        for i in range(len(self.slots)):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                tokens = jnp.asarray(req.prompt[None, :].astype(np.int32))
+                logits, cache = self._prefill(
+                    self.params, {"tokens": tokens}, self._fresh_slot)
+                self.slots[i] = {
+                    "req": req, "cache": cache, "pos": len(req.prompt),
+                    "toks": [self._sample(logits[0])],
+                }
+                if req.max_new <= 1:
+                    self._finish(i)
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        for i in active:
+            s = self.slots[i]
+            tok_in = jnp.asarray([[s["toks"][-1]]], dtype=jnp.int32)
+            logits, s["cache"] = self._decode(
+                self.params, tok_in, s["cache"], s["pos"])
+            self.decode_calls += 1
+            s["pos"] += 1
+            s["toks"].append(self._sample(logits[0]))
+            if len(s["toks"]) >= s["req"].max_new:
+                self._finish(i)
+        return sum(s is not None for s in self.slots)
+
+    def run_to_completion(self, max_steps: int = 1000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done
