@@ -6,7 +6,9 @@
   gemm_overhead        Sec. IV GEMM cost, measured (beyond-paper)
   kernel_micro         codec bandwidth + fused-vs-separate ledger
   serve_throughput     batched vs per-slot engine tok/s + entangled-head
-                       overhead (writes BENCH_serve.json)
+                       overhead, plus the prompt-heavy admission wave
+                       (bucketed batched prefill >= 2x per-request gate)
+                       (writes BENCH_serve.json)
   roofline_report      dry-run three-term roofline summary (if artifacts)
 
 Prints ``name,us_per_call,derived`` CSV and writes every record to

@@ -3,11 +3,16 @@
 Boots the batched continuous-batching engine with random weights (or a
 checkpoint directory) and runs a synthetic request wave. Fault tolerance is
 first-class: ``--ft-mode entangle`` turns on the fused entangled int8 head
-GEMM on every decode step (slot -> group = slot % ft_M), ``--failed-group r``
-injects a fail-stop into group r's compute on every step, and ``--smoke``
-prints a recovery summary (healthy vs injected outputs compared
-token-by-token) plus the engine's prefill/decode shape census and the
-autotune warmup counters.
+GEMM on every decode step AND on every admission batch's first token
+(slot -> group = slot % ft_M), ``--failed-group r`` injects a fail-stop
+into group r's compute on every step, and ``--smoke`` prints a recovery
+summary (healthy vs injected outputs compared token-by-token) plus the
+engine's prefill/decode shape census and the autotune warmup counters.
+
+Admission is the bucketed, chunked batched prefill pipeline:
+``--prefill-buckets 8,16,32`` overrides the geometric default length
+buckets, ``--prefill-chunk C`` interleaves C-token prefill chunks with
+decode steps (0 = whole bucket per call).
 """
 import argparse
 
@@ -54,6 +59,13 @@ def main():
     ap.add_argument("--blocks", default="",
                     help="head-GEMM block sizes: '' (defaults) or 'auto' "
                          "(autotune warmup at startup)")
+    ap.add_argument("--prefill-buckets", default="",
+                    help="comma-separated prompt length buckets for batched "
+                         "admission (default: geometric 8,16,...,max-seq)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help=">0: split bucketed prefill into chunks of this "
+                         "many tokens, one chunk per engine step "
+                         "(interleaved with decode)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -66,10 +78,13 @@ def main():
         params = restored["params"]
         print(f"[launch.serve] restored params from step {step}")
 
+    buckets = (tuple(int(b) for b in args.prefill_buckets.split(","))
+               if args.prefill_buckets else None)
     scfg = ServeConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
         ft_mode=args.ft_mode, ft_M=args.ft_M,
-        blocks=(args.blocks or None))
+        blocks=(args.blocks or None),
+        prefill_buckets=buckets, prefill_chunk=args.prefill_chunk)
     failed = args.failed_group if args.failed_group >= 0 else None
     if failed is not None and args.ft_mode != "entangle":
         ap.error("--failed-group requires --ft-mode entangle")

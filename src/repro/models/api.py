@@ -5,6 +5,8 @@
     logits = model.forward_train(params, batch, cfg)          # [B, T, V]
     cache  = model.init_cache(cfg, batch_size, max_seq)
     logits, cache = model.prefill(params, batch, cfg, cache)  # fills cache
+    h, cache = model.prefill_chunk(params, tokens, cfg, cache,
+                                   pos0=c, lengths=lens)      # [B, C, D]
     logits, cache = model.decode_step(params, tok, cache, pos, cfg)
     h, cache      = model.decode_hidden(params, tok, cache, pos, cfg)
 
@@ -15,6 +17,16 @@ serving engine decodes every active slot at its own position in ONE call.
 vocab projection, so serving can route the head GEMM through the
 FT-protected entangled int8 path (serve/ft_logits) instead;
 ``decode_step`` == head_project(decode_hidden).
+
+``prefill_chunk`` is the batched/bucketed prefill contract (decoder-only):
+``tokens`` [B, C] is one chunk of a bucket-padded prompt batch processed at
+absolute positions ``pos0..pos0+C-1`` (``pos0`` a static Python int — one
+trace per (bucket, chunk) shape), ``lengths`` [B] the true per-row prompt
+lengths. Cache writes land at the chunk offset; rolling-window buffers and
+recurrent states are length-masked so a row's bucket-pad tail never leaks
+into its cache. Returns the final-norm'd hidden states [B, C, D] (the
+serving engine gathers each row's ``lengths-1`` column and projects it via
+head_project or the entangled FT head) and the filled cache.
 
 batch dicts:
   dense/moe/ssm/hybrid: {tokens [B,T]}
@@ -40,6 +52,7 @@ class Model(NamedTuple):
     init: Callable
     forward_train: Callable
     prefill: Callable
+    prefill_chunk: Callable  # bucketed/chunked batched prefill (serving)
     decode_step: Callable
     decode_hidden: Callable  # pre-head hidden states for the FT serving path
     head_project: Callable  # (params, h [B, D], cfg) -> logits [B, V]
@@ -119,6 +132,17 @@ def _dec_prefill(p, batch, cfg: ModelConfig, cache):
     return logits[:, 0], new_cache
 
 
+def _dec_prefill_chunk(p, tokens, cfg: ModelConfig, cache, *, pos0: int = 0,
+                       lengths=None):
+    """Bucketed/chunked batched prefill: tokens [B, C] at absolute positions
+    pos0..pos0+C-1 with per-row true lengths. Returns final-norm'd hidden
+    states [B, C, D] + filled cache (see the module docstring)."""
+    x = T.embed_tokens(p["embed"], tokens, cfg, pos=(pos0 or None))
+    h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache,
+                                 pos=pos0, mode="prefill", lengths=lengths)
+    return T.final_hidden(p["embed"], h, cfg), new_cache
+
+
 def _dec_decode_hidden(p, tok, cache, pos, cfg: ModelConfig):
     x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
     h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache, pos=pos, mode="decode")
@@ -147,6 +171,7 @@ DECODER_MODEL = Model(
     init=_dec_init,
     forward_train=_dec_forward_train,
     prefill=_dec_prefill,
+    prefill_chunk=_dec_prefill_chunk,
     decode_step=_dec_decode,
     decode_hidden=_dec_decode_hidden,
     head_project=_head_project,
@@ -312,10 +337,18 @@ def _ed_decode(p, tok, cache, pos, cfg: ModelConfig):
     return logits[:, 0], new_cache
 
 
+def _ed_prefill_chunk(p, tokens, cfg: ModelConfig, cache, *, pos0: int = 0,
+                      lengths=None):
+    raise NotImplementedError(
+        "chunked/bucketed prefill is decoder-only; enc-dec prefill needs "
+        "frames and runs whole-prompt (_ed_prefill)")
+
+
 ENCDEC_MODEL = Model(
     init=_ed_init,
     forward_train=_ed_forward_train,
     prefill=_ed_prefill,
+    prefill_chunk=_ed_prefill_chunk,
     decode_step=_ed_decode,
     decode_hidden=_ed_decode_hidden,
     head_project=_head_project,

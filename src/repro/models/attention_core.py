@@ -32,6 +32,7 @@ class MaskInfo(NamedTuple):
     kind: str  # causal | window | full
     window: int = 0
     kv_len: int = 0  # true (unpadded) kv length
+    q_off: int = 0  # absolute position of query 0 (chunked prefill at offset)
 
 
 def _block_mask(info: MaskInfo, qpos, kpos):
@@ -58,14 +59,15 @@ def _pad_axis(x, axis, mult):
 def _band(info: MaskInfo, iq: int, qb: int, kb: int, nk: int) -> tuple[int, int]:
     """Static kv-block range [lo, hi) that q-block iq can attend to.
 
-    Causal: blocks 0..ceil(((iq+1)*qb)/kb). Window: additionally bounded
-    below. Full: everything. Banding skips masked-out blocks ENTIRELY —
-    the §Perf fix for the 2x causal / O(T/window) windowed flash waste."""
+    Causal: blocks 0..ceil((q_off + (iq+1)*qb)/kb). Window: additionally
+    bounded below. Full: everything. Banding skips masked-out blocks
+    ENTIRELY — the §Perf fix for the 2x causal / O(T/window) windowed flash
+    waste. ``info.q_off`` shifts the band for chunked prefill at an offset."""
     if info.kind == "full":
         return 0, nk
-    hi = min(nk, -(-((iq + 1) * qb) // kb))
+    hi = min(nk, -(-(info.q_off + (iq + 1) * qb) // kb))
     if info.kind == "window":
-        lo = max(0, (iq * qb - info.window + 1) // kb)
+        lo = max(0, (info.q_off + iq * qb - info.window + 1) // kb)
         return lo, hi
     return 0, hi
 
@@ -87,7 +89,7 @@ def _flash_fwd_inner(q, k, v, info: MaskInfo, scale, qb, kb):
     outs, lses = [], []
     for iq in range(nq):
         qi = qs[:, :, :, iq]
-        qpos = iq * qb + jnp.arange(qb)
+        qpos = info.q_off + iq * qb + jnp.arange(qb)
         lo, hi = _band(info, iq, qb, kb, nk)
 
         def kv_step(carry, kj_idx, _qi=qi, _qpos=qpos):
@@ -172,7 +174,7 @@ def _flash_bwd(info, scale, qb, kb, res, dout):
     for iq in range(nq):
         qi, do_i = qs[:, :, :, iq], dos[:, :, :, iq]
         lse_i, D_i = lses[:, :, :, iq], Ds[:, :, :, iq]
-        qpos = iq * qb + jnp.arange(qb)
+        qpos = info.q_off + iq * qb + jnp.arange(qb)
         lo, hi = _band(info, iq, qb, kb, nk)
 
         def inner(dq_acc, ys, _qi=qi, _do=do_i, _lse=lse_i, _D=D_i, _qpos=qpos):
@@ -205,7 +207,7 @@ def _flash_bwd(info, scale, qb, kb, res, dout):
             def inner2(carry, ys, _kj=kj, _vj=vj, _jk=jk):
                 dk_acc, dv_acc = carry
                 qi, do_i, lse_i, D_i, iq = ys
-                qpos = iq * qb + jnp.arange(qb)
+                qpos = info.q_off + iq * qb + jnp.arange(qb)
                 p = p_block(qi, lse_i, qpos, _kj, _jk)
                 dv_acc += jnp.einsum("bhgqk,bhgqd->bhkd", p, do_i)
                 dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_i, _vj.astype(jnp.float32))
@@ -234,18 +236,21 @@ DEFAULT_KB = 512
 
 def attend(q, k, v, *, kind: str, window: int = 0, kv_len: int = 0,
            scale: float | None = None, qb: int = DEFAULT_QB,
-           kb: int = DEFAULT_KB):
+           kb: int = DEFAULT_KB, q_off: int = 0):
     """Dispatching attention: q [B,Hkv,G,T,dk], k [B,Hkv,S,dk],
     v [B,Hkv,S,dv] -> out [B,Hkv,G,T,dv] (f32).
 
     kind: causal | window | full. kv_len masks padded/unwritten tail keys.
-    Small problems take the materialized path (exact same math)."""
+    q_off is the absolute position of query 0 — chunked prefill attends a
+    [B, C] chunk against a cache holding all earlier positions, so queries
+    start at the chunk offset, not 0. Small problems take the materialized
+    path (exact same math)."""
     B, Hkv, G, T, dk = q.shape
     S = k.shape[2]
     scale = scale or (1.0 / math.sqrt(dk))
     if T * S <= FLASH_THRESHOLD * FLASH_THRESHOLD // 4 or T == 1:
-        qpos = jnp.arange(T) if kind != "full" else jnp.arange(T)
-        info = MaskInfo(kind, window, kv_len or 0)
+        qpos = jnp.arange(T) + q_off
+        info = MaskInfo(kind, window, kv_len or 0, q_off)
         s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
                        k.astype(jnp.float32)) * scale
         mask = _block_mask(info, qpos, jnp.arange(S))
@@ -256,9 +261,58 @@ def attend(q, k, v, *, kind: str, window: int = 0, kv_len: int = 0,
     qp = _pad_axis(q, 3, qb)
     kp = _pad_axis(k, 2, kb)
     vp = _pad_axis(v, 2, kb)
-    info = MaskInfo(kind, window, kv_len or S)
+    info = MaskInfo(kind, window, kv_len or S, q_off)
     out = flash_attention(qp, kp, vp, info, scale, qb, kb)
     return out[:, :, :, :T]
+
+
+def _prefill_window_inner(q, k, v, qpos, kabs, window, scale):
+    """Materialized abs-position-masked attention (one query band)."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    ka = kabs[:, None, None, None, :]  # [B, 1, 1, 1, S]
+    qp = qpos[None, None, None, :, None]  # [1, 1, 1, T, 1]
+    ok = (ka >= 0) & (ka <= qp) & (ka > qp - window)
+    s = jnp.where(ok, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+
+
+def attend_prefill_window(q, k, v, *, qpos, kabs, window: int,
+                          scale: float | None = None, qb: int = DEFAULT_QB):
+    """Bucketed/chunked prefill attention for rolling-window layers.
+
+    q [B,Hkv,G,T,dk] are the chunk's queries at absolute positions
+    ``qpos`` [T] (consecutive); k/v [B,Hkv,S,*] concatenate the rolling
+    cache (earlier chunks; S_c = S - T slots, slot order) with the chunk's
+    own T keys IN POSITION ORDER (aligned with qpos — the caller contract
+    that makes query banding possible), with per-row absolute key positions
+    ``kabs`` [B, S] (-1 = invalid slot / padding past the row's prompt
+    length). Each query attends to keys in its window (qpos - window, qpos]
+    — the slot-order scrambling of the rolling buffer is undone by masking
+    on absolute positions, exactly like :func:`attend_decode`.
+
+    Large problems are processed in query bands of ``qb``: band [i0, i1)
+    only needs the S_c cache slots plus chunk keys (i0 - window, i1), so
+    live scores are O(qb * (S_c + qb + window)), never O(T * S) — the same
+    banding idea as the flash path, without it the unchunked bucketed
+    prefill of a production-scale window layer would OOM on scores."""
+    scale = scale or (1.0 / math.sqrt(q.shape[-1]))
+    T = q.shape[3]
+    S = k.shape[2]
+    if T * S <= FLASH_THRESHOLD * FLASH_THRESHOLD // 4:
+        return _prefill_window_inner(q, k, v, qpos, kabs, window, scale)
+    S_c = S - T  # leading rolling-cache slots
+    outs = []
+    for i0 in range(0, T, qb):
+        i1 = min(i0 + qb, T)
+        lo = S_c + max(0, i0 - window + 1)
+        ks = jnp.concatenate([k[:, :, :S_c], k[:, :, lo : S_c + i1]], axis=2)
+        vs = jnp.concatenate([v[:, :, :S_c], v[:, :, lo : S_c + i1]], axis=2)
+        kab = jnp.concatenate([kabs[:, :S_c], kabs[:, lo : S_c + i1]], axis=1)
+        outs.append(_prefill_window_inner(
+            q[:, :, :, i0:i1], ks, vs, qpos[i0:i1], kab, window, scale))
+    return jnp.concatenate(outs, axis=3)
 
 
 def attend_decode(q, k, v, *, abs_pos, scale: float | None = None):

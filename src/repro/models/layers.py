@@ -139,6 +139,74 @@ def _cache_write(buf: jax.Array, new: jax.Array, write):
     return lax.dynamic_update_slice(buf, new, idx)
 
 
+def _prefill_off(pos, mode: str) -> int:
+    """Static chunk offset of a prefill call: the engine's chunked prefill
+    processes tokens [B, C] at absolute positions off..off+C-1 (``pos`` is a
+    Python int, so each (bucket, chunk) shape traces once); classic
+    whole-prompt prefill passes pos=None -> offset 0."""
+    return int(pos) if (mode == "prefill" and pos is not None) else 0
+
+
+def _conv_tail_state(xp: jax.Array, off: int, T: int, lengths,
+                     d_conv: int) -> jax.Array:
+    """Per-row depthwise-conv tail state of a bucketed prefill chunk:
+    the last ``d_conv - 1`` REAL inputs per row, gathered from
+    ``xp = [prev_tail (d_conv-1), inputs (T)]``. Index e..e+d_conv-2 ends
+    at the row's last real position of this chunk; rows with no real
+    positions (e = 0) keep the prior tail. Shared by Mamba and RG-LRU so
+    the tail-index math can never diverge between them."""
+    B = xp.shape[0]
+    e = (jnp.clip(jnp.asarray(lengths, jnp.int32) - off, 0, T)
+         if lengths is not None else jnp.full((B,), T, jnp.int32))
+    gidx = e[:, None] + jnp.arange(d_conv - 1)[None]
+    return jnp.take_along_axis(xp, gidx[..., None], axis=1).astype(ACT_DTYPE)
+
+
+def _prefill_valid(off: int, T: int, lengths, *, time_major: bool = False):
+    """[B, T] (or [T, B]) mask of REAL positions in a bucketed prefill
+    chunk: global position off+t belongs to row b iff off+t < lengths_b.
+    None when lengths is None (whole batch real) — the single source of
+    the bucket-padding validity invariant for every block type."""
+    if lengths is None:
+        return None
+    g = off + jnp.arange(T)
+    L = jnp.asarray(lengths, jnp.int32)
+    if time_major:
+        return g[:, None] < L[None, :]
+    return g[None, :] < L[:, None]
+
+
+def _window_prefill_write(cache: dict, k: jax.Array, v: jax.Array, *,
+                          off: int, lengths, window: int):
+    """Masked rolling-buffer write for a bucketed/chunked prefill step.
+
+    Writes, per row, the last ``min(T, window)`` REAL positions before
+    ``end_b = min(lengths_b, off + T)`` at slot p % window. Pad positions
+    (>= lengths_b) and positions from earlier chunks (< off) leave the
+    buffer untouched, so padding a prompt to its bucket can never clobber a
+    previously written real key. Slot indices within a row are a contiguous
+    position range of length <= window, hence collision-free."""
+    B, T = k.shape[0], k.shape[1]
+    if lengths is None:
+        end = jnp.full((B,), off + T, jnp.int32)
+    else:
+        end = jnp.clip(jnp.asarray(lengths, jnp.int32), off, off + T)
+    keep = min(T, window)
+    idx = end[:, None] - keep + jnp.arange(keep)[None]  # [B, keep] abs pos
+    valid = idx >= off
+    local = jnp.clip(idx - off, 0, T - 1)
+    slots = idx % window
+    bidx = jnp.arange(B)[:, None]
+
+    def write(buf, new):
+        sel = jnp.take_along_axis(new, local[..., None, None], axis=1)
+        cur = buf[bidx, slots]
+        return buf.at[bidx, slots].set(
+            jnp.where(valid[..., None, None], sel, cur))
+
+    return {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+
+
 def _cache_abs_pos(S: int, pos, window: int):
     """Absolute position of each cache slot during decode (-1 = not valid).
 
@@ -171,18 +239,26 @@ def apply_attention(
     window: int = 0,
     rope_theta: Optional[float] = None,
     cross_kv=None,
+    lengths=None,
 ):
     """GQA/MQA attention with optional sliding window and KV cache.
 
     cross_kv: precomputed (k, v) for cross-attention (whisper decoder);
     bypasses self-KV entirely (no mask, no rope).
+
+    Batched/chunked prefill: ``pos`` (a static int) is the chunk offset and
+    ``lengths`` [B] the per-row true prompt lengths of a bucket-padded
+    batch — cache writes are offset (linear) or length-masked (rolling
+    window), and chunk queries attend to all earlier cached positions.
     """
     B, T, D = x.shape
     hd = cfg.resolved_head_dim
     H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    off = _prefill_off(pos, mode)
     h = apply_norm(p["norm"], x, cfg)
 
     q = dense(p["wq"], h).reshape(B, T, H, hd)
+    win_kabs = None  # set on the bucketed/chunked rolling-window path
     if cross_kv is None:
         k = dense(p["wk"], h).reshape(B, T, Hkv, hd)
         v = dense(p["wv"], h).reshape(B, T, Hkv, hd)
@@ -190,7 +266,7 @@ def apply_attention(
             if mode == "decode":
                 positions = _decode_positions(pos, B, T)
             else:
-                positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+                positions = jnp.broadcast_to(jnp.arange(T) + off, (B, T))
             q = rope(q, positions, rope_theta)
             k = rope(k, positions, rope_theta)
         q = constrain(q, "batch", "seq", "heads", None)
@@ -208,20 +284,52 @@ def apply_attention(
             Tk = S
         elif mode == "prefill":
             assert cache is not None
+            batched = lengths is not None or off > 0
             if window:
-                # rolling buffer: absolute position p lives at slot p % window
-                keep = min(T, window)
-                slots = jnp.arange(T - keep, T) % window
-                new_cache = {
-                    "k": cache["k"].at[:, slots].set(k[:, T - keep :]),
-                    "v": cache["v"].at[:, slots].set(v[:, T - keep :]),
-                }
+                if batched:
+                    new_cache = _window_prefill_write(
+                        cache, k, v, off=off, lengths=lengths, window=window)
+                    # attend against OLD cache (earlier chunks) + own keys,
+                    # masked on per-row absolute positions: a row's pad tail
+                    # and other rows' lengths can't leak into its window
+                    S_c = cache["k"].shape[1]
+                    prev_end = (jnp.clip(jnp.asarray(lengths, jnp.int32),
+                                         0, off)
+                                if lengths is not None
+                                else jnp.full((B,), off, jnp.int32))
+                    kabs_cache = _cache_abs_pos(S_c, prev_end - 1, window)
+                    g = off + jnp.arange(T)
+                    valid_new = _prefill_valid(off, T, lengths)
+                    if valid_new is None:
+                        valid_new = jnp.ones((B, T), bool)
+                    kabs_new = jnp.where(valid_new, g[None, :], -1)
+                    win_kabs = jnp.concatenate([kabs_cache, kabs_new], axis=1)
+                    k = jnp.concatenate([cache["k"], k], axis=1)
+                    v = jnp.concatenate([cache["v"], v], axis=1)
+                    Tk = S_c + T
+                else:
+                    # rolling buffer: absolute pos p lives at slot p % window
+                    keep = min(T, window)
+                    slots = jnp.arange(T - keep, T) % window
+                    new_cache = {
+                        "k": cache["k"].at[:, slots].set(k[:, T - keep :]),
+                        "v": cache["v"].at[:, slots].set(v[:, T - keep :]),
+                    }
+                    Tk = T
             else:
                 new_cache = {
-                    "k": lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0)),
-                    "v": lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0)),
+                    "k": lax.dynamic_update_slice(cache["k"], k,
+                                                  (0, off, 0, 0)),
+                    "v": lax.dynamic_update_slice(cache["v"], v,
+                                                  (0, off, 0, 0)),
                 }
-            Tk = T
+                if off:
+                    # chunked: queries attend to every position cached so far
+                    k = new_cache["k"][:, : off + T]
+                    v = new_cache["v"][:, : off + T]
+                    Tk = off + T
+                else:
+                    Tk = T
         else:
             Tk = T
     else:
@@ -230,7 +338,8 @@ def apply_attention(
         new_cache = cache
 
     # grouped heads: q [B, Hkv, G, T, hd]; k/v [B, Hkv, S, hd]
-    from repro.models.attention_core import attend, attend_decode
+    from repro.models.attention_core import (
+        attend, attend_decode, attend_prefill_window)
 
     G = H // Hkv
     qg = q.reshape(B, T, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
@@ -243,9 +352,12 @@ def apply_attention(
         o = attend_decode(qg, kt, vt, abs_pos=abs_pos)
     elif mode == "encode":
         o = attend(qg, kt, vt, kind="full")
+    elif win_kabs is not None:
+        o = attend_prefill_window(qg, kt, vt, qpos=off + jnp.arange(T),
+                                  kabs=win_kabs, window=window)
     else:
         o = attend(qg, kt, vt, kind="window" if window else "causal",
-                   window=window)
+                   window=window, q_off=off)
     out = o.transpose(0, 3, 1, 2, 4).reshape(B, T, H * hd)
     out = dense(p["wo"], out.astype(ACT_DTYPE))
     return constrain(out, "batch", "seq", "embed"), new_cache
@@ -283,15 +395,23 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int):
     }
 
 
-def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
+def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
+              lengths=None):
     """Multi-head latent attention (DeepSeek). The cache stores ONLY the
     compressed latent c_kv [B, S, r] + shared k_rope — the paper-faithful
     KV-compression; decode up-projects cached latents (the absorbed-weight
-    variant is a recorded §Perf hillclimb candidate)."""
+    variant is a recorded §Perf hillclimb candidate).
+
+    Chunked prefill: ``pos`` (static int) offsets rope positions and the
+    latent-cache write; chunk queries attend over all cached latents so
+    far. Bucket padding needs no masking here (linear cache + causal mask:
+    garbage latents past a row's length are never read by real queries and
+    are decode-overwritten before they become visible)."""
     m = cfg.mla
     B, T, D = x.shape
     H = cfg.n_heads
     dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    off = _prefill_off(pos, mode)
     h = apply_norm(p["norm"], x, cfg)
 
     if m.q_lora_rank:
@@ -308,7 +428,7 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
     if mode == "decode":
         positions = _decode_positions(pos, B, T)
     else:
-        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        positions = jnp.broadcast_to(jnp.arange(T) + off, (B, T))
     q_rope = rope(q_rope, positions, cfg.rope_theta)
     k_rope_new = rope(k_rope_new[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
 
@@ -324,11 +444,18 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
         if mode == "prefill":
             assert cache is not None
             new_cache = {
-                "ckv": lax.dynamic_update_slice(cache["ckv"], ckv, (0, 0, 0)),
-                "krope": lax.dynamic_update_slice(cache["krope"], k_rope_new, (0, 0, 0)),
+                "ckv": lax.dynamic_update_slice(cache["ckv"], ckv,
+                                                (0, off, 0)),
+                "krope": lax.dynamic_update_slice(cache["krope"], k_rope_new,
+                                                  (0, off, 0)),
             }
-        ckv_s, kr_s = ckv, k_rope_new
-        Tk = T
+        if mode == "prefill" and off:
+            ckv_s = new_cache["ckv"][:, : off + T]
+            kr_s = new_cache["krope"][:, : off + T]
+            Tk = off + T
+        else:
+            ckv_s, kr_s = ckv, k_rope_new
+            Tk = T
 
     from repro.models.attention_core import attend, attend_decode
 
@@ -375,7 +502,7 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
         o = attend_decode(qg, kt, vt, abs_pos=_cache_abs_pos(Tk, pos, 0),
                           scale=scale)
     else:
-        o = attend(qg, kt, vt, kind="causal", scale=scale)
+        o = attend(qg, kt, vt, kind="causal", scale=scale, q_off=off)
     out = o[:, :, 0].transpose(0, 2, 1, 3).reshape(B, T, H * dv)
     out = dense(p["wo"], out.astype(ACT_DTYPE))
     return constrain(out, "batch", "seq", "embed"), new_cache
@@ -448,7 +575,7 @@ def init_moe(key, cfg: ModelConfig):
     return p
 
 
-def apply_moe(p, x, *, cfg: ModelConfig):
+def apply_moe(p, x, *, cfg: ModelConfig, valid=None):
     """Grouped sort-based dispatch (EP): tokens are routed SHARD-LOCALLY per
     data-parallel group (leading G axis = number of 'batch' shards), so the
     argsort/scatter never crosses devices; the only cross-device movement is
@@ -457,7 +584,14 @@ def apply_moe(p, x, *, cfg: ModelConfig):
     1: replaces a global argsort whose GSPMD lowering all-gathered the full
     [N, D] activations (collective-bound, see EXPERIMENTS.md).
 
-    dispatch='global_sort' keeps the pre-iteration path for A/B."""
+    dispatch='global_sort' keeps the pre-iteration path for A/B.
+
+    ``valid`` [B, T] (bucketed batched prefill) routes pad tokens to a
+    virtual out-of-range expert so they can never STEAL capacity slots from
+    real prompt tokens; their own outputs are garbage and discarded by the
+    caller. (Capacity-factor dropping itself still depends on the batch
+    composition, so MoE batched serving is exact only modulo drops — the
+    same caveat as any capacity-bounded MoE engine.)"""
     from repro.dist.sharding import axis_extent
 
     mc = cfg.moe
@@ -486,6 +620,9 @@ def apply_moe(p, x, *, cfg: ModelConfig):
 
     C = _moe_capacity(n_loc, cfg)
     A = n_loc * K  # assignments per group
+    if valid is not None:
+        vg = valid.reshape(G, n_loc)
+        idx = jnp.where(vg[..., None], idx, E)  # pad tokens -> virtual expert
     e_flat = idx.reshape(G, A)
     w_flat = weights.reshape(G, A)
     order = jnp.argsort(e_flat, axis=-1)  # stable: within-expert order = token order
@@ -499,13 +636,16 @@ def apply_moe(p, x, *, cfg: ModelConfig):
     eidx = jnp.arange(E * C) // C
     ridx = jnp.arange(E * C) % C
     src = jnp.take_along_axis(starts, eidx[None].repeat(G, 0), axis=1) + ridx
-    valid = src < jnp.take_along_axis(starts, eidx[None].repeat(G, 0) + 1, axis=1)
+    # slot occupancy mask — deliberately NOT named `valid`: that's the
+    # [B, T] token-validity parameter, still live below
+    slot_ok = src < jnp.take_along_axis(starts, eidx[None].repeat(G, 0) + 1,
+                                        axis=1)
     src = jnp.minimum(src, A - 1)
     src_assign = jnp.take_along_axis(order, src, axis=1)  # [G, E*C] assignment id
     src_tok = src_assign // K
     rows = jnp.take_along_axis(hg, src_tok[..., None], axis=1)  # [G, E*C, D]
     rows = constrain(rows, "batch", None, None)
-    expert_in = jnp.where(valid[..., None], rows, 0).reshape(G, E, C, D)
+    expert_in = jnp.where(slot_ok[..., None], rows, 0).reshape(G, E, C, D)
     # the EP boundary: data-sharded groups -> expert-sharded buffers
     expert_in = constrain(expert_in, "batch", "experts", None, None)
     a = jax.nn.silu(
@@ -520,6 +660,8 @@ def apply_moe(p, x, *, cfg: ModelConfig):
     inv_order = jnp.argsort(order, axis=-1)  # [G, A]
     rank = inv_order - jnp.take_along_axis(starts, e_flat, axis=1)
     keep = rank < C
+    if valid is not None:
+        keep &= e_flat < E  # virtual-expert (pad) assignments contribute 0
     slot = jnp.minimum(e_flat * C + rank, E * C - 1)
     hsel = jnp.take_along_axis(h_flat, slot[..., None], axis=1)  # [G, A, D]
     hsel = constrain(hsel, "batch", None, None)
@@ -575,12 +717,21 @@ def init_mamba_cache(cfg: ModelConfig, batch: int, max_seq: int):
     }
 
 
-def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
+def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
+                lengths=None):
     """Mamba-1: GEMMs hoisted out of the recurrence; the selective scan runs
-    as lax.scan over time (compile-compact; per-step work is elementwise)."""
+    as lax.scan over time (compile-compact; per-step work is elementwise).
+
+    Bucketed/chunked prefill: ``pos`` (static int) is the chunk offset —
+    the depthwise conv is seeded from the cached tail of the previous chunk
+    — and ``lengths`` [B] gates the recurrence per row, so a bucket-padded
+    prompt's pad tail can NEVER leak into the carried state (recurrent
+    state, unlike a causally masked KV cache, would otherwise absorb every
+    pad token)."""
     sc = cfg.ssm
     B, T, D = x.shape
     di, dtr = _mamba_dims(cfg)
+    off = _prefill_off(pos, mode)
     h_in = apply_norm(p["norm"], x, cfg)
     xz = dense(p["in_proj"], h_in)
     xs, z = xz[..., :di], xz[..., di:]
@@ -594,7 +745,9 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
         conv = jnp.einsum("bkd,dk->bd", window.astype(jnp.float32),
                           p["conv_w"].astype(jnp.float32))[:, None]
     else:
-        pad = jnp.zeros((B, sc.d_conv - 1, di), xs.dtype)
+        # chunk > 0: the conv context is the previous chunk's cached tail
+        pad = (cache["conv"].astype(xs.dtype) if off
+               else jnp.zeros((B, sc.d_conv - 1, di), xs.dtype))
         xp = jnp.concatenate([pad, xs], axis=1)
         conv = sum(
             xp[:, j : j + T].astype(jnp.float32)
@@ -602,7 +755,11 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
             for j in range(sc.d_conv)
         )
         if mode == "prefill":
-            new_conv_state = xp[:, -(sc.d_conv - 1) :].astype(ACT_DTYPE)
+            if lengths is not None or off:
+                new_conv_state = _conv_tail_state(xp, off, T, lengths,
+                                                  sc.d_conv)
+            else:
+                new_conv_state = xp[:, -(sc.d_conv - 1) :].astype(ACT_DTYPE)
     u = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))  # [B, T, di] f32
 
     proj = dense(p["x_proj"], u.astype(ACT_DTYPE)).astype(jnp.float32)
@@ -620,11 +777,21 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
     # NEVER materialized over full T (17 TB/device at train_4k for 7B) —
     # da/db are formed per step inside the scan; chunk bodies are
     # checkpointed so backward stores only T/Q chunk-boundary states.
+    # Bucketed prefill gates the state update per row/step (pad steps are
+    # identities on h), keeping padded rows' carried state exact.
+    valid_tb = (_prefill_valid(off, T, lengths, time_major=True)
+                if mode == "prefill" else None)
+
     def step(h, inputs):
-        dt_t, b_t, c_t, u_t = inputs  # [B, di], [B, S], [B, S], [B, di]
+        if valid_tb is None:
+            dt_t, b_t, c_t, u_t = inputs  # [B, di], [B, S], [B, S], [B, di]
+        else:
+            dt_t, b_t, c_t, u_t, v_t = inputs
         da_t = jnp.exp(dt_t[..., None] * A)  # [B, di, S]
         db_t = (dt_t * u_t)[..., None] * b_t[:, None, :]
-        h = da_t * h + db_t
+        h_new = da_t * h + db_t
+        h = h_new if valid_tb is None else jnp.where(v_t[:, None, None],
+                                                     h_new, h)
         y = jnp.einsum("bds,bs->bd", h, c_t)
         return h, y
 
@@ -634,6 +801,8 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
         Cc.swapaxes(0, 1),
         u.swapaxes(0, 1),  # [T, B, di]
     )
+    if valid_tb is not None:
+        xs = xs + (valid_tb,)
     Q = 64  # chunk length
     if T % Q == 0 and T > Q:
         chunked = jax.tree.map(lambda a: a.reshape(T // Q, Q, *a.shape[1:]), xs)
@@ -684,10 +853,15 @@ def init_rglru_cache(cfg: ModelConfig, batch: int, max_seq: int):
     }
 
 
-def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
+def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
+                lengths=None):
+    """RG-LRU block. Bucketed/chunked prefill mirrors :func:`apply_mamba`:
+    ``pos`` (static int) seeds the conv from the previous chunk's cached
+    tail, ``lengths`` gates the recurrence so pad steps hold the state."""
     rc = cfg.rglru
     B, T, D = x.shape
     w = rc.lru_width or cfg.d_model
+    off = _prefill_off(pos, mode)
     h_in = apply_norm(p["norm"], x, cfg)
     gate = jax.nn.gelu(dense(p["in_gate"], h_in))
     u = dense(p["in_x"], h_in)
@@ -700,10 +874,15 @@ def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
             "bkd,dk->bd", windowv.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
         )[:, None] + p["conv_b"].astype(jnp.float32)
     else:
-        pad = jnp.zeros((B, rc.d_conv - 1, w), u.dtype)
+        pad = (cache["conv"].astype(u.dtype) if off
+               else jnp.zeros((B, rc.d_conv - 1, w), u.dtype))
         up = jnp.concatenate([pad, u], axis=1)
         if mode == "prefill":
-            new_conv_state = up[:, -(rc.d_conv - 1) :].astype(ACT_DTYPE)
+            if lengths is not None or off:
+                new_conv_state = _conv_tail_state(up, off, T, lengths,
+                                                  rc.d_conv)
+            else:
+                new_conv_state = up[:, -(rc.d_conv - 1) :].astype(ACT_DTYPE)
         u = sum(
             up[:, j : j + T].astype(jnp.float32) * p["conv_w"][:, j].astype(jnp.float32)
             for j in range(rc.d_conv)
@@ -720,12 +899,22 @@ def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train"):
 
     h0 = cache["h"] if cache is not None else jnp.zeros((B, w), jnp.float32)
 
+    valid_tb = (_prefill_valid(off, T, lengths, time_major=True)
+                if mode == "prefill" else None)
+
     def step(h, ab):
-        a_t, x_t = ab
-        h = a_t * h + x_t
+        if valid_tb is None:
+            a_t, x_t = ab
+            h = a_t * h + x_t
+        else:
+            a_t, x_t, v_t = ab
+            h = jnp.where(v_t[:, None], a_t * h + x_t, h)
         return h, h
 
-    hT, hs = lax.scan(step, h0, (a.swapaxes(0, 1), inp.swapaxes(0, 1)))
+    scan_xs = (a.swapaxes(0, 1), inp.swapaxes(0, 1))
+    if valid_tb is not None:
+        scan_xs = scan_xs + (valid_tb,)
+    hT, hs = lax.scan(step, h0, scan_xs)
     rec = hs.swapaxes(0, 1).astype(ACT_DTYPE)  # [B, T, w]
     out = dense(p["out"], rec * gate)
     new_cache = None

@@ -8,10 +8,40 @@
   reference.PerSlotEngine  the pre-batching per-slot baseline (A/B tests,
                          throughput benchmarks)
   ft_logits              the fused entangled int8 logits projection and its
-                         batched-decode entry (ft_logits_decode)
+                         batched-decode / batched-prefill entries
+                         (ft_logits_decode, ft_logits_prefill)
+
+Prefill pipeline (admission hot path)
+-------------------------------------
+Admission runs as a bucketed, chunked batched prefill, never one batch-1
+call per request:
+
+  * **buckets** — queued prompts are padded to a small geometric set of
+    length buckets (``ServeConfig.prefill_buckets``; default 8, 16, 32,
+    ..., max_seq) and all same-bucket admits prefill in ONE batched
+    [prefill_batch, bucket] call. The prefill program traces at most once
+    per (bucket, chunk) shape; prompts longer than the largest bucket are
+    rejected loudly at ``submit()``.
+  * **chunks** — ``ServeConfig.prefill_chunk > 0`` splits each bucket into
+    fixed-size chunks, ONE chunk per engine step, interleaved with the
+    batched decode call (Sarathi-style), so admitting a long prompt batch
+    never stalls decode latency of active slots.
+  * **census -> warmup** — the engine records every admission call's
+    BUCKET shape (rows, padded length) in ``census['prefill']`` and, with
+    ``blocks='auto'``, sweeps the entangled head GEMM's block sizes at
+    startup for decode and prefill-admission shapes alike
+    (``ServeEngine.warm_autotune``), so ``blocks='auto'`` inside a traced
+    prefill or decode step is always a pure cache hit.
+  * **protection** — with ``ft_mode='entangle'`` the first token of every
+    admitted request is projected through the same fused entangled int8
+    kernel (and the same startup plan) as decode
+    (:func:`repro.serve.ft_logits.ft_logits_prefill`), so a fail-stop
+    injected during admission rolls forward in-kernel, bit-identically.
 """
-from repro.serve.engine import Request, ServeConfig, ServeEngine
-from repro.serve.ft_logits import ft_logits, ft_logits_decode, quantize_head
+from repro.serve.engine import (Request, ServeConfig, ServeEngine,
+                                geometric_buckets)
+from repro.serve.ft_logits import (ft_logits, ft_logits_decode,
+                                   ft_logits_prefill, quantize_head)
 from repro.serve.reference import PerSlotEngine
 
 __all__ = [
@@ -21,5 +51,7 @@ __all__ = [
     "ServeEngine",
     "ft_logits",
     "ft_logits_decode",
+    "ft_logits_prefill",
+    "geometric_buckets",
     "quantize_head",
 ]

@@ -1,5 +1,5 @@
 """Batched continuous-batching serving engine with the entangled logits
-head on the real hot path.
+head on the real hot path — decode AND admission.
 
 One engine step issues ONE jitted decode call over the whole slot pool:
 
@@ -9,26 +9,44 @@ One engine step issues ONE jitted decode call over the whole slot pool:
     an int32 position VECTOR [B]); admission and eviction only flip values
     in the position/active arrays, never shapes, so the decode program
     compiles once and is never retraced as traffic churns;
-  * admission prefills a request at batch 1 (retraced per prompt length,
-    like any bucketed prefill), then scatters the fresh slot cache into the
-    batched cache with a jitted dynamic-slice insert;
-  * slot recycling is explicit: a finished slot's cache row is overwritten
-    with zeros, so no tenant can observe a predecessor's KV or recurrent
-    state.
+  * slot recycling is explicit: finished slots' cache rows are zeroed (one
+    batched scatter per step, not one insert per request), so no tenant can
+    observe a predecessor's KV or recurrent state.
+
+Admission is a bucketed, chunked batched prefill pipeline (NOT one batch-1
+call per request):
+
+  * queued prompts are padded to a small geometric set of length buckets
+    (``ServeConfig.prefill_buckets``; default 8, 16, 32, ..., max_seq) and
+    all same-bucket admits prefill in ONE batched [Bp, T_bucket] call via
+    the model's ``prefill_chunk`` contract (per-row true lengths keep
+    rolling-window and recurrent caches exact under padding) — the prefill
+    program retraces at most once per (bucket, chunk) shape, never per
+    prompt length;
+  * long prompts are split into fixed-size chunks
+    (``ServeConfig.prefill_chunk``; Sarathi/vLLM-style): each engine step
+    advances the pending admission by ONE chunk and still runs the full
+    decode step, so decode latency stays flat while a long prompt batch is
+    being admitted;
+  * the whole admission batch's filled caches are scattered into their
+    slots in ONE jitted batched row scatter; the first generated tokens
+    come from the gathered per-row last-prompt hidden states.
 
 Fault tolerance (the paper's technique in the serving path): with
-``ft_mode='entangle'`` the final logits projection of EVERY decode step runs
-as the fused entangled int8 GEMM over M request groups
-(serve/ft_logits.ft_logits_decode), slots mapped round-robin to groups
-(slot -> group = slot % M). ``step(failed_group=r)`` injects a fail-stop
-into group r's compute; the in-kernel roll-forward recovers its logits from
-the other M-1 groups' entangled accumulators, so decoded tokens are
-bit-identical with and without the failure — no request observes it.
+``ft_mode='entangle'`` the final logits projection of EVERY decode step —
+and of every admission batch's first token — runs as the fused entangled
+int8 GEMM over M request groups (serve/ft_logits), slots mapped round-robin
+to groups (slot -> group = slot % M). ``step(failed_group=r)`` injects a
+fail-stop into group r's compute (prefill head included); the in-kernel
+roll-forward recovers its logits from the other M-1 groups' entangled
+accumulators, so decoded tokens are bit-identical with and without the
+failure — no request observes it.
 
 Autotune warmup contract: with ``blocks='auto'`` the engine sweeps the head
-GEMM's block sizes at startup (``warm_autotune``) for its decode shape
-census, so the in-jit ``blocks='auto'`` resolution is a pure cache hit —
-sweeps must never run inside a traced decode step.
+GEMM's block sizes at startup (``warm_autotune``) for its decode AND
+prefill-admission shape census, so the in-jit ``blocks='auto'`` resolution
+is a pure cache hit — sweeps must never run inside a traced decode step or
+a traced prefill.
 
 On hosts with more than one device the decode step traces under
 ``dist.sharding.serve_mesh()``, sharding the slot batch (and the head GEMM)
@@ -38,7 +56,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -49,8 +67,23 @@ from repro.core.plan import make_plan
 from repro.dist import sharding
 from repro.kernels import ops as kops
 from repro.models.api import get_model
+from repro.models.layers import ACT_DTYPE
 from repro.models.transformer import readout_scale
-from repro.serve.ft_logits import ft_logits_decode, quantize_head
+from repro.serve.ft_logits import (ft_logits_decode, ft_logits_prefill,
+                                   quantize_head)
+
+
+def geometric_buckets(max_seq: int, base: int = 8) -> tuple:
+    """Default prefill length buckets: powers of two from ``base`` up,
+    capped with ``max_seq`` itself — a small set, so the batched prefill
+    retraces a handful of times total, never per prompt length."""
+    out = []
+    b = base
+    while b < max_seq:
+        out.append(b)
+        b *= 2
+    out.append(max_seq)
+    return tuple(out)
 
 
 @dataclasses.dataclass
@@ -64,6 +97,10 @@ class ServeConfig:
     # head-GEMM block sizes: None | dict | "auto" (autotuned at startup)
     blocks: Optional[object] = None
     use_pallas: bool = True  # entangled head via Pallas (False: XLA einsum)
+    # -- admission (bucketed, chunked batched prefill) -----------------------
+    prefill_buckets: Optional[Sequence[int]] = None  # None = geometric set
+    prefill_chunk: int = 0  # >0: chunk prompts, one chunk per engine step
+    prefill_batch: int = 0  # admission batch rows; 0 = max_batch
 
 
 @dataclasses.dataclass
@@ -83,8 +120,6 @@ class ServeEngine:
         B, S = scfg.max_batch, scfg.max_seq
         # THE slot-batched cache: one pytree, slot i = batch row i
         self.cache = self.model.init_cache(cfg, B, S)
-        # zero slot template: source for admission prefills and recycling
-        self._fresh_slot = self.model.init_cache(cfg, 1, S)
         self.slots: list[Optional[dict]] = [None] * B
         self.queue: list[Request] = []
         self.done: list[Request] = []
@@ -92,14 +127,39 @@ class ServeEngine:
         self.last_tok = np.zeros(B, np.int32)
         self.census: dict[str, dict] = {"prefill": {}, "decode": {}}
         self.decode_calls = 0  # jitted decode invocations (one per step)
+        self.prefill_calls = 0  # jitted prefill-chunk invocations
         self.mesh = sharding.serve_mesh()
+
+        # admission pipeline configuration
+        self.buckets = tuple(sorted(set(
+            int(b) for b in (scfg.prefill_buckets
+                             or geometric_buckets(scfg.max_seq)))))
+        if self.buckets[0] < 1 or self.buckets[-1] > scfg.max_seq:
+            raise ValueError(
+                f"prefill_buckets {self.buckets} must lie in [1, "
+                f"max_seq={scfg.max_seq}]")
+        if scfg.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got "
+                             f"{scfg.prefill_chunk}")
+        self.Bp = scfg.prefill_batch or B
+        if not 1 <= self.Bp <= B:
+            # the batched row scatter maps every admission row to a DISTINCT
+            # slot (pad rows write back the slot's own content), which needs
+            # Bp <= max_batch; rows beyond the slot pool could never land
+            raise ValueError(
+                f"prefill_batch={self.Bp} must be in [1, max_batch={B}]")
+        # zero admission-batch template: prefill start state AND the zeros
+        # source for batched slot recycling (invariant: free slot = zeros)
+        self._fresh_prefill = self.model.init_cache(cfg, self.Bp, S)
+        self._pending: Optional[dict] = None  # in-flight admission batch
+        self._dirty: list[int] = []  # freed slots awaiting batched zeroing
 
         if scfg.ft_mode == "entangle":
             if B % scfg.ft_M:
                 raise ValueError(
                     f"max_batch={B} must be divisible by ft_M={scfg.ft_M}")
-            # plan reuse: made ONCE, every decode step and autotune key
-            # shares it (no per-step (l, k) re-planning)
+            # plan reuse: made ONCE, shared by every decode step, every
+            # admission-batch head projection and every autotune key
             self.plan = make_plan(scfg.ft_M, scfg.ft_w)
             self.head_q, self.w_scale = quantize_head(
                 self.model.head_weights(params, cfg))
@@ -111,10 +171,18 @@ class ServeEngine:
         # it in place instead of copying the engine's largest buffer every
         # token (donation is a no-op warning on CPU, so gate it)
         donate = jax.default_backend() != "cpu"
-        self._prefill = jax.jit(
-            lambda p, b, c: self.model.prefill(p, b, self.cfg, c))
-        self._insert = jax.jit(self._insert_impl,
-                               donate_argnums=(0,) if donate else ())
+        self._scatter_rows = jax.jit(self._scatter_rows_impl,
+                                     donate_argnums=(0,) if donate else ())
+        # NO donation on chunk 0: it is fed the shared _fresh_prefill
+        # template, which must survive every admission. Continuation
+        # chunks exclusively own their cache/h_last carry — donate them.
+        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
+                                      static_argnames=("pos0",))
+        self._prefill_chunk_cont = jax.jit(
+            self._prefill_chunk_impl, static_argnames=("pos0",),
+            donate_argnums=(2, 4) if donate else ())
+        self._prefill_head = jax.jit(self._prefill_head_impl,
+                                     static_argnames=("failed_group",))
         self._decode = jax.jit(self._decode_impl,
                                static_argnames=("failed_group",),
                                donate_argnums=(1,) if donate else ())
@@ -122,9 +190,15 @@ class ServeEngine:
             self.warm_autotune()
 
     def submit(self, req: Request):
-        # loud capacity check: past max_seq the vector cache scatter would
-        # silently DROP K/V writes (and the reference engine would clamp),
-        # turning overflow into wrong tokens instead of an error
+        # loud capacity checks: past max_seq the vector cache scatter would
+        # silently DROP K/V writes, and a prompt longer than the largest
+        # bucket would either retrace per length or OOM the bucket planner —
+        # both turn overflow into wrong tokens / stalls instead of an error
+        if len(req.prompt) > self.buckets[-1]:
+            raise ValueError(
+                f"request rid={req.rid} prompt length {len(req.prompt)} > "
+                f"largest prefill bucket {self.buckets[-1]} (configure "
+                f"prefill_buckets / raise max_seq)")
         need = len(req.prompt) + req.max_new
         if need > self.scfg.max_seq:
             raise ValueError(
@@ -132,6 +206,14 @@ class ServeEngine:
                 f"(prompt {len(req.prompt)} + max_new {req.max_new}) "
                 f"> max_seq={self.scfg.max_seq}")
         self.queue.append(req)
+
+    def _bucket_for(self, req: Request) -> int:
+        """Smallest configured bucket covering the prompt."""
+        n = len(req.prompt)
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise AssertionError("unreachable: submit() rejects oversize")
 
     def _default_head_blocks(self):
         """Head-GEMM block sizes when the user gave none: the per-group
@@ -148,12 +230,79 @@ class ServeEngine:
 
     # -- jitted programs ------------------------------------------------------
 
-    def _insert_impl(self, cache, slot_cache, i):
-        """Scatter a batch-1 slot cache into batch row ``i`` of the batched
-        cache. ``i`` is traced — admit/evict never retraces."""
+    def _pad_sids(self, taken: list) -> tuple:
+        """(sids [Bp], valid [Bp]) for ``_scatter_rows``: the ``taken``
+        slots first, padded to Bp rows with DISTINCT unused slots (pad rows
+        are write-back no-ops, and distinctness keeps the scatter
+        order-independent). Single source of the invariant for admission
+        scatter and recycle flush; requires len(taken) <= Bp <= max_batch
+        (enforced at init)."""
+        spare = [s for s in range(self.scfg.max_batch) if s not in taken]
+        sids = np.asarray(taken + spare[: self.Bp - len(taken)], np.int32)
+        valid = np.arange(self.Bp) < len(taken)
+        return jnp.asarray(sids), jnp.asarray(valid)
+
+    def _scatter_rows_impl(self, cache, pcache, sids, valid):
+        """Scatter ALL rows of an admission-batch (or zeros-template)
+        pytree into the batched cache in ONE call: row j lands in slot
+        ``sids[j]``; rows with ``valid[j] == False`` write the slot's own
+        gathered content back (a no-op), so one trace serves every
+        admission size and every recycle flush. ``sids``/``valid`` are
+        traced; the caller guarantees sids are DISTINCT slots."""
         def ins(big, small):
-            return jax.lax.dynamic_update_slice_in_dim(big, small, i, axis=1)
-        return jax.tree.map(ins, cache, slot_cache)
+            cur = jnp.take(big, sids, axis=1)
+            v = valid.reshape((1, -1) + (1,) * (big.ndim - 2))
+            return big.at[:, sids].set(jnp.where(v, small, cur))
+        return jax.tree.map(ins, cache, pcache)
+
+    def _prefill_chunk_impl(self, params, tokens, cache, lengths, h_last,
+                            pos0: int = 0):
+        """ONE chunk of the batched admission prefill: tokens [Bp, C] at
+        absolute positions pos0..pos0+C-1, per-row true ``lengths``.
+        Captures each row's last-prompt hidden state in ``h_last`` as soon
+        as the chunk containing position lengths-1 is processed."""
+        ctx = (sharding.axis_rules(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            h, new_cache = self.model.prefill_chunk(
+                params, tokens, self.cfg, cache, pos0=pos0, lengths=lengths)
+            C = tokens.shape[1]
+            idx = lengths - 1 - pos0
+            in_chunk = (idx >= 0) & (idx < C)
+            h_at = jnp.take_along_axis(
+                h, jnp.clip(idx, 0, C - 1)[:, None, None], axis=1)[:, 0]
+            h_last = jnp.where(in_chunk[:, None], h_at, h_last)
+            return h_last, new_cache
+
+    def _head_logits(self, params, h, mask, head, failed_group, ft_fn):
+        """Shared head epilogue of decode steps and admission batches:
+        rows where ``mask`` is False are zeroed so their garbage cannot
+        poison the shared activation quantization scale; with ft on,
+        ``ft_fn`` (ft_logits_decode / ft_logits_prefill) runs the fused
+        entangled int8 GEMM with the startup plan, scaled back to
+        head_project's muP readout temperature (argmax-neutral; keeps ft
+        and plain logits on one scale)."""
+        if self.scfg.ft_mode != "entangle":
+            return self.model.head_project(params, h, self.cfg)
+        head_q, w_scale = head
+        hf = jnp.where(mask[:, None], h.astype(jnp.float32), 0.0)
+        logits = ft_fn(
+            hf, head_q, w_scale, plan=self.plan, failed_group=failed_group,
+            use_pallas=self.scfg.use_pallas, blocks=self._head_blocks)
+        return logits * readout_scale(self.cfg)
+
+    def _prefill_head_impl(self, params, h_last, valid, head,
+                           failed_group: Optional[int] = None):
+        """First generated token of every admission row: project the
+        gathered last-prompt hidden states. With ft on this runs the SAME
+        fused entangled int8 GEMM (and plan) as the decode head, so a
+        fail-stop during admission rolls forward in-kernel."""
+        ctx = (sharding.axis_rules(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            logits = self._head_logits(params, h_last, valid, head,
+                                       failed_group, ft_logits_prefill)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def _decode_impl(self, params, cache, last_tok, pos, active, head,
                      failed_group: Optional[int] = None):
@@ -169,41 +318,87 @@ class ServeEngine:
             tok = last_tok[:, None]
             h, new_cache = self.model.decode_hidden(
                 params, tok, cache, pos, self.cfg)
-            if self.scfg.ft_mode == "entangle":
-                head_q, w_scale = head
-                # inactive rows are zeroed so their garbage cannot poison
-                # the shared activation quantization scale
-                hf = jnp.where(active[:, None], h.astype(jnp.float32), 0.0)
-                logits = ft_logits_decode(
-                    hf, head_q, w_scale, plan=self.plan,
-                    failed_group=failed_group,
-                    use_pallas=self.scfg.use_pallas,
-                    blocks=self._head_blocks)
-                # match head_project's muP readout temperature (argmax-
-                # neutral; keeps ft and plain logits on one scale)
-                logits = logits * readout_scale(self.cfg)
-            else:
-                logits = self.model.head_project(params, h, self.cfg)
+            logits = self._head_logits(params, h, active, head,
+                                       failed_group, ft_logits_decode)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             return nxt, new_cache
 
-    # -- engine steps ---------------------------------------------------------
+    # -- admission pipeline ---------------------------------------------------
 
     def _census_bump(self, kind: str, sig: tuple):
         self.census[kind][sig] = self.census[kind].get(sig, 0) + 1
 
-    def _admit(self, i: int, req: Request):
-        tokens = jnp.asarray(req.prompt[None, :].astype(np.int32))
-        logits, slot_cache = self._prefill(
-            self.params, {"tokens": tokens}, self._fresh_slot)
-        self._census_bump("prefill", (1, int(tokens.shape[1])))
-        tok = int(jnp.argmax(logits[0], -1))
-        self.cache = self._insert(self.cache, slot_cache, jnp.int32(i))
-        self.slots[i] = {"req": req, "toks": [tok]}
-        self.pos[i] = len(req.prompt)
-        self.last_tok[i] = tok
-        if req.max_new <= 1:
-            self._finish(i)
+    def _plan_admission(self):
+        """Form the next admission batch: pick the first queued request's
+        bucket, then batch every same-bucket queued request (FIFO within
+        the bucket) up to the free-slot / admission-row budget."""
+        if self._pending is not None or not self.queue:
+            return
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free:
+            return
+        b0 = self._bucket_for(self.queue[0])
+        budget = min(len(free), self.Bp)
+        take, rest = [], []
+        for req in self.queue:
+            if len(take) < budget and self._bucket_for(req) == b0:
+                take.append(req)
+            else:
+                rest.append(req)
+        self.queue = rest
+        tokens = np.zeros((self.Bp, b0), np.int32)
+        lengths = np.zeros(self.Bp, np.int32)
+        for j, req in enumerate(take):
+            tokens[j, : len(req.prompt)] = req.prompt
+            lengths[j] = len(req.prompt)
+        self._pending = {
+            "reqs": list(zip(free[: len(take)], take)),
+            "tokens": jnp.asarray(tokens),
+            "lengths": jnp.asarray(lengths),
+            "cache": self._fresh_prefill,
+            "h_last": jnp.zeros((self.Bp, self.cfg.d_model), ACT_DTYPE),
+            "pos0": 0,
+            "bucket": b0,
+        }
+
+    def _advance_prefill(self, failed_group: Optional[int]):
+        """Run ONE chunk of the pending admission batch; on the last chunk,
+        project first tokens and scatter each row's cache into its slot."""
+        p = self._pending
+        assert p is not None
+        Tb = p["bucket"]
+        C = self.scfg.prefill_chunk or Tb
+        pos0 = p["pos0"]
+        sz = min(C, Tb - pos0)
+        chunk_fn = self._prefill_chunk if pos0 == 0 else \
+            self._prefill_chunk_cont
+        p["h_last"], p["cache"] = chunk_fn(
+            self.params, p["tokens"][:, pos0 : pos0 + sz], p["cache"],
+            p["lengths"], p["h_last"], pos0=pos0)
+        self.prefill_calls += 1
+        p["pos0"] = pos0 + sz
+        if p["pos0"] < Tb:
+            return
+        # admission batch complete: first tokens + ONE batched cache scatter
+        valid = np.zeros(self.Bp, bool)
+        valid[: len(p["reqs"])] = True
+        head = (None if self.scfg.ft_mode != "entangle"
+                else (self.head_q, self.w_scale))
+        first = np.asarray(self._prefill_head(
+            self.params, p["h_last"], jnp.asarray(valid), head,
+            failed_group=failed_group))
+        sids, vmask = self._pad_sids([i for i, _ in p["reqs"]])
+        self.cache = self._scatter_rows(self.cache, p["cache"], sids, vmask)
+        for j, (i, req) in enumerate(p["reqs"]):
+            self.slots[i] = {"req": req, "toks": [int(first[j])]}
+            self.pos[i] = len(req.prompt)
+            self.last_tok[i] = first[j]
+            if req.max_new <= 1:
+                self._finish(i)
+        # census records BUCKET shapes (admission rows, padded length) —
+        # the traced call signature — never raw prompt lengths
+        self._census_bump("prefill", (self.Bp, Tb))
+        self._pending = None
 
     def _finish(self, i: int):
         s = self.slots[i]
@@ -213,24 +408,46 @@ class ServeEngine:
         self._recycle(i)
 
     def _recycle(self, i: int):
-        """Explicit slot recycling: zero the slot's cache row so no later
-        tenant (or FT quantization scan) can see the old request's state.
+        """Explicit slot recycling: mark the slot free and queue its cache
+        row for zeroing, so no later tenant (or FT quantization scan) can
+        see the old request's state.
 
         Admission would overwrite the row anyway, so this buys the
-        invariant "a free slot holds zeros" at the cost of one jitted
-        insert per FINISHED REQUEST (not per token) — kept for the loud
-        state boundary, cheap relative to the request's decode steps."""
+        invariant "a free slot holds zeros between engine steps" — the
+        zeroing itself is DEFERRED and flushed once per step in one batched
+        scatter (``_flush_recycled``), never one jitted insert per finished
+        request."""
         self.slots[i] = None
         self.pos[i] = 0
         self.last_tok[i] = 0
-        self.cache = self._insert(self.cache, self._fresh_slot, jnp.int32(i))
+        self._dirty.append(i)
+
+    def _flush_recycled(self):
+        """Zero every freed slot's cache row in one batched scatter per Bp
+        slots. Slots re-admitted later in the same step are skipped (their
+        row now belongs to a new tenant)."""
+        dirty = sorted({i for i in self._dirty if self.slots[i] is None})
+        self._dirty = []
+        while dirty:
+            batch, dirty = dirty[: self.Bp], dirty[self.Bp :]
+            sids, vmask = self._pad_sids(batch)
+            self.cache = self._scatter_rows(
+                self.cache, self._fresh_prefill, sids, vmask)
 
     def step(self, failed_group: Optional[int] = None) -> int:
-        """One engine step: admit + prefill queued requests into free slots,
-        then ONE batched jitted decode call for all active slots. Returns
-        the number of active slots. ``failed_group`` injects a fail-stop
-        into that entangled group's head-GEMM compute for this step; the
-        kernel rolls it forward, so outputs are unchanged."""
+        """One engine step: advance the bucketed admission pipeline, then
+        ONE batched jitted decode call for all active slots. Returns the
+        number of active slots.
+
+        Unchunked (``prefill_chunk=0``): every bucket batch completes in a
+        single call, and the step keeps admitting further batches while
+        free slots and queued requests remain. Chunked: at most ONE prefill
+        chunk runs per step before the decode call, so a long prompt batch
+        being admitted never stalls the decode latency of active slots.
+
+        ``failed_group`` injects a fail-stop into that entangled group's
+        head-GEMM compute for this step — decode and admission projections
+        alike; the kernel rolls it forward, so outputs are unchanged."""
         if failed_group is not None:
             if self.scfg.ft_mode != "entangle":
                 raise ValueError("failed_group requires ft_mode='entangle'")
@@ -240,9 +457,14 @@ class ServeEngine:
                 raise ValueError(
                     f"failed_group={failed_group} out of range for "
                     f"ft_M={self.scfg.ft_M}")
-        for i in range(len(self.slots)):
-            if self.slots[i] is None and self.queue:
-                self._admit(i, self.queue.pop(0))
+        while True:
+            if self._pending is None:
+                self._plan_admission()
+            if self._pending is None:
+                break
+            self._advance_prefill(failed_group)
+            if self.scfg.prefill_chunk:
+                break  # one chunk per step: decode latency stays flat
         active_idx = [i for i, s in enumerate(self.slots) if s is not None]
         if active_idx:
             B = self.scfg.max_batch
@@ -264,14 +486,17 @@ class ServeEngine:
                 self.last_tok[i] = nxt[i]
                 if len(s["toks"]) >= s["req"].max_new:
                     self._finish(i)
+        self._flush_recycled()
         return sum(s is not None for s in self.slots)
 
     def run_to_completion(self, max_steps: int = 1000,
                           failed_group: Optional[int] = None) -> list[Request]:
         """Drain the queue. ``failed_group`` injects the fail-stop on EVERY
-        decode step — the strongest roll-forward drill."""
+        decode step and admission projection — the strongest roll-forward
+        drill."""
         steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
+        while (self.queue or self._pending is not None
+               or any(s is not None for s in self.slots)) \
                 and steps < max_steps:
             self.step(failed_group=failed_group)
             steps += 1
@@ -281,14 +506,21 @@ class ServeEngine:
 
     def warm_autotune(self) -> dict:
         """Warm the kernel autotune cache for the engine's head-GEMM shape
-        census (the ROADMAP contract). Sweeps run HERE, eagerly; the in-jit
-        ``blocks='auto'`` resolution then only ever cache-hits. No-op unless
-        the entangled head is on and ``blocks == 'auto'``."""
+        census — decode AND prefill-admission shapes (the ROADMAP contract).
+        Sweeps run HERE, eagerly; the in-jit ``blocks='auto'`` resolution
+        then only ever cache-hits, whether it fires inside the traced
+        decode step or inside a traced prefill-head projection. No-op
+        unless the entangled head is on and ``blocks == 'auto'``."""
         if self.scfg.ft_mode != "entangle" or self.scfg.blocks != "auto":
             return {}
         M, B = self.plan.M, self.scfg.max_batch
         D, V = self.head_q.shape
-        won = kops.warm_entangled_matmul(M, B // M, D, V, self.plan,
-                                         fuse_epilogue=True)
-        self.census.setdefault("head_gemm", {})[(M, B // M, D, V)] = won
+        # prefill admission batches are padded to a multiple of M
+        # (ft_logits_prefill), so the per-group row count is ceil(Bp / M)
+        shapes = {(M, B // M, D, V), (M, -(-self.Bp // M), D, V)}
+        won = {}
+        for shape in sorted(shapes):
+            won[shape] = kops.warm_entangled_matmul(*shape, self.plan,
+                                                    fuse_epilogue=True)
+            self.census.setdefault("head_gemm", {})[shape] = won[shape]
         return won

@@ -17,7 +17,10 @@ outputs).
 slots map round-robin to groups (slot -> group = slot % M) so every group
 stays populated under continuous batching, and the
 :class:`~repro.core.plan.EntanglePlan` is made once at engine startup and
-reused every step.
+reused every step. :func:`ft_logits_prefill` is the admission-time entry —
+the first token of every bucketed batched prefill goes through the same
+fused kernel (and the same startup plan), so a fail-stop during prefill
+rolls forward exactly like one during decode.
 
 Returns dequantized float logits. Integer recovery is EXACT (tests assert
 bit-equality under injected failure); the quantization itself trades logits
@@ -136,3 +139,39 @@ def ft_logits_decode(
         failed_group=failed_group, use_pallas=use_pallas,
         fuse_epilogue=fuse_epilogue, blocks=blocks)
     return logits[inv]
+
+
+def ft_logits_prefill(
+    h: jax.Array,  # [n, D] per-request last-prompt hidden states
+    head_q: jax.Array,  # [D, V] int8-range int32 weights
+    w_scale: jax.Array,
+    *,
+    plan: EntanglePlan,
+    failed_group: Optional[int] = None,
+    use_pallas: bool = True,
+    fuse_epilogue: bool = True,
+    blocks=None,
+) -> jax.Array:
+    """Admission-time entry: project the last-prompt hidden states gathered
+    from a bucketed batched prefill through the SAME fused entangled kernel
+    (and the same startup :class:`~repro.core.plan.EntanglePlan`) as decode,
+    so a fail-stop injected while a prompt batch is being admitted rolls
+    forward in-kernel and the first generated token is unchanged.
+
+    Rows map round-robin to groups like decode (row -> group = row % M).
+    An admission batch need not divide into M groups — the batch is padded
+    with zero rows (exact: zeros entangle to zeros and cannot perturb any
+    other stream's accumulator, nor the shared activation scale) and the
+    pad logits are sliced off. The caller must zero any garbage rows (empty
+    admission slots) before calling, exactly like the decode path's
+    ``active`` masking, so they cannot poison the shared quantization scale.
+    """
+    n = h.shape[0]
+    pad = (-n) % plan.M
+    if pad:
+        h = jnp.concatenate(
+            [h, jnp.zeros((pad, h.shape[1]), h.dtype)], axis=0)
+    logits = ft_logits_decode(
+        h, head_q, w_scale, plan=plan, failed_group=failed_group,
+        use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks)
+    return logits[:n]

@@ -1,0 +1,174 @@
+"""Bucketed, chunked batched prefill pipeline invariants.
+
+  * bucket-padding bitwise equivalence: the bucketed batched admission
+    (padded [Bp, T_bucket] prefill, any bucket mix, chunked or not)
+    produces tokens bit-identical to the per-request batch-1 baseline
+    (serve/reference.py) — including rolling-window attention caches and
+    recurrent (Mamba) state, which only stay exact because prefill_chunk
+    masks cache writes / gates state updates by per-row true lengths;
+  * with ft_mode='entangle' a fail-stop injected during a chunked,
+    bucketed prefill (and every decode step) rolls forward in-kernel:
+    all generated tokens bit-identical to the healthy run, for every
+    group r;
+  * prompts longer than the largest bucket are rejected loudly at
+    submit();
+  * census records BUCKET shapes (admission rows, padded length), not raw
+    prompt lengths;
+  * chunked admission interleaves with decode: active slots keep decoding
+    every step while a long prompt batch is being prefilled;
+  * warm_autotune covers the prefill-admission head shape, so
+    blocks='auto' never sweeps inside a traced prefill.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve import PerSlotEngine, Request, ServeConfig, ServeEngine
+
+RNG = np.random.default_rng(7)
+_PARAMS_CACHE: dict = {}
+
+
+def _setup(arch: str, max_seq: int = 48):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+        _PARAMS_CACHE[arch] = (cfg, model, params)
+    return _PARAMS_CACHE[arch]
+
+
+def _ragged_prompts(cfg, lengths):
+    return [RNG.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+            for n in lengths]
+
+
+def _run(engine_cls, cfg, scfg, params, prompts, max_new=4,
+         failed_group=None):
+    eng = engine_cls(cfg, scfg, params)
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=p.copy(), max_new=max_new))
+    if engine_cls is ServeEngine:
+        eng.run_to_completion(max_steps=500, failed_group=failed_group)
+    else:
+        eng.run_to_completion(max_steps=500)
+    return {r.rid: np.asarray(r.out) for r in eng.done}, eng
+
+
+# lengths spanning several buckets of the default geometric set for
+# max_seq=48 -> (8, 16, 32, 48); 20/25 exceed recurrentgemma's smoke
+# window (16), so bucket padding must not clobber the rolling buffer
+LENGTHS = [3, 20, 7, 12, 25, 5, 9, 17]
+
+
+@pytest.mark.parametrize("chunk", [0, 8])
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b"])
+def test_bucketed_prefill_bit_identical_to_per_request(arch, chunk):
+    """Any bucket mix, chunked or whole-bucket: greedy outputs must match
+    the per-request batch-1 admission baseline bitwise."""
+    cfg, _, params = _setup(arch)
+    prompts = _ragged_prompts(cfg, LENGTHS)
+    ref, _ = _run(PerSlotEngine, cfg,
+                  ServeConfig(max_batch=4, max_seq=48), params, prompts)
+    out, eng = _run(ServeEngine, cfg,
+                    ServeConfig(max_batch=4, max_seq=48,
+                                prefill_chunk=chunk), params, prompts)
+    assert set(ref) == set(out) == set(range(len(LENGTHS)))
+    for r in ref:
+        np.testing.assert_array_equal(
+            ref[r], out[r], err_msg=f"{arch} chunk={chunk} rid={r} "
+                                    f"len={LENGTHS[r]}")
+    # admission actually batched: far fewer prefill dispatches than
+    # requests when chunking is off (one call per bucket batch)
+    if chunk == 0:
+        assert eng.prefill_calls < len(LENGTHS)
+
+
+def test_prefill_ft_failstop_bit_identical_all_groups():
+    """ft_mode='entangle' + chunked bucketed prefill: a fail-stop injected
+    on EVERY step (admission head projections included) in ANY single
+    group leaves all generated tokens bit-identical to the healthy run."""
+    cfg, _, params = _setup("llama3.2-1b")
+    prompts = _ragged_prompts(cfg, LENGTHS)
+    scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
+                       prefill_chunk=8)
+    healthy, eng = _run(ServeEngine, cfg, scfg, params, prompts)
+    assert eng.census["prefill"], "admission never took the bucketed path"
+    for fg in range(4):
+        injected, _ = _run(ServeEngine, cfg, scfg, params, prompts,
+                           failed_group=fg)
+        for r in healthy:
+            np.testing.assert_array_equal(
+                healthy[r], injected[r],
+                err_msg=f"failed_group={fg} rid={r}")
+
+
+def test_oversize_prompt_rejected_loudly():
+    """A prompt longer than the largest configured bucket must raise at
+    submit() (silently it would retrace per length or OOM the planner)."""
+    cfg, _, params = _setup("llama3.2-1b")
+    eng = ServeEngine(cfg, ServeConfig(max_batch=2, max_seq=48,
+                                       prefill_buckets=(8, 16)), params)
+    with pytest.raises(ValueError, match="bucket"):
+        eng.submit(Request(rid=0, prompt=np.zeros(17, np.int32), max_new=2))
+    # the default geometric set tops out at max_seq: same loud failure
+    eng2 = ServeEngine(cfg, ServeConfig(max_batch=2, max_seq=48), params)
+    with pytest.raises(ValueError, match="bucket"):
+        eng2.submit(Request(rid=1, prompt=np.zeros(49, np.int32), max_new=1))
+
+
+def test_census_records_bucket_shapes():
+    """census['prefill'] keys are (admission rows, bucket) call shapes —
+    raw prompt lengths (which would imply per-length retraces) never
+    appear."""
+    cfg, _, params = _setup("llama3.2-1b")
+    out, eng = _run(ServeEngine, cfg, ServeConfig(max_batch=4, max_seq=48),
+                    params, _ragged_prompts(cfg, [3, 5, 11, 20]))
+    assert set(eng.census["prefill"]) == {(4, 8), (4, 16), (4, 32)}
+    for (rows, bucket) in eng.census["prefill"]:
+        assert bucket in eng.buckets and rows == 4
+
+
+def test_chunked_admission_interleaves_with_decode():
+    """While a long prompt batch is being prefilled chunk-by-chunk, active
+    slots must still get their batched decode step every engine step —
+    decode latency stays flat through admission."""
+    cfg, _, params = _setup("llama3.2-1b")
+    eng = ServeEngine(cfg, ServeConfig(max_batch=2, max_seq=48,
+                                       prefill_chunk=8), params)
+    eng.submit(Request(rid=0, prompt=_ragged_prompts(cfg, [5])[0],
+                       max_new=12))
+    eng.step()  # rid=0 admitted (bucket 8 = one chunk) and decoding
+    assert eng.slots[0] is not None and eng.decode_calls == 1
+    eng.submit(Request(rid=1, prompt=_ragged_prompts(cfg, [30])[0],
+                       max_new=5))
+    for s in range(4):  # bucket 32 / chunk 8 = 4 chunked steps
+        toks_before = len(eng.slots[0]["toks"])
+        eng.step()
+        assert len(eng.slots[0]["toks"]) == toks_before + 1, \
+            f"decode stalled during admission chunk {s}"
+        admitted = any(s is not None and s["req"].rid == 1
+                       for s in eng.slots)
+        assert admitted == (s == 3), f"chunk {s}: admitted={admitted}"
+    assert eng.prefill_calls == 1 + 4  # rid0: 1 chunk, rid1: 4 chunks
+
+
+def test_warm_autotune_covers_prefill_shapes(tmp_path, monkeypatch):
+    """blocks='auto': startup warmup must pre-sweep the admission head
+    GEMM shape as well as the decode one, so the in-jit resolution is a
+    pure cache hit (never a sweep inside a traced prefill)."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    cfg, _, params = _setup("llama3.2-1b")
+    eng = ServeEngine(cfg, ServeConfig(max_batch=4, max_seq=48,
+                                       ft_mode="entangle", ft_M=4,
+                                       blocks="auto"), params)
+    D, V = eng.head_q.shape
+    assert (4, 1, D, V) in eng.census["head_gemm"]  # decode AND prefill
+    # the warmed engine serves a wave without error (auto inside jit)
+    for r, p in enumerate(_ragged_prompts(cfg, [4, 6, 9])):
+        eng.submit(Request(rid=r, prompt=p, max_new=2))
+    done = eng.run_to_completion(max_steps=100)
+    assert len(done) == 3
