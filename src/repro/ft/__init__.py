@@ -1,0 +1,51 @@
+"""Unified protected-GEMM subsystem: the paper's numerical entanglement as
+a reusable wrapper around EVERY hot-path projection.
+
+Until PR 4 only the serving head GEMM ran entangled
+(``serve/ft_logits.py``); the far larger prefill-chunk QKV/MLP admission
+GEMMs were unprotected — the exact gap checksum-style ABFT pays 9-14x more
+to close. This package extracts that one-off wiring into a subsystem any
+GEMM can opt into:
+
+  quantize.py   the int8 policy — per-tensor weight quantization + the
+                eq. (13) depth-aware activation budget
+  registry.py   PlanRegistry: (site, shape, M, backend) -> PlanEntry
+                (shared EntanglePlan + per-shape block sizes); the
+                protected shape census warm_autotune iterates
+  protected.py  protected_matmul / ProtectedLinear — flatten, quantize,
+                round-robin group, fused entangled kernel, roll-forward —
+                and FTContext, the scope-aware object threaded through
+                models/api -> transformer.apply_stack -> layers
+
+Scope model (``ServeConfig.ft_scope``): ``"head"`` protects the vocab
+projection (PR 2/3 behavior), ``"qkv"`` adds the mixer input projections
+(attention Q/K/V, MLA q/kv_a, Mamba in_proj, RG-LRU in_x/in_gate),
+``"mlp"`` adds the FFN projections (gate/up/down and the MoE router),
+``"all"`` protects everything. At every scope, a single fail-stop injected
+into any of the M request groups — during batched decode or chunked
+bucketed admission — rolls forward in-kernel with bit-identical tokens.
+
+See ``repro/kernels/__init__.py`` ("how to protect a new GEMM") for the
+recipe to add a site.
+"""
+from repro.ft.protected import (FTContext, ProtectedLinear, SCOPES,
+                                group_order, protected_matmul)
+from repro.ft.quantize import (activation_budget, quantize_acts,
+                               quantize_weight)
+from repro.ft.registry import (PlanEntry, PlanRegistry, default_blocks,
+                               group_rows)
+
+__all__ = [
+    "FTContext",
+    "PlanEntry",
+    "PlanRegistry",
+    "ProtectedLinear",
+    "SCOPES",
+    "activation_budget",
+    "default_blocks",
+    "group_order",
+    "group_rows",
+    "protected_matmul",
+    "quantize_acts",
+    "quantize_weight",
+]

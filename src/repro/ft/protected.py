@@ -1,0 +1,239 @@
+"""ProtectedLinear — the paper's entangled roll-forward wrapped around any
+hot-path GEMM.
+
+:func:`protected_matmul` is the one code path every protected projection
+runs through: float activations of ANY leading shape are flattened to rows,
+quantized onto the plan's eq. (13) integer grid (:mod:`repro.ft.quantize`),
+padded with zero rows to a multiple of M (exact — zeros entangle to zeros
+and cannot perturb any other stream's accumulator, nor the shared
+activation scale), mapped round-robin onto the M entangled streams
+(row -> group = row % M, the serving engine's slot -> group contract), and
+pushed through the fused Pallas kernel
+(:func:`repro.kernels.ops.entangled_matmul`): entangle-on-load, int GEMM,
+extraction in the flush epilogue — one pallas_call, zero codec HBM sweeps.
+A fail-stopped group's accumulator is statically excluded from the
+in-kernel extraction (``failed=r``), so its outputs are rolled forward from
+the other M-1 streams and the recovered integers are bit-identical to a
+healthy run.
+
+:class:`FTContext` is the object threaded through the model
+(``models/api.py -> transformer.apply_stack -> layers``): it decides which
+site categories the configured ``ft_scope`` protects, resolves each call
+site's :class:`~repro.ft.registry.PlanEntry`, and carries the static
+``failed_group`` of the current traced program.  Site names are
+``"<category>.<proj>"`` — categories:
+
+  ``head``  the vocab projection (always protected when FT is on)
+  ``qkv``   mixer input projections: attention Q/K/V, MLA q/kv_a,
+            Mamba in_proj, RG-LRU in_x/in_gate
+  ``mlp``   FFN projections: MLP gate/up/down (dense and MoE-shared) and
+            the MoE router
+
+``ft_scope`` widens protection cumulatively: ``"head"`` | ``"qkv"`` |
+``"mlp"`` (each includes the head) | ``"all"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.entangle import disentangle as core_disentangle
+from repro.core.entangle import entangle as core_entangle
+from repro.core.failstop import GARBAGE
+from repro.core.plan import EntanglePlan
+from repro.ft.quantize import quantize_acts, quantize_weight
+from repro.ft.registry import PlanEntry, PlanRegistry, group_rows
+
+# scope -> protected site categories (cumulative; head is always in)
+SCOPES: dict[str, frozenset] = {
+    "head": frozenset({"head"}),
+    "qkv": frozenset({"head", "qkv"}),
+    "mlp": frozenset({"head", "mlp"}),
+    "all": frozenset({"head", "qkv", "mlp"}),
+}
+
+# float weight, or (int8-range int32 weights, scale) pre-quantized at startup
+Weight = Union[jax.Array, tuple]
+
+
+def group_order(R: int, M: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static permutation realizing round-robin grouping (row -> group =
+    row % M) on top of a contiguous [M, R/M] stream layout.
+
+    ``order[g * R//M + j] = j * M + g`` — position p of the permuted batch
+    holds row ``order[p]``; ``inv`` undoes it (``inv[row]`` = position of
+    that row's output in the permuted result). Round-robin keeps every
+    entangled group populated whenever >= M rows are live, so a fail-stop
+    in any group is recoverable from M-1 *other* live groups.
+    """
+    assert R % M == 0, f"row count {R} must split into M={M} groups"
+    order = np.arange(R, dtype=np.int32).reshape(R // M, M).T.reshape(R)
+    inv = np.argsort(order).astype(np.int32)
+    return order, inv
+
+
+def protected_matmul(
+    x: jax.Array,  # [..., K] float activations
+    w: Weight,  # [K, N] float weights, or (wq, w_scale) pre-quantized
+    *,
+    plan: EntanglePlan,
+    failed_group: Optional[int] = None,
+    use_pallas: bool = True,
+    fuse_epilogue: bool = True,
+    blocks=None,
+    contiguous: bool = False,
+    interpret=None,
+) -> jax.Array:
+    """Entangled int8 GEMM with in-kernel fail-stop roll-forward.
+
+    Returns dequantized float32 outputs ``[..., N]``. ``contiguous=True``
+    keeps the caller's row order as the [M, R/M] group layout (the library
+    :func:`repro.serve.ft_logits.ft_logits` contract); the default maps
+    rows round-robin onto groups. ``fuse_epilogue=False`` keeps the
+    separate disentangle pass for callers that must inject/persist
+    entangled outputs; ``use_pallas=False`` is the XLA reference path.
+    """
+    if isinstance(w, tuple):
+        wq, w_scale = w
+    else:
+        wq, w_scale = quantize_weight(w)
+    lead, K = x.shape[:-1], x.shape[-1]
+    N = wq.shape[1]
+    R = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    M = plan.M
+
+    xf = x.reshape(R, K).astype(jnp.float32)
+    xq, a_scale = quantize_acts(xf, plan, K)
+    pad = (-R) % M
+    if pad:
+        xq = jnp.concatenate([xq, jnp.zeros((pad, K), jnp.int32)], axis=0)
+    Rp = R + pad
+    if contiguous:
+        inv = None
+        xg = xq.reshape(M, Rp // M, K)
+    else:
+        order, inv = group_order(Rp, M)
+        xg = xq[order].reshape(M, Rp // M, K)
+
+    from repro.kernels import ops as kops  # deferred: keeps core import-light
+
+    if use_pallas and fuse_epilogue:
+        # production hot path: entangle -> GEMM -> extract in ONE
+        # pallas_call; a fail-stopped group is rolled forward in-kernel by
+        # statically excluding its accumulator from the extraction (the
+        # algebra never reads it, so injecting garbage is equivalent)
+        rec = kops.entangled_matmul(
+            xg, wq, plan, fuse_epilogue=True, failed=failed_group,
+            blocks=blocks, interpret=interpret)
+    else:
+        if use_pallas:
+            delta = kops.entangled_matmul(xg, wq, plan, blocks=blocks,
+                                          interpret=interpret)
+        else:
+            eps = core_entangle(xg, plan)
+            delta = jnp.einsum("mbk,kn->mbn", eps, wq).astype(jnp.int32)
+        if failed_group is not None:
+            delta = delta.at[failed_group].set(GARBAGE)
+        rec = core_disentangle(delta, plan, failed=failed_group)
+
+    y = rec.reshape(Rp, N).astype(jnp.float32)
+    if inv is not None:
+        y = y[inv]
+    y = y[:R] / (a_scale * w_scale)
+    return y.reshape(*lead, N)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtectedLinear:
+    """One protected GEMM site bound to its registry entry.
+
+    A thin, reusable binding of (site name, plan registry, backend policy):
+    calling it resolves the :class:`PlanEntry` for the incoming activation
+    shape and runs :func:`protected_matmul` with that entry's plan and
+    block sizes. The serving engine holds one per protected projection
+    (implicitly, through :class:`FTContext`); library users can construct
+    them directly.
+    """
+
+    site: str
+    registry: PlanRegistry
+    use_pallas: bool = True
+    interpret: Optional[bool] = None
+
+    def entry(self, x: jax.Array, w: Weight) -> PlanEntry:
+        wq = w[0] if isinstance(w, tuple) else w
+        K, N = wq.shape
+        rows = int(np.prod(x.shape[:-1], dtype=np.int64)) if x.ndim > 1 else 1
+        return self.registry.entry(self.site, rows, K, N, _backend())
+
+    def __call__(self, x: jax.Array, w: Weight, *,
+                 failed_group: Optional[int] = None,
+                 contiguous: bool = False) -> jax.Array:
+        e = self.entry(x, w)
+        return protected_matmul(
+            x, w, plan=e.plan, failed_group=failed_group,
+            use_pallas=self.use_pallas, blocks=e.blocks,
+            contiguous=contiguous, interpret=self.interpret)
+
+
+def _backend() -> str:
+    """Registry backend tag — mirrors kernels.ops dispatch (compiled on
+    TPU, interpret elsewhere)."""
+    return jax.default_backend() if jax.default_backend() == "tpu" \
+        else "interpret"
+
+
+@dataclasses.dataclass(frozen=True)
+class FTContext:
+    """Protection context threaded through the model forward pass.
+
+    Created once by the serving engine at startup and specialized per
+    traced program via :meth:`with_failed` (``failed_group`` is a static
+    jit argument, so each injected-failure variant is its own compiled
+    program sharing the same plans and autotune winners).
+
+    ``census_only=True`` turns :meth:`matmul` into a plain float einsum
+    that merely REGISTERS the call shape — the engine's ``warm_autotune``
+    abstract-traces the forward pass with such a context to enumerate
+    every protected shape without running (or compiling) any kernel.
+    """
+
+    registry: PlanRegistry
+    scope: str = "head"
+    use_pallas: bool = True
+    failed_group: Optional[int] = None
+    census_only: bool = False
+
+    def __post_init__(self):
+        if self.scope not in SCOPES:
+            raise ValueError(
+                f"unknown ft_scope {self.scope!r}; expected one of "
+                f"{sorted(SCOPES)}")
+
+    @property
+    def plan(self) -> EntanglePlan:
+        return self.registry.plan
+
+    def protects(self, site: str) -> bool:
+        return site.split(".", 1)[0] in SCOPES[self.scope]
+
+    def with_failed(self, failed_group: Optional[int]) -> "FTContext":
+        return dataclasses.replace(self, failed_group=failed_group)
+
+    def linear(self, site: str) -> ProtectedLinear:
+        return ProtectedLinear(site=site, registry=self.registry,
+                               use_pallas=self.use_pallas)
+
+    def matmul(self, site: str, x: jax.Array, w: Weight) -> jax.Array:
+        """Run (or, census-only, record) one protected GEMM site."""
+        lin = self.linear(site)
+        lin.entry(x, w)  # register the shape even when census-only
+        if self.census_only:
+            wq = w[0] if isinstance(w, tuple) else w
+            return jnp.einsum("...k,kn->...n", x.astype(jnp.float32),
+                              wq.astype(jnp.float32))
+        return lin(x, w, failed_group=self.failed_group)

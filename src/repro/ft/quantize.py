@@ -1,0 +1,53 @@
+"""Int8 quantization policy of the protected-GEMM subsystem.
+
+One policy, two halves, shared by EVERY protected projection (the serving
+head and the in-model QKV/MLP/router sites alike):
+
+  * **weights** — symmetric per-tensor int8: ``scale = 127 / max|w|``,
+    values clipped to [-127, 127] and carried in an int32 container (the
+    entangled kernel's stream dtype).  This is exactly the policy the head
+    GEMM shipped with (``serve/ft_logits.quantize_head`` now re-exports
+    :func:`quantize_weight`).
+  * **activations** — symmetric per-call integer quantization into the
+    plan's eq. (13) budget: a ``K``-deep integer dot of int8 weights
+    satisfies ``K * |a|max * 127 <= plan.max_output_magnitude`` iff the
+    activation grid is bounded by :func:`activation_budget`.  The budget
+    therefore shrinks with the contraction depth — a d_ff-deep MLP down
+    projection quantizes coarser than the d_model-deep QKV projections,
+    and both stay exactly recoverable.
+
+Quantization trades output precision for protection like any int8 serving
+path; the *recovery* is bit-exact — a healthy protected run and a
+fail-stop-injected protected run produce identical integers, hence
+identical logits and identical tokens (tested).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import EntanglePlan
+
+
+def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 weight quantization (int32 container)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
+    scale = 127.0 / amax
+    return jnp.clip(jnp.round(w * scale), -127, 127).astype(jnp.int32), scale
+
+
+def activation_budget(plan: EntanglePlan, depth: int) -> int:
+    """Largest activation magnitude so a ``depth``-deep int8 dot stays
+    within the plan's eq. (13) output range (floor 1 — a degenerate budget
+    still round-trips, just coarsely)."""
+    return max(plan.max_output_magnitude // (depth * 127), 1)
+
+
+def quantize_acts(x: jax.Array, plan: EntanglePlan,
+                  depth: int) -> tuple[jax.Array, jax.Array]:
+    """Quantize float activations ``x`` onto the eq. (13)-budgeted integer
+    grid for a ``depth``-deep contraction. Returns (int32 values, scale)."""
+    budget = activation_budget(plan, depth)
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
+    a_scale = budget / amax
+    return jnp.round(x * a_scale).astype(jnp.int32), a_scale

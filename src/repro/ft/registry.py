@@ -1,0 +1,99 @@
+"""Plan registry: one entry per (site, shape, M, backend) protected GEMM.
+
+The serving engine constructs ONE registry at startup; every protected
+projection — head, QKV, MLP up/down, MoE router — resolves its
+:class:`PlanEntry` here at trace time, so the whole forward pass shares a
+single :class:`~repro.core.plan.EntanglePlan` (stable autotune/compile keys
+across the serving lifetime) while each call shape gets its own block-size
+decision:
+
+  * ``blocks`` policy ``None`` — shape-clamped power-of-two defaults
+    (:func:`default_blocks`): the per-group row count of a decode step is
+    tiny (max_batch / M), so the wrapper's MXU-aligned 128-row default
+    would pad it ~64x with zero rows every step;
+  * ``blocks`` policy ``"auto"`` — the :mod:`repro.kernels.autotune`
+    subsystem; the engine's ``warm_autotune`` pre-sweeps every registered
+    shape eagerly so the in-jit resolution is a pure cache hit.
+
+Entries are created lazily at trace time (a Python dict lookup during
+tracing — never inside the compiled program) and double as the protected
+shape census ``warm_autotune`` iterates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.plan import EntanglePlan
+
+
+def group_rows(rows: int, M: int) -> int:
+    """Per-group row count after padding ``rows`` to a multiple of M —
+    the single source of the kernel-call batch dim, shared by the
+    protected matmul, the registry keys and the autotune warmup."""
+    return -(-rows // M)
+
+
+def _pow2_cover(n: int, lo: int, hi: int) -> int:
+    """Smallest power of two >= min(n, hi), floored at ``lo``."""
+    p = lo
+    while p < min(max(n, 1), hi):
+        p *= 2
+    return p
+
+
+def default_blocks(Bg: int, K: int, N: int) -> dict:
+    """Shape-clamped block sizes for one (Bg, K, N) protected GEMM."""
+    return {"bb": _pow2_cover(Bg, 8, 128),
+            "bn": _pow2_cover(N, 32, 256),
+            "bk": _pow2_cover(K, 32, 256)}
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """Resolved protection parameters of one GEMM site at one call shape."""
+
+    site: str
+    shape: tuple  # (M, Bg, K, N) — the entangled kernel call signature
+    backend: str
+    plan: EntanglePlan
+    blocks: object  # None | dict | "auto" — passed through to kernels.ops
+
+
+class PlanRegistry:
+    """(site, shape, M, backend) -> :class:`PlanEntry` map."""
+
+    def __init__(self, plan: EntanglePlan, *, blocks: object = None):
+        self.plan = plan
+        self.blocks_policy = blocks
+        self._entries: dict[tuple, PlanEntry] = {}
+
+    @staticmethod
+    def key(site: str, shape: tuple, M: int, backend: str) -> tuple:
+        return (site, shape, M, backend)
+
+    def entry(self, site: str, rows: int, K: int, N: int,
+              backend: str) -> PlanEntry:
+        """Resolve (creating on first use) the entry for one call site."""
+        shape = (self.plan.M, group_rows(rows, self.plan.M), K, N)
+        k = self.key(site, shape, self.plan.M, backend)
+        e = self._entries.get(k)
+        if e is None:
+            blocks = self.blocks_policy
+            if blocks is None:
+                blocks = default_blocks(*shape[1:])
+            e = PlanEntry(site=site, shape=shape, backend=backend,
+                          plan=self.plan, blocks=blocks)
+            self._entries[k] = e
+        return e
+
+    def entries(self) -> list[PlanEntry]:
+        return list(self._entries.values())
+
+    def census(self) -> dict:
+        """{(site, (M, Bg, K, N)): blocks} — what warm_autotune iterates."""
+        return {(e.site, e.shape): e.blocks for e in self._entries.values()}
+
+    def get(self, site: str, shape: tuple,
+            backend: str) -> Optional[PlanEntry]:
+        return self._entries.get(self.key(site, shape, self.plan.M, backend))

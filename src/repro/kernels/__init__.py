@@ -30,4 +30,34 @@ Adding a new LSB kernel behind ops.py:
      in ops.py following the `blocks`/`fuse_epilogue` signature;
   4. extend benchmarks/kernel_micro.py with its fused-vs-separate bytes
      model so the overhead trajectory stays tracked in BENCH_*.json.
+
+How to protect a new GEMM (the repro.ft subsystem):
+
+  1. find the projection's ``layers.dense`` call (or raw einsum) and give
+     it a site name ``"<category>.<proj>"`` — category ``qkv`` (mixer
+     input projections), ``mlp`` (FFN projections incl. routers) or a new
+     one added to ``repro.ft.protected.SCOPES``. For a ``dense`` call,
+     protection is one kwarg: ``dense(p["w_new"], h, ft=ft,
+     site="qkv.new")``; for a raw einsum, guard with
+     ``ft is not None and ft.protects(site)`` and call
+     ``ft.matmul(site, x, w)`` (returns float32 — cast back to the
+     surrounding activation dtype).
+  2. thread the ``ft`` kwarg from the block's ``apply`` down to the call
+     if the site lives in a block that did not previously take it
+     (``transformer.apply_stack`` already passes ``ft`` to every block).
+  3. nothing else: the site's :class:`repro.ft.PlanRegistry` entry (plan +
+     block sizes) is created at trace time, ``ServeEngine.warm_autotune``
+     discovers the new shape through its census-only abstract trace and
+     pre-sweeps it for ``blocks='auto'``, and ``step(failed_group=r)``
+     reaches it automatically.
+  4. extend the scope x failure-injection matrix test
+     (tests/test_serve_engine.py::test_ft_scope_failstop_bit_identical)
+     if the site introduced a new category, and regenerate the pre-tuned
+     seed cache (``kernels/pretuned/``) if the new shape should cold-hit
+     in CI.
+
+The quantization policy (int8 weights, eq.-13-budgeted activations) is
+shared — see repro/ft/quantize.py; exactness of the roll-forward does not
+depend on block sizes, plan choice or backend, only on both runs taking
+the same protected path.
 """

@@ -11,7 +11,12 @@ caches the winner:
   * in-process: a plain dict, hit on every later call in the process;
   * on disk: a JSON file (``REPRO_AUTOTUNE_CACHE`` env var, default
     ``~/.cache/repro/autotune.json``) so tuned blocks survive restarts and
-    can be shipped with a deployment.
+    can be shipped with a deployment;
+  * shipped: pre-tuned seed caches under ``repro/kernels/pretuned/``
+    (one JSON per backend generation, e.g. ``interpret_cpu.json``), loaded
+    below the user cache file — a cold process whose shapes are covered
+    never sweeps at all. Keys embed the backend tag, so loading every
+    shipped file is safe; user-tuned winners always take precedence.
 
 Cache file format — one flat JSON object::
 
@@ -45,6 +50,9 @@ __all__ = [
 ]
 
 _VERSION = 1
+
+# shipped pre-tuned seed caches (per backend generation), lowest precedence
+PRETUNED_DIR = pathlib.Path(__file__).resolve().parent / "pretuned"
 
 
 def _pow2_leq(n: int, cap: int) -> int:
@@ -104,6 +112,7 @@ class AutotuneCache:
     def __init__(self, path: Optional[str] = None):
         self.path = pathlib.Path(path).expanduser() if path else None
         self._mem: dict[str, dict[str, int]] = {}
+        self._shipped: dict[str, dict[str, int]] = {}
         self._loaded = False
         self.hits = 0
         self.sweeps = 0
@@ -116,14 +125,28 @@ class AutotuneCache:
             try:
                 data = json.loads(self.path.read_text())
             except (OSError, ValueError):
-                return
+                data = {}
             for k, v in data.items():
                 if k != "_meta" and k not in self._mem:
                     self._mem[k] = {kk: int(vv) for kk, vv in v.items()}
+        # shipped seed caches: consulted AFTER in-process and file winners
+        # (kept in their own dict so `put` never re-persists them)
+        if PRETUNED_DIR.is_dir():
+            for f in sorted(PRETUNED_DIR.glob("*.json")):
+                try:
+                    data = json.loads(f.read_text())
+                except (OSError, ValueError):
+                    continue
+                for k, v in data.items():
+                    if k != "_meta" and k not in self._shipped:
+                        self._shipped[k] = {kk: int(vv)
+                                            for kk, vv in v.items()}
 
     def get(self, key: str) -> Optional[dict[str, int]]:
         self._load_file()
         hit = self._mem.get(key)
+        if hit is None:
+            hit = self._shipped.get(key)
         if hit is not None:
             self.hits += 1
         return hit
@@ -184,11 +207,18 @@ def reset_cache(path: Optional[str] = None) -> AutotuneCache:
 
 def stats() -> dict:
     """Cache counters for startup-warmup reporting (launch/serve --smoke):
-    sweeps = shapes tuned this process, hits = cache hits (in-process or
-    loaded from the JSON file), keys = distinct winners known."""
+    sweeps = shapes tuned this process, hits = cache hits (in-process,
+    the JSON file, or a shipped pre-tuned seed cache), keys = distinct
+    winners usable on THIS backend (shipped files carry every backend
+    generation; foreign-backend keys can never hit here and would inflate
+    the coverage counter)."""
     c = get_cache()
     c._load_file()
-    return {"hits": c.hits, "sweeps": c.sweeps, "keys": len(c._mem)}
+    tag = "interpret" if jax.default_backend() != "tpu" \
+        else jax.default_backend()
+    usable = {k for k in c._shipped if k.split("|")[2] == tag}
+    return {"hits": c.hits, "sweeps": c.sweeps,
+            "keys": len(set(c._mem) | usable)}
 
 
 def _time_once(thunk: Callable[[], Any]) -> float:

@@ -4,9 +4,12 @@ Boots the batched continuous-batching engine with random weights (or a
 checkpoint directory) and runs a synthetic request wave. Fault tolerance is
 first-class: ``--ft-mode entangle`` turns on the fused entangled int8 head
 GEMM on every decode step AND on every admission batch's first token
-(slot -> group = slot % ft_M), ``--failed-group r`` injects a fail-stop
-into group r's compute on every step, and ``--smoke`` prints a recovery
-summary (healthy vs injected outputs compared token-by-token) plus the
+(slot -> group = slot % ft_M), ``--ft-scope`` widens protection to the
+in-model projections (``qkv`` | ``mlp`` | ``all`` — QKV, MLP up/down, MoE
+router run entangled through the repro.ft subsystem), ``--failed-group r``
+injects a fail-stop into group r's compute on every step, and ``--smoke``
+prints a per-scope recovery summary (healthy vs injected outputs compared
+token-by-token, for the head scope and the configured scope) plus the
 engine's prefill/decode shape census and the autotune warmup counters.
 
 Admission is the bucketed, chunked batched prefill pipeline:
@@ -15,6 +18,7 @@ buckets, ``--prefill-chunk C`` interleaves C-token prefill chunks with
 decode steps (0 = whole bucket per call).
 """
 import argparse
+import dataclasses
 
 import numpy as np
 import jax
@@ -52,6 +56,10 @@ def main():
                          "decode step")
     ap.add_argument("--ft-M", type=int, default=4,
                     help="entangled request groups (max-batch %% ft-M == 0)")
+    ap.add_argument("--ft-scope", default="head",
+                    choices=["head", "qkv", "mlp", "all"],
+                    help="which projections run entangled: head only, or "
+                         "also the in-model QKV / MLP+router / all sites")
     ap.add_argument("--failed-group", type=int, default=-1,
                     help=">= 0: inject a fail-stop into this group's head "
                          "GEMM on every decode step (rolled forward "
@@ -82,7 +90,7 @@ def main():
                if args.prefill_buckets else None)
     scfg = ServeConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
-        ft_mode=args.ft_mode, ft_M=args.ft_M,
+        ft_mode=args.ft_mode, ft_M=args.ft_M, ft_scope=args.ft_scope,
         blocks=(args.blocks or None),
         prefill_buckets=buckets, prefill_chunk=args.prefill_chunk)
     failed = args.failed_group if args.failed_group >= 0 else None
@@ -99,27 +107,42 @@ def main():
     print(f"[launch.serve] shape census: {eng.census}")
 
     if args.smoke and args.ft_mode == "entangle":
-        # recovery summary: the wave above is one side of the comparison
-        # (healthy if no --failed-group, injected otherwise); run only the
-        # missing side — the entangled head must roll the failure forward
-        # so the decoded tokens match token-for-token.
+        # per-scope recovery summary: drill the head scope AND the
+        # configured scope (deduped). For the configured scope, the wave
+        # above is one side of the comparison (healthy if no
+        # --failed-group, injected otherwise) and only the missing side
+        # runs; other scopes run both sides — every protected GEMM must
+        # roll the failure forward so tokens match token-for-token.
         inj = failed if failed is not None else 0
-        other = _wave(ServeEngine(cfg, scfg, params), args.requests,
-                      cfg.vocab_size, args.max_new,
-                      inj if failed is None else None)
-        healthy, injected = (outs, other) if failed is None else (other, outs)
-        mismatches = sum(
-            0 if np.array_equal(healthy[r], injected[r]) else 1
-            for r in healthy)
-        tokens = sum(len(v) for v in healthy.values())
-        print(f"[launch.serve] recovery summary: failed_group={inj} injected "
-              f"on every decode step; {len(healthy)} requests / {tokens} "
-              f"tokens compared; mismatching requests: {mismatches} "
-              f"({'EXACT ROLL-FORWARD' if mismatches == 0 else 'RECOVERY FAILED'})")
+        any_mismatch = False
+        for scope in dict.fromkeys(["head", args.ft_scope]):
+            sc = dataclasses.replace(scfg, ft_scope=scope)
+            if scope == args.ft_scope:
+                other = _wave(ServeEngine(cfg, sc, params), args.requests,
+                              cfg.vocab_size, args.max_new,
+                              inj if failed is None else None)
+                healthy, injected = ((outs, other) if failed is None
+                                     else (other, outs))
+            else:
+                healthy = _wave(ServeEngine(cfg, sc, params), args.requests,
+                                cfg.vocab_size, args.max_new, None)
+                injected = _wave(ServeEngine(cfg, sc, params), args.requests,
+                                 cfg.vocab_size, args.max_new, inj)
+            mismatches = sum(
+                0 if np.array_equal(healthy[r], injected[r]) else 1
+                for r in healthy)
+            tokens = sum(len(v) for v in healthy.values())
+            print(f"[launch.serve] recovery summary [scope={scope}]: "
+                  f"failed_group={inj} injected on every step; "
+                  f"{len(healthy)} requests / {tokens} tokens compared; "
+                  f"mismatching requests: {mismatches} "
+                  f"({'EXACT ROLL-FORWARD' if mismatches == 0 else 'RECOVERY FAILED'})")
+            any_mismatch |= bool(mismatches)
         if args.blocks == "auto":
             print(f"[launch.serve] autotune: {autotune.stats()}; head-GEMM "
-                  f"winners: {eng.census.get('head_gemm')}")
-        if mismatches:
+                  f"winners: {eng.census.get('head_gemm')}; protected "
+                  f"sites warmed: {len(eng.census.get('protected', {}))}")
+        if any_mismatch:
             raise SystemExit(1)
 
 

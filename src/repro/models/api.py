@@ -18,6 +18,12 @@ vocab projection, so serving can route the head GEMM through the
 FT-protected entangled int8 path (serve/ft_logits) instead;
 ``decode_step`` == head_project(decode_hidden).
 
+``decode_hidden`` and ``prefill_chunk`` accept an optional ``ft`` kwarg —
+a :class:`repro.ft.FTContext` threaded down to every block so the serving
+engine's ``ft_scope`` can run the in-model QKV/MLP/router projections as
+entangled int8 GEMMs with in-kernel fail-stop roll-forward (``ft=None``,
+the default, is the unprotected fast path; decoder-only).
+
 ``prefill_chunk`` is the batched/bucketed prefill contract (decoder-only):
 ``tokens`` [B, C] is one chunk of a bucket-padded prompt batch processed at
 absolute positions ``pos0..pos0+C-1`` (``pos0`` a static Python int — one
@@ -133,19 +139,24 @@ def _dec_prefill(p, batch, cfg: ModelConfig, cache):
 
 
 def _dec_prefill_chunk(p, tokens, cfg: ModelConfig, cache, *, pos0: int = 0,
-                       lengths=None):
+                       lengths=None, ft=None):
     """Bucketed/chunked batched prefill: tokens [B, C] at absolute positions
     pos0..pos0+C-1 with per-row true lengths. Returns final-norm'd hidden
-    states [B, C, D] + filled cache (see the module docstring)."""
+    states [B, C, D] + filled cache (see the module docstring). ``ft`` is
+    the serving protection context (repro.ft.FTContext) — with a scope
+    beyond ``head`` the chunk's QKV/MLP/router GEMMs run entangled, so a
+    fail-stop during admission rolls forward inside those kernels too."""
     x = T.embed_tokens(p["embed"], tokens, cfg, pos=(pos0 or None))
     h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache,
-                                 pos=pos0, mode="prefill", lengths=lengths)
+                                 pos=pos0, mode="prefill", lengths=lengths,
+                                 ft=ft)
     return T.final_hidden(p["embed"], h, cfg), new_cache
 
 
-def _dec_decode_hidden(p, tok, cache, pos, cfg: ModelConfig):
+def _dec_decode_hidden(p, tok, cache, pos, cfg: ModelConfig, ft=None):
     x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
-    h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache, pos=pos, mode="decode")
+    h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache,
+                                 pos=pos, mode="decode", ft=ft)
     return T.final_hidden(p["embed"], h, cfg)[:, 0], new_cache
 
 
@@ -319,7 +330,11 @@ def _ed_prefill(p, batch, cfg: ModelConfig, cache):
     return logits[:, 0], new_cache
 
 
-def _ed_decode_hidden(p, tok, cache, pos, cfg: ModelConfig):
+def _ed_decode_hidden(p, tok, cache, pos, cfg: ModelConfig, ft=None):
+    if ft is not None:
+        raise NotImplementedError(
+            "in-model protected GEMMs are decoder-only; the enc-dec family "
+            "supports ft_scope='head' (engine-side entangled head) only")
     x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
 
     def body(carry, xs):
@@ -338,7 +353,7 @@ def _ed_decode(p, tok, cache, pos, cfg: ModelConfig):
 
 
 def _ed_prefill_chunk(p, tokens, cfg: ModelConfig, cache, *, pos0: int = 0,
-                      lengths=None):
+                      lengths=None, ft=None):
     raise NotImplementedError(
         "chunked/bucketed prefill is decoder-only; enc-dec prefill needs "
         "frames and runs whole-prompt (_ed_prefill)")

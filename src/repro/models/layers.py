@@ -84,8 +84,20 @@ def init_dense(key, d_in, d_out, bias=False):
     return p
 
 
-def dense(p, x):
-    y = jnp.einsum("...d,df->...f", x.astype(ACT_DTYPE), p["w"].astype(ACT_DTYPE))
+def dense(p, x, *, ft=None, site=None):
+    """Dense projection — THE protected-GEMM chokepoint.
+
+    When an :class:`repro.ft.FTContext` is threaded down (serving, with
+    ``ft_scope`` covering ``site``'s category) the matmul runs as the fused
+    entangled int8 GEMM with in-kernel fail-stop roll-forward instead of
+    the bf16 einsum; the bias stays in float either way. ``ft=None`` (train
+    and every pre-existing caller) is the unprotected fast path.
+    """
+    if ft is not None and site is not None and ft.protects(site):
+        y = ft.matmul(site, x, p["w"]).astype(ACT_DTYPE)
+    else:
+        y = jnp.einsum("...d,df->...f", x.astype(ACT_DTYPE),
+                       p["w"].astype(ACT_DTYPE))
     if "b" in p:
         y = y + p["b"].astype(ACT_DTYPE)
     return y
@@ -240,11 +252,15 @@ def apply_attention(
     rope_theta: Optional[float] = None,
     cross_kv=None,
     lengths=None,
+    ft=None,
 ):
     """GQA/MQA attention with optional sliding window and KV cache.
 
     cross_kv: precomputed (k, v) for cross-attention (whisper decoder);
     bypasses self-KV entirely (no mask, no rope).
+
+    ``ft`` (serving): protection context — scope ``qkv`` runs the Q/K/V
+    projections as entangled int8 GEMMs with fail-stop roll-forward.
 
     Batched/chunked prefill: ``pos`` (a static int) is the chunk offset and
     ``lengths`` [B] the per-row true prompt lengths of a bucket-padded
@@ -257,11 +273,11 @@ def apply_attention(
     off = _prefill_off(pos, mode)
     h = apply_norm(p["norm"], x, cfg)
 
-    q = dense(p["wq"], h).reshape(B, T, H, hd)
+    q = dense(p["wq"], h, ft=ft, site="qkv.q").reshape(B, T, H, hd)
     win_kabs = None  # set on the bucketed/chunked rolling-window path
     if cross_kv is None:
-        k = dense(p["wk"], h).reshape(B, T, Hkv, hd)
-        v = dense(p["wv"], h).reshape(B, T, Hkv, hd)
+        k = dense(p["wk"], h, ft=ft, site="qkv.k").reshape(B, T, Hkv, hd)
+        v = dense(p["wv"], h, ft=ft, site="qkv.v").reshape(B, T, Hkv, hd)
         if rope_theta:
             if mode == "decode":
                 positions = _decode_positions(pos, B, T)
@@ -396,7 +412,7 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
-              lengths=None):
+              lengths=None, ft=None):
     """Multi-head latent attention (DeepSeek). The cache stores ONLY the
     compressed latent c_kv [B, S, r] + shared k_rope — the paper-faithful
     KV-compression; decode up-projects cached latents (the absorbed-weight
@@ -415,13 +431,16 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     h = apply_norm(p["norm"], x, cfg)
 
     if m.q_lora_rank:
-        q = dense(p["wq_b"], apply_norm(p["q_norm"], dense(p["wq_a"], h), cfg))
+        q = dense(p["wq_b"],
+                  apply_norm(p["q_norm"],
+                             dense(p["wq_a"], h, ft=ft, site="qkv.q_a"), cfg),
+                  ft=ft, site="qkv.q")
     else:
-        q = dense(p["wq"], h)
+        q = dense(p["wq"], h, ft=ft, site="qkv.q")
     q = q.reshape(B, T, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
 
-    kv = dense(p["wkv_a"], h)  # [B, T, r + dr]
+    kv = dense(p["wkv_a"], h, ft=ft, site="qkv.kv")  # [B, T, r + dr]
     ckv = apply_norm(p["kv_norm"], kv[..., : m.kv_lora_rank], cfg)
     k_rope_new = kv[..., m.kv_lora_rank :]  # [B, T, dr] shared across heads
 
@@ -539,15 +558,17 @@ def _mlp_act(cfg: ModelConfig, a):
     return jax.nn.silu(a)
 
 
-def apply_mlp(p, x, *, cfg: ModelConfig):
+def apply_mlp(p, x, *, cfg: ModelConfig, ft=None):
     h = apply_norm(p["norm"], x, cfg)
+    up = dense(p["up"], h, ft=ft, site="mlp.up")
     if "gate" in p:
-        a = _mlp_act(cfg, dense(p["gate"], h)) * dense(p["up"], h)
+        a = _mlp_act(cfg, dense(p["gate"], h, ft=ft, site="mlp.gate")) * up
     else:
-        a = _mlp_act(cfg, dense(p["up"], h)) if cfg.norm_kind != "layernorm" \
-            else jax.nn.gelu(dense(p["up"], h))
+        a = _mlp_act(cfg, up) if cfg.norm_kind != "layernorm" \
+            else jax.nn.gelu(up)
     a = constrain(a, "batch", "seq", "mlp")
-    return constrain(dense(p["down"], a), "batch", "seq", "embed")
+    return constrain(dense(p["down"], a, ft=ft, site="mlp.down"),
+                     "batch", "seq", "embed")
 
 
 # ------------------------------------------------------------------- MoE ----
@@ -575,7 +596,7 @@ def init_moe(key, cfg: ModelConfig):
     return p
 
 
-def apply_moe(p, x, *, cfg: ModelConfig, valid=None):
+def apply_moe(p, x, *, cfg: ModelConfig, valid=None, ft=None):
     """Grouped sort-based dispatch (EP): tokens are routed SHARD-LOCALLY per
     data-parallel group (leading G axis = number of 'batch' shards), so the
     argsort/scatter never crosses devices; the only cross-device movement is
@@ -608,9 +629,15 @@ def apply_moe(p, x, *, cfg: ModelConfig, valid=None):
 
     # router in bf16 with f32 accumulation: avoids materializing an f32
     # copy of the full [N, D] activations (§Perf iteration 4)
-    logits = jnp.einsum("gnd,de->gne", hg,
-                        p["router"].astype(ACT_DTYPE),
-                        preferred_element_type=jnp.float32)
+    if ft is not None and ft.protects("mlp.router"):
+        # MoE routing decisions steer EVERY expert GEMM downstream —
+        # protecting this small projection makes routing itself fail-stop
+        # recoverable, so a failed group cannot silently reroute tokens
+        logits = ft.matmul("mlp.router", hg, p["router"])
+    else:
+        logits = jnp.einsum("gnd,de->gne", hg,
+                            p["router"].astype(ACT_DTYPE),
+                            preferred_element_type=jnp.float32)
     if mc.gating == "sigmoid":
         probs = jax.nn.sigmoid(logits)
     else:
@@ -672,8 +699,9 @@ def apply_moe(p, x, *, cfg: ModelConfig, valid=None):
 
     if mc.n_shared:
         sp = dict(p["shared"])
-        a = jax.nn.silu(dense(sp["gate"], hf)) * dense(sp["up"], hf)
-        out = out + dense(sp["down"], a)
+        a = jax.nn.silu(dense(sp["gate"], hf, ft=ft, site="mlp.gate")) \
+            * dense(sp["up"], hf, ft=ft, site="mlp.up")
+        out = out + dense(sp["down"], a, ft=ft, site="mlp.down")
     return constrain(out.reshape(B, T, D), "batch", "seq", "embed")
 
 
@@ -718,7 +746,7 @@ def init_mamba_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
-                lengths=None):
+                lengths=None, ft=None):
     """Mamba-1: GEMMs hoisted out of the recurrence; the selective scan runs
     as lax.scan over time (compile-compact; per-step work is elementwise).
 
@@ -733,7 +761,8 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     di, dtr = _mamba_dims(cfg)
     off = _prefill_off(pos, mode)
     h_in = apply_norm(p["norm"], x, cfg)
-    xz = dense(p["in_proj"], h_in)
+    # in_proj is Mamba's QKV analog (the block's big input projection)
+    xz = dense(p["in_proj"], h_in, ft=ft, site="qkv.in")
     xs, z = xz[..., :di], xz[..., di:]
     xs = constrain(xs, "batch", "seq", "mlp")
 
@@ -854,7 +883,7 @@ def init_rglru_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
-                lengths=None):
+                lengths=None, ft=None):
     """RG-LRU block. Bucketed/chunked prefill mirrors :func:`apply_mamba`:
     ``pos`` (static int) seeds the conv from the previous chunk's cached
     tail, ``lengths`` gates the recurrence so pad steps hold the state."""
@@ -863,8 +892,9 @@ def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     w = rc.lru_width or cfg.d_model
     off = _prefill_off(pos, mode)
     h_in = apply_norm(p["norm"], x, cfg)
-    gate = jax.nn.gelu(dense(p["in_gate"], h_in))
-    u = dense(p["in_x"], h_in)
+    # in_x / in_gate are the RG-LRU block's QKV-analog input projections
+    gate = jax.nn.gelu(dense(p["in_gate"], h_in, ft=ft, site="qkv.gate"))
+    u = dense(p["in_x"], h_in, ft=ft, site="qkv.in")
 
     new_conv_state = None
     if mode == "decode":

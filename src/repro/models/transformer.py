@@ -37,11 +37,11 @@ class Block(NamedTuple):
 
 
 def _attn_then_mlp(attn_fn, mlp_fn):
-    def apply(p, x, *, cfg, cache, pos, mode, lengths=None):
+    def apply(p, x, *, cfg, cache, pos, mode, lengths=None, ft=None):
         a, new_cache = attn_fn(p, x, cfg=cfg, cache=cache, pos=pos, mode=mode,
-                               lengths=lengths)
+                               lengths=lengths, ft=ft)
         x = x + a
-        x = x + mlp_fn(p, x, cfg=cfg)
+        x = x + mlp_fn(p, x, cfg=cfg, ft=ft)
         return x, new_cache
 
     return apply
@@ -59,18 +59,18 @@ def _init_attn_dense(key, cfg, max_seq):
     return p
 
 
-def _apply_attn_dense(p, x, *, cfg, cache, pos, mode, lengths=None):
+def _apply_attn_dense(p, x, *, cfg, cache, pos, mode, lengths=None, ft=None):
     if cfg.mla:
         a, nc = L.apply_mla(p["attn"], x, cfg=cfg, cache=cache, pos=pos,
-                            mode=mode, lengths=lengths)
+                            mode=mode, lengths=lengths, ft=ft)
     else:
         a, nc = L.apply_attention(
             p["attn"], x, cfg=cfg, cache=cache, pos=pos, mode=mode,
             rope_theta=cfg.rope_theta if cfg.norm_kind == "rmsnorm" else None,
-            lengths=lengths,
+            lengths=lengths, ft=ft,
         )
     x = x + a
-    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg)
+    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg, ft=ft)
     return x, nc
 
 
@@ -81,19 +81,19 @@ def _init_attn_moe(key, cfg, max_seq):
     return p
 
 
-def _apply_attn_moe(p, x, *, cfg, cache, pos, mode, lengths=None):
+def _apply_attn_moe(p, x, *, cfg, cache, pos, mode, lengths=None, ft=None):
     if cfg.mla:
         a, nc = L.apply_mla(p["attn"], x, cfg=cfg, cache=cache, pos=pos,
-                            mode=mode, lengths=lengths)
+                            mode=mode, lengths=lengths, ft=ft)
     else:
         a, nc = L.apply_attention(
             p["attn"], x, cfg=cfg, cache=cache, pos=pos, mode=mode,
-            rope_theta=cfg.rope_theta, lengths=lengths,
+            rope_theta=cfg.rope_theta, lengths=lengths, ft=ft,
         )
     x = x + a
     valid = (L._prefill_valid(L._prefill_off(pos, mode), x.shape[1], lengths)
              if mode == "prefill" else None)
-    x = x + L.apply_moe(p["moe"], x, cfg=cfg, valid=valid)
+    x = x + L.apply_moe(p["moe"], x, cfg=cfg, valid=valid, ft=ft)
     return x, nc
 
 
@@ -105,19 +105,20 @@ def _init_local_attn(key, cfg, max_seq):
     }
 
 
-def _apply_local_attn(p, x, *, cfg, cache, pos, mode, lengths=None):
+def _apply_local_attn(p, x, *, cfg, cache, pos, mode, lengths=None, ft=None):
     a, nc = L.apply_attention(
         p["attn"], x, cfg=cfg, cache=cache, pos=pos, mode=mode,
         window=cfg.local_window, rope_theta=cfg.rope_theta, lengths=lengths,
+        ft=ft,
     )
     x = x + a
-    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg)
+    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg, ft=ft)
     return x, nc
 
 
-def _apply_mamba(p, x, *, cfg, cache, pos, mode, lengths=None):
+def _apply_mamba(p, x, *, cfg, cache, pos, mode, lengths=None, ft=None):
     a, nc = L.apply_mamba(p, x, cfg=cfg, cache=cache, pos=pos, mode=mode,
-                          lengths=lengths)
+                          lengths=lengths, ft=ft)
     return x + a, nc
 
 
@@ -126,11 +127,11 @@ def _init_rglru_block(key, cfg, max_seq):
     return {"rec": L.init_rglru(k1, cfg, max_seq), "mlp": L.init_mlp(k2, cfg, gated=True)}
 
 
-def _apply_rglru_block(p, x, *, cfg, cache, pos, mode, lengths=None):
+def _apply_rglru_block(p, x, *, cfg, cache, pos, mode, lengths=None, ft=None):
     a, nc = L.apply_rglru(p["rec"], x, cfg=cfg, cache=cache, pos=pos,
-                          mode=mode, lengths=lengths)
+                          mode=mode, lengths=lengths, ft=ft)
     x = x + a
-    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg)
+    x = x + L.apply_mlp(p["mlp"], x, cfg=cfg, ft=ft)
     return x, nc
 
 
@@ -183,13 +184,16 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def apply_stack(units_params, x, *, cfg: ModelConfig, caches=None, pos=None,
-                mode="train", lengths=None):
+                mode="train", lengths=None, ft=None):
     """Run all pattern units; each unit is one lax.scan over its repeats.
 
     ``lengths`` [B] (bucketed batched prefill) carries per-row true prompt
     lengths down to every block so cache writes and recurrent state updates
     stay exact under bucket padding; ``pos`` in prefill mode is the static
-    chunk offset."""
+    chunk offset. ``ft`` (serving) is the :class:`repro.ft.FTContext`
+    protection context — the scan body traces each unit ONCE, so every
+    repeat of a protected projection shares one registry entry and one
+    in-kernel roll-forward schedule."""
     new_caches = []
     for u, (blocks, repeat) in enumerate(cfg.layer_pattern()):
         p_u = units_params[u]
@@ -205,7 +209,7 @@ def apply_stack(units_params, x, *, cfg: ModelConfig, caches=None, pos=None,
             for b, bname in enumerate(_blocks):
                 h, nc = BLOCKS[bname].apply(
                     p_i[b], h, cfg=cfg, cache=c_i[b], pos=pos, mode=mode,
-                    lengths=lengths,
+                    lengths=lengths, ft=ft,
                 )
                 ncs.append(nc if nc is not None else 0)
             return h, tuple(ncs)

@@ -4,12 +4,17 @@
                          decode step for the whole slot pool, per-slot
                          positions, entangled int8 head GEMM on every decode
                          step when ft_mode='entangle' (slot -> group =
-                         slot % M), startup autotune warmup
+                         slot % M), protection widened to the in-model
+                         QKV/MLP/router GEMMs via ServeConfig.ft_scope
+                         (head | qkv | mlp | all; repro.ft subsystem),
+                         startup autotune warmup over the full protected
+                         shape census
   reference.PerSlotEngine  the pre-batching per-slot baseline (A/B tests,
                          throughput benchmarks)
-  ft_logits              the fused entangled int8 logits projection and its
-                         batched-decode / batched-prefill entries
-                         (ft_logits_decode, ft_logits_prefill)
+  ft_logits              the entangled int8 logits projection — since PR 4
+                         a thin shim over repro.ft.protected_matmul keeping
+                         the serving signatures (ft_logits_decode,
+                         ft_logits_prefill, quantize_head)
 
 Prefill pipeline (admission hot path)
 -------------------------------------

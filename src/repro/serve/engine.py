@@ -36,11 +36,18 @@ Fault tolerance (the paper's technique in the serving path): with
 ``ft_mode='entangle'`` the final logits projection of EVERY decode step —
 and of every admission batch's first token — runs as the fused entangled
 int8 GEMM over M request groups (serve/ft_logits), slots mapped round-robin
-to groups (slot -> group = slot % M). ``step(failed_group=r)`` injects a
-fail-stop into group r's compute (prefill head included); the in-kernel
-roll-forward recovers its logits from the other M-1 groups' entangled
-accumulators, so decoded tokens are bit-identical with and without the
-failure — no request observes it.
+to groups (slot -> group = slot % M). ``ServeConfig.ft_scope`` widens the
+protection beyond the head through the unified protected-GEMM subsystem
+(:mod:`repro.ft`): ``"qkv"`` additionally runs the mixer input projections
+(attention Q/K/V, Mamba in_proj, RG-LRU in_x/in_gate) entangled, ``"mlp"``
+the FFN projections (MLP gate/up/down, MoE router), ``"all"`` every
+protected site — on the decode hot path AND inside every prefill-admission
+chunk, where the QKV/MLP GEMMs dominate the FLOP budget.
+``step(failed_group=r)`` injects a fail-stop into group r's compute at
+every protected site of the step; the in-kernel roll-forward recovers its
+outputs from the other M-1 groups' entangled accumulators, so decoded
+tokens are bit-identical with and without the failure — no request
+observes it, at any scope.
 
 Autotune warmup contract: with ``blocks='auto'`` the engine sweeps the head
 GEMM's block sizes at startup (``warm_autotune``) for its decode AND
@@ -65,6 +72,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.plan import make_plan
 from repro.dist import sharding
+from repro.ft import SCOPES, FTContext, PlanRegistry
 from repro.kernels import ops as kops
 from repro.models.api import get_model
 from repro.models.layers import ACT_DTYPE
@@ -93,6 +101,9 @@ class ServeConfig:
     ft_mode: str = "none"  # none | entangle
     ft_M: int = 4
     ft_w: int = 32
+    # protected-GEMM scope: head | qkv | mlp | all (repro.ft.SCOPES) —
+    # which projections beyond the logits head run entangled
+    ft_scope: str = "head"
     greedy: bool = True
     # head-GEMM block sizes: None | dict | "auto" (autotuned at startup)
     blocks: Optional[object] = None
@@ -158,11 +169,30 @@ class ServeEngine:
             if B % scfg.ft_M:
                 raise ValueError(
                     f"max_batch={B} must be divisible by ft_M={scfg.ft_M}")
+            if scfg.ft_scope not in SCOPES:
+                raise ValueError(
+                    f"unknown ft_scope {scfg.ft_scope!r}; expected one of "
+                    f"{sorted(SCOPES)}")
+            if scfg.ft_scope != "head" and cfg.family == "encdec":
+                raise ValueError(
+                    "in-model protected GEMMs are decoder-only; enc-dec "
+                    "supports ft_scope='head' only")
             # plan reuse: made ONCE, shared by every decode step, every
-            # admission-batch head projection and every autotune key
+            # admission-batch head projection, every in-model protected
+            # site and every autotune key
             self.plan = make_plan(scfg.ft_M, scfg.ft_w)
             self.head_q, self.w_scale = quantize_head(
                 self.model.head_weights(params, cfg))
+            # the protected-GEMM subsystem: one registry for the whole
+            # forward pass; layer sites get "auto" blocks only when the
+            # engine itself autotunes (a user dict targets the HEAD shape
+            # and must not leak onto differently-shaped layer GEMMs)
+            self.registry = PlanRegistry(
+                self.plan,
+                blocks="auto" if scfg.blocks == "auto" else None)
+            self.ftx = FTContext(registry=self.registry,
+                                 scope=scfg.ft_scope,
+                                 use_pallas=scfg.use_pallas)
         elif scfg.ft_mode != "none":
             raise ValueError(f"unknown ft_mode {scfg.ft_mode!r}")
         self._head_blocks = self._default_head_blocks()
@@ -176,16 +206,25 @@ class ServeEngine:
         # NO donation on chunk 0: it is fed the shared _fresh_prefill
         # template, which must survive every admission. Continuation
         # chunks exclusively own their cache/h_last carry — donate them.
-        self._prefill_chunk = jax.jit(self._prefill_chunk_impl,
-                                      static_argnames=("pos0",))
+        # failed_group is static like on the decode path: each injected
+        # variant is its own program sharing plans and autotune winners
+        # (always None when ft_scope == 'head', so no extra retraces).
+        self._prefill_chunk = jax.jit(
+            self._prefill_chunk_impl,
+            static_argnames=("pos0", "failed_group"))
         self._prefill_chunk_cont = jax.jit(
-            self._prefill_chunk_impl, static_argnames=("pos0",),
+            self._prefill_chunk_impl,
+            static_argnames=("pos0", "failed_group"),
             donate_argnums=(2, 4) if donate else ())
         self._prefill_head = jax.jit(self._prefill_head_impl,
                                      static_argnames=("failed_group",))
         self._decode = jax.jit(self._decode_impl,
                                static_argnames=("failed_group",),
                                donate_argnums=(1,) if donate else ())
+        # startup plan construction: prime the registry with every
+        # protected shape the engine can trace (decode + all chunk widths)
+        # so no trace ever creates a plan entry mid-flight
+        self.protected_census = self._protected_shape_census()
         if scfg.blocks == "auto":
             self.warm_autotune()
 
@@ -255,17 +294,29 @@ class ServeEngine:
             return big.at[:, sids].set(jnp.where(v, small, cur))
         return jax.tree.map(ins, cache, pcache)
 
+    def _model_ft(self, failed_group: Optional[int]):
+        """The FT context threaded INTO the model forward pass, or None
+        when no in-model site is protected (ft off, or scope == 'head'
+        where protection lives entirely in the engine's head projection)."""
+        if self.scfg.ft_mode != "entangle" or self.scfg.ft_scope == "head":
+            return None
+        return self.ftx.with_failed(failed_group)
+
     def _prefill_chunk_impl(self, params, tokens, cache, lengths, h_last,
-                            pos0: int = 0):
+                            pos0: int = 0,
+                            failed_group: Optional[int] = None):
         """ONE chunk of the batched admission prefill: tokens [Bp, C] at
         absolute positions pos0..pos0+C-1, per-row true ``lengths``.
         Captures each row's last-prompt hidden state in ``h_last`` as soon
-        as the chunk containing position lengths-1 is processed."""
+        as the chunk containing position lengths-1 is processed. With an
+        ft_scope beyond 'head', the chunk's QKV/MLP/router GEMMs run
+        entangled and ``failed_group`` is rolled forward inside them."""
         ctx = (sharding.axis_rules(self.mesh) if self.mesh is not None
                else contextlib.nullcontext())
         with ctx:
             h, new_cache = self.model.prefill_chunk(
-                params, tokens, self.cfg, cache, pos0=pos0, lengths=lengths)
+                params, tokens, self.cfg, cache, pos0=pos0, lengths=lengths,
+                ft=self._model_ft(failed_group))
             C = tokens.shape[1]
             idx = lengths - 1 - pos0
             in_chunk = (idx >= 0) & (idx < C)
@@ -317,7 +368,8 @@ class ServeEngine:
         with ctx:
             tok = last_tok[:, None]
             h, new_cache = self.model.decode_hidden(
-                params, tok, cache, pos, self.cfg)
+                params, tok, cache, pos, self.cfg,
+                ft=self._model_ft(failed_group))
             logits = self._head_logits(params, h, active, head,
                                        failed_group, ft_logits_decode)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -372,9 +424,15 @@ class ServeEngine:
         sz = min(C, Tb - pos0)
         chunk_fn = self._prefill_chunk if pos0 == 0 else \
             self._prefill_chunk_cont
+        # fail-stop injection reaches the chunk's protected GEMMs only
+        # when an in-model scope is on; at scope 'head' the single healthy
+        # chunk program serves every failed_group (head injection happens
+        # in _prefill_head)
+        fg = (failed_group if self._model_ft(failed_group) is not None
+              else None)
         p["h_last"], p["cache"] = chunk_fn(
             self.params, p["tokens"][:, pos0 : pos0 + sz], p["cache"],
-            p["lengths"], p["h_last"], pos0=pos0)
+            p["lengths"], p["h_last"], pos0=pos0, failed_group=fg)
         self.prefill_calls += 1
         p["pos0"] = pos0 + sz
         if p["pos0"] < Tb:
@@ -505,12 +563,14 @@ class ServeEngine:
     # -- startup autotune warmup ---------------------------------------------
 
     def warm_autotune(self) -> dict:
-        """Warm the kernel autotune cache for the engine's head-GEMM shape
-        census — decode AND prefill-admission shapes (the ROADMAP contract).
-        Sweeps run HERE, eagerly; the in-jit ``blocks='auto'`` resolution
-        then only ever cache-hits, whether it fires inside the traced
-        decode step or inside a traced prefill-head projection. No-op
-        unless the entangled head is on and ``blocks == 'auto'``."""
+        """Warm the kernel autotune cache for the engine's protected-GEMM
+        shape census — the head's decode AND prefill-admission shapes plus,
+        with an ``ft_scope`` beyond ``head``, EVERY in-model protected site
+        at every decode/chunk call shape (the ROADMAP contract). Sweeps run
+        HERE, eagerly; the in-jit ``blocks='auto'`` resolution then only
+        ever cache-hits, whether it fires inside the traced decode step,
+        a traced prefill chunk or a traced head projection. No-op unless
+        the entangled head is on and ``blocks == 'auto'``."""
         if self.scfg.ft_mode != "entangle" or self.scfg.blocks != "auto":
             return {}
         M, B = self.plan.M, self.scfg.max_batch
@@ -523,4 +583,42 @@ class ServeEngine:
             won[shape] = kops.warm_entangled_matmul(*shape, self.plan,
                                                     fuse_epilogue=True)
             self.census.setdefault("head_gemm", {})[shape] = won[shape]
+        for site, shape in sorted(self.protected_census):
+            w = kops.warm_entangled_matmul(*shape, self.plan,
+                                           fuse_epilogue=True)
+            self.census.setdefault("protected", {})[(site, shape)] = w
+            won[(site, shape)] = w
         return won
+
+    def _protected_shape_census(self) -> dict:
+        """{(site, (M, Bg, K, N)): blocks} for every in-model protected
+        GEMM the engine can trace, enumerated by abstract-evaluating the
+        decode step and one prefill chunk per distinct chunk width with a
+        census-only :class:`repro.ft.FTContext` — every PlanEntry is
+        constructed HERE, at startup, in the engine's own registry; no
+        kernel runs, nothing compiles. Empty at ft_scope='head'."""
+        if self.scfg.ft_mode != "entangle" or self.scfg.ft_scope == "head":
+            return {}
+        ctx = dataclasses.replace(self.ftx, census_only=True)
+        B = self.scfg.max_batch
+        jax.eval_shape(
+            lambda p, c: self.model.decode_hidden(
+                p, jnp.zeros((B, 1), jnp.int32), c,
+                jnp.zeros((B,), jnp.int32), self.cfg, ft=ctx),
+            self.params, self.cache)
+        widths = set()
+        for Tb in self.buckets:
+            step = self.scfg.prefill_chunk or Tb
+            pos0 = 0
+            while pos0 < Tb:
+                sz = min(step, Tb - pos0)
+                widths.add(sz)
+                pos0 += sz
+        for C in sorted(widths):
+            jax.eval_shape(
+                lambda p, c, _C=C: self.model.prefill_chunk(
+                    p, jnp.zeros((self.Bp, _C), jnp.int32), self.cfg, c,
+                    pos0=0, lengths=jnp.zeros((self.Bp,), jnp.int32),
+                    ft=ctx),
+                self.params, self._fresh_prefill)
+        return self.registry.census()

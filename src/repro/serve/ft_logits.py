@@ -1,16 +1,17 @@
-"""Entangled int8 logits projection: the paper's technique on the serving
-hot path.
+"""Entangled int8 logits projection — now a thin user of the unified
+protected-GEMM subsystem (:mod:`repro.ft`).
 
 The head GEMM (hidden [B, D] x head [D, V]) is sesquilinear, so it runs
-directly on entangled inputs: the batch is split into M request groups
-(streams), activations are fixed-point-quantized within the plan's eq. (13)
-budget (a K-deep integer dot needs K * |a|max * |w|max <= D_max), and run
-through the fused Pallas kernel — entangle-on-load, int GEMM, extraction in
-the flush epilogue, one pallas_call, no codec HBM sweeps. Any single
-group's fail-stop is rolled forward from the other M-1 entangled
-accumulators inside the same kernel (``fuse_epilogue=False`` keeps the
-separate disentangle pass for callers that must inject/persist entangled
-outputs).
+directly on entangled inputs through :func:`repro.ft.protected_matmul`:
+the batch is split into M request groups (streams), activations are
+fixed-point-quantized within the plan's eq. (13) budget, and the fused
+Pallas kernel rolls any single group's fail-stop forward from the other
+M-1 entangled accumulators inside the same kernel.
+
+The quantize-head / plan-construction logic that used to live here (and
+was duplicated between the decode and prefill entries) moved to
+``repro/ft/quantize.py`` and ``repro/ft/protected.py``; this module keeps
+the public serving signatures:
 
 :func:`ft_logits` is the library form (caller-chosen contiguous grouping).
 :func:`ft_logits_decode` is the batched serving engine's per-step entry:
@@ -31,20 +32,11 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core.entangle import disentangle
-from repro.core.failstop import GARBAGE
 from repro.core.plan import EntanglePlan, make_plan
-from repro.kernels import ops as kops
-
-
-def quantize_head(head: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Symmetric per-tensor int8 weight quantization."""
-    amax = jnp.maximum(jnp.max(jnp.abs(head)), 1e-9)
-    scale = 127.0 / amax
-    return jnp.clip(jnp.round(head * scale), -127, 127).astype(jnp.int32), scale
+from repro.ft.protected import group_order, protected_matmul
+from repro.ft.quantize import quantize_weight as quantize_head  # noqa: F401
+# re-exported compat names: quantize_head is the subsystem's weight policy
 
 
 def ft_logits(
@@ -59,58 +51,20 @@ def ft_logits(
     fuse_epilogue: bool = True,
     blocks=None,
 ) -> jax.Array:
-    B, D = h.shape
-    V = head_q.shape[1]
+    """Library form: rows grouped contiguously ([M, B/M] caller layout)."""
+    B = h.shape[0]
     assert B % M == 0, f"batch {B} must split into M={M} request groups"
     plan = plan or make_plan(M, 32)
-
-    # activation budget so the K-deep int dot stays within eq. (13)
-    a_budget = plan.max_output_magnitude // (D * 127)
-    a_budget = max(a_budget, 1)
-    amax = jnp.maximum(jnp.max(jnp.abs(h)), 1e-9)
-    a_scale = a_budget / amax
-    hq = jnp.round(h * a_scale).astype(jnp.int32).reshape(M, B // M, D)
-
-    if use_pallas and fuse_epilogue:
-        # production hot path: entangle -> GEMM -> extract in ONE
-        # pallas_call; a fail-stopped group is rolled forward in-kernel by
-        # statically excluding its accumulator from the extraction (the
-        # algebra never reads it, so injecting garbage is equivalent)
-        rec = kops.entangled_matmul(
-            hq, head_q, plan, fuse_epilogue=True, failed=failed_group,
-            blocks=blocks)
-    else:
-        if use_pallas:
-            delta = kops.entangled_matmul(hq, head_q, plan, blocks=blocks)
-        else:
-            from repro.core.entangle import entangle
-
-            eps = entangle(hq, plan)
-            delta = jnp.einsum("mbk,kv->mbv", eps, head_q).astype(jnp.int32)
-
-        if failed_group is not None:
-            delta = delta.at[failed_group].set(GARBAGE)
-        rec = disentangle(delta, plan, failed=failed_group)  # [M, B/M, V]
-    logits = rec.astype(jnp.float32) / (a_scale * w_scale)
-    return logits.reshape(B, V)
+    return protected_matmul(
+        h, (head_q, w_scale), plan=plan, failed_group=failed_group,
+        use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks,
+        contiguous=True)
 
 
-# -- batched-decode entry -----------------------------------------------------
-
-def decode_group_order(B: int, M: int) -> tuple[np.ndarray, np.ndarray]:
-    """Static permutation realizing the engine's slot -> group = slot % M
-    mapping on top of :func:`ft_logits`'s contiguous [M, B/M] grouping.
-
-    ``order[g * B//M + j] = j * M + g`` — position p of the permuted batch
-    holds slot ``order[p]``; ``inv`` undoes it (``inv[slot]`` = position of
-    that slot's logits in the permuted output). Round-robin grouping keeps
-    every entangled group populated whenever >= M slots are active, so a
-    fail-stop in any group is recoverable from M-1 *other* live groups.
-    """
-    assert B % M == 0, f"batch {B} must split into M={M} request groups"
-    order = np.arange(B, dtype=np.int32).reshape(B // M, M).T.reshape(B)
-    inv = np.argsort(order).astype(np.int32)
-    return order, inv
+def decode_group_order(B: int, M: int):
+    """Compat alias for :func:`repro.ft.protected.group_order` — the
+    engine's slot -> group = slot % M permutation."""
+    return group_order(B, M)
 
 
 def ft_logits_decode(
@@ -132,13 +86,9 @@ def ft_logits_decode(
     at startup and reuses it every step, so no per-step (l, k) re-planning
     and a stable autotune/compile key across the serving lifetime.
     """
-    B = h.shape[0]
-    order, inv = decode_group_order(B, plan.M)
-    logits = ft_logits(
-        h[order], head_q, w_scale, M=plan.M, plan=plan,
-        failed_group=failed_group, use_pallas=use_pallas,
-        fuse_epilogue=fuse_epilogue, blocks=blocks)
-    return logits[inv]
+    return protected_matmul(
+        h, (head_q, w_scale), plan=plan, failed_group=failed_group,
+        use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks)
 
 
 def ft_logits_prefill(
@@ -154,24 +104,16 @@ def ft_logits_prefill(
 ) -> jax.Array:
     """Admission-time entry: project the last-prompt hidden states gathered
     from a bucketed batched prefill through the SAME fused entangled kernel
-    (and the same startup :class:`~repro.core.plan.EntanglePlan`) as decode,
-    so a fail-stop injected while a prompt batch is being admitted rolls
-    forward in-kernel and the first generated token is unchanged.
+    (and the same startup :class:`~repro.core.plan.EntanglePlan`) as decode.
 
-    Rows map round-robin to groups like decode (row -> group = row % M).
-    An admission batch need not divide into M groups — the batch is padded
-    with zero rows (exact: zeros entangle to zeros and cannot perturb any
-    other stream's accumulator, nor the shared activation scale) and the
-    pad logits are sliced off. The caller must zero any garbage rows (empty
-    admission slots) before calling, exactly like the decode path's
+    Rows map round-robin to groups like decode (row -> group = row % M);
+    an admission batch that does not divide into M groups is padded with
+    zero rows inside :func:`repro.ft.protected_matmul` (exact: zeros
+    entangle to zeros and cannot perturb any other stream's accumulator,
+    nor the shared activation scale). The caller must zero any garbage rows
+    (empty admission slots) before calling, exactly like the decode path's
     ``active`` masking, so they cannot poison the shared quantization scale.
     """
-    n = h.shape[0]
-    pad = (-n) % plan.M
-    if pad:
-        h = jnp.concatenate(
-            [h, jnp.zeros((pad, h.shape[1]), h.dtype)], axis=0)
-    logits = ft_logits_decode(
-        h, head_q, w_scale, plan=plan, failed_group=failed_group,
+    return protected_matmul(
+        h, (head_q, w_scale), plan=plan, failed_group=failed_group,
         use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks)
-    return logits[:n]

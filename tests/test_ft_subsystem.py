@@ -1,0 +1,149 @@
+"""Unified protected-GEMM subsystem (repro.ft) invariants.
+
+  * protected_matmul recovery is EXACT: for every failed group r, the
+    fail-stop-injected output equals the healthy output bitwise — fused
+    Pallas, unfused Pallas and XLA paths, contiguous and round-robin
+    grouping, row counts that do and do not divide into M groups;
+  * the integer path is faithful: dequantized outputs approximate the
+    float GEMM within the quantization step;
+  * the activation budget honors the plan's eq. (13) output bound for the
+    full contraction depth;
+  * the PlanRegistry keys entries by (site, shape, M, backend), clamps
+    default blocks to the call shape, and its census lists every site;
+  * the shipped pre-tuned seed cache (kernels/pretuned/interpret_cpu.json)
+    makes a COLD engine startup with blocks='auto' a pure cache hit — no
+    sweep runs even with an empty user cache file.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.plan import make_plan
+from repro.ft import (FTContext, PlanRegistry, activation_budget,
+                      default_blocks, group_order, protected_matmul,
+                      quantize_acts, quantize_weight)
+
+RNG = np.random.default_rng(23)
+
+
+def _xw(R=10, K=24, N=16):
+    x = jnp.asarray(RNG.normal(size=(R, K)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(K, N)).astype(np.float32))
+    return x, w
+
+
+@pytest.mark.parametrize("use_pallas,fuse", [(True, True), (True, False),
+                                             (False, False)])
+@pytest.mark.parametrize("R", [8, 10])  # 10: pads 2 zero rows to M=4 groups
+def test_protected_matmul_failstop_exact(use_pallas, fuse, R):
+    plan = make_plan(4, 32)
+    x, w = _xw(R=R)
+    healthy = protected_matmul(x, w, plan=plan, use_pallas=use_pallas,
+                               fuse_epilogue=fuse)
+    assert healthy.shape == (R, w.shape[1])
+    for r in range(plan.M):
+        injected = protected_matmul(x, w, plan=plan, failed_group=r,
+                                    use_pallas=use_pallas, fuse_epilogue=fuse)
+        np.testing.assert_array_equal(np.asarray(healthy),
+                                      np.asarray(injected),
+                                      err_msg=f"failed_group={r}")
+
+
+def test_protected_matmul_faithful_and_grouping_invariant():
+    """Quantize-dequantize stays within one quantization step of the float
+    GEMM, and contiguous vs round-robin grouping produce identical values
+    (grouping permutes streams, never the math)."""
+    plan = make_plan(4, 32)
+    x, w = _xw(R=8, K=24, N=16)
+    ref = np.asarray(x) @ np.asarray(w)
+    got = np.asarray(protected_matmul(x, w, plan=plan))
+    _, w_scale = quantize_weight(w)
+    _, a_scale = quantize_acts(x, plan, x.shape[1])
+    # worst-case rounding: K terms, each off by <= half a grid step per
+    # operand (cross term negligible and covered by the 0.25 slack)
+    K = x.shape[1]
+    bound = K * (0.5 * np.max(np.abs(w)) / float(a_scale)
+                 + 0.5 * np.max(np.abs(x)) / float(w_scale)
+                 + 0.25 / float(a_scale * w_scale))
+    assert np.max(np.abs(got - ref)) <= bound
+    rr = np.asarray(protected_matmul(x, w, plan=plan, contiguous=False))
+    cont = np.asarray(protected_matmul(x, w, plan=plan, contiguous=True))
+    # recovery is exact in BOTH layouts, so outputs match row-for-row —
+    # grouping only re-buckets rows onto streams, never changes the math
+    np.testing.assert_array_equal(rr, cont)
+
+
+def test_activation_budget_honors_eq13():
+    plan = make_plan(4, 32)
+    for K in (7, 64, 4096):
+        b = activation_budget(plan, K)
+        assert b >= 1 and K * b * 127 <= max(plan.max_output_magnitude,
+                                             K * 127)
+        if b > 1:  # non-degenerate budgets must fit exactly
+            assert K * b * 127 <= plan.max_output_magnitude
+
+
+def test_group_order_roundtrip():
+    order, inv = group_order(12, 4)
+    assert (order[inv] == np.arange(12)).all()
+    # row -> group = row % M: group g holds rows g, g+M, g+2M, ...
+    assert list(order[:3]) == [0, 4, 8]
+
+
+def test_registry_keys_blocks_and_census():
+    plan = make_plan(4, 32)
+    reg = PlanRegistry(plan)
+    e = reg.entry("qkv.q", rows=4, K=64, N=48, backend="interpret")
+    assert e.shape == (4, 1, 64, 48)  # rows pad to M groups -> 1 row/group
+    assert e.blocks == {"bb": 8, "bn": 64, "bk": 64}  # shape-clamped pow2
+    assert reg.get("qkv.q", e.shape, "interpret") is e
+    # same site, other shape -> distinct entry; census lists both
+    e2 = reg.entry("qkv.q", rows=128, K=64, N=48, backend="interpret")
+    assert e2 is not e and e2.shape == (4, 32, 64, 48)
+    assert set(reg.census()) == {("qkv.q", e.shape), ("qkv.q", e2.shape)}
+    assert default_blocks(1, 2048, 300) == {"bb": 8, "bn": 256, "bk": 256}
+
+
+def test_ftcontext_scopes():
+    reg = PlanRegistry(make_plan(4, 32))
+    for scope, protected in [("head", ["head"]),
+                             ("qkv", ["head", "qkv.q", "qkv.in"]),
+                             ("mlp", ["head", "mlp.down", "mlp.router"]),
+                             ("all", ["head", "qkv.k", "mlp.up"])]:
+        ctx = FTContext(registry=reg, scope=scope)
+        for site in protected:
+            assert ctx.protects(site), (scope, site)
+    ctx = FTContext(registry=reg, scope="qkv")
+    assert not ctx.protects("mlp.up")
+    with pytest.raises(ValueError, match="ft_scope"):
+        FTContext(registry=reg, scope="everything")
+
+
+def test_pretuned_seed_cache_cold_hit(tmp_path, monkeypatch):
+    """A cold process (empty user cache file) whose serving shapes are
+    covered by the shipped interpret_cpu.json must warm WITHOUT a single
+    sweep — the ROADMAP 'ship a pre-tuned cache' contract."""
+    from repro.configs import get_smoke_config
+    from repro.kernels import autotune
+    from repro.models import get_model
+    from repro.serve import ServeConfig, ServeEngine
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    cache = autotune.reset_cache(str(tmp_path / "at.json"))
+    try:
+        cfg = get_smoke_config("llama3.2-1b")
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg, max_seq=48)
+        eng = ServeEngine(
+            cfg, ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle",
+                             ft_M=4, ft_scope="all", blocks="auto"), params)
+        assert cache.sweeps == 0, "cold warm swept despite pretuned cache"
+        assert cache.hits > 0
+        # warm covered head AND every in-model protected site
+        assert eng.census["head_gemm"]
+        sites = {s for s, _ in eng.census["protected"]}
+        assert {"qkv.q", "qkv.k", "qkv.v",
+                "mlp.gate", "mlp.up", "mlp.down"} <= sites
+    finally:
+        autotune.reset_cache(None)

@@ -106,6 +106,58 @@ def test_prefill_ft_failstop_bit_identical_all_groups():
                 err_msg=f"failed_group={fg} rid={r}")
 
 
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b"])
+def test_prefill_ft_scope_all_failstop_bit_identical(arch):
+    """ft_scope='all' + CHUNKED bucketed admission: every QKV/MLP GEMM of
+    every prefill chunk runs entangled, and a fail-stop injected on every
+    step in ANY single group rolls forward in-kernel — all generated
+    tokens bit-identical to the healthy scope='all' run, for dense, ssm
+    and hybrid models."""
+    cfg, _, params = _setup(arch)
+    prompts = _ragged_prompts(cfg, [3, 20, 7, 12, 5])
+    scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
+                       ft_scope="all", prefill_chunk=8)
+    healthy, eng = _run(ServeEngine, cfg, scfg, params, prompts, max_new=2)
+    assert eng.census["prefill"], "admission never took the bucketed path"
+    assert set(healthy) == set(range(5))
+    for fg in range(4):
+        injected, _ = _run(ServeEngine, cfg, scfg, params, prompts,
+                           max_new=2, failed_group=fg)
+        for r in healthy:
+            np.testing.assert_array_equal(
+                healthy[r], injected[r],
+                err_msg=f"{arch} failed_group={fg} rid={r}")
+
+
+def test_warm_autotune_covers_protected_scope_shapes(tmp_path, monkeypatch):
+    """blocks='auto' + ft_scope='all': startup warmup must pre-sweep EVERY
+    in-model protected GEMM shape (decode and each chunk width) as well as
+    the head shapes, so the in-jit resolution never sweeps inside a traced
+    program — and the engine then serves a wave without error."""
+    from repro.ft import group_rows
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    cfg, _, params = _setup("llama3.2-1b")
+    eng = ServeEngine(cfg, ServeConfig(max_batch=4, max_seq=48,
+                                       ft_mode="entangle", ft_M=4,
+                                       ft_scope="all", prefill_chunk=8,
+                                       blocks="auto"), params)
+    D, V = eng.head_q.shape
+    assert (4, 1, D, V) in eng.census["head_gemm"]
+    shapes = eng.census["protected"]
+    # decode: 4 rows -> 1 per group; chunk: Bp * 8 rows -> 8 per group
+    hd = cfg.resolved_head_dim
+    for rows in (4, 4 * 8):
+        assert ("qkv.q", (4, group_rows(rows, 4), D,
+                          cfg.n_heads * hd)) in shapes
+        assert ("mlp.down", (4, group_rows(rows, 4), cfg.d_ff, D)) in shapes
+    for r, p in enumerate(_ragged_prompts(cfg, [4, 9])):
+        eng.submit(Request(rid=r, prompt=p, max_new=2))
+    done = eng.run_to_completion(max_steps=100)
+    assert len(done) == 2
+
+
 def test_oversize_prompt_rejected_loudly():
     """A prompt longer than the largest configured bucket must raise at
     submit() (silently it would retrace per length or OOM the planner)."""

@@ -95,6 +95,31 @@ def test_ft_failstop_bit_identical():
                 healthy[r], injected[r], err_msg=f"failed_group={fg} rid={r}")
 
 
+@pytest.mark.parametrize("scope", ["head", "qkv", "mlp", "all"])
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b"])
+def test_ft_scope_failstop_bit_identical(arch, scope):
+    """The scope x failure matrix (dense/ssm/hybrid x head/qkv/mlp/all x
+    every group): with protection widened to the in-model QKV/MLP
+    projections (repro.ft), a fail-stop injected on EVERY step into ANY
+    single group — reaching every protected GEMM of the decode step and
+    the admission head — still decodes bit-identically to the healthy run
+    at the same scope, via the per-site in-kernel roll-forward."""
+    cfg, _, params = _setup(arch)
+    prompts = _prompts(5, cfg.vocab_size)
+    scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
+                       ft_scope=scope)
+    healthy, _, _ = _run(ServeEngine, cfg, scfg, params, prompts, max_new=3)
+    assert set(healthy) == set(range(5))
+    for fg in range(4):
+        injected, _, _ = _run(ServeEngine, cfg, scfg, params, prompts,
+                              max_new=3, failed_group=fg)
+        for r in healthy:
+            np.testing.assert_array_equal(
+                healthy[r], injected[r],
+                err_msg=f"{arch} scope={scope} failed_group={fg} rid={r}")
+
+
 def test_exactly_max_new_tokens():
     """Off-by-one fix: exactly max_new tokens generated, none discarded —
     including max_new=1 (prefill-only request, finished at admission)."""
