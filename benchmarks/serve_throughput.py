@@ -21,12 +21,17 @@ prefill) for:
   * ``prefill_bucketed_ft_all`` — same, every admission-chunk GEMM entangled
 
 Derived records: ``serve_speedup`` / ``prefill_speedup`` (batched vs
-per-request, both >= 2x acceptance gates) and per-scope
-``ft_overhead_pct`` records — ``serve_ft_overhead_pct`` (scope=head) /
-``serve_ft_overhead_pct_all`` (scope=all), and the prefill twins. The CPU
-numbers run the Pallas kernels in interpret mode — the FT overhead % here
-is an upper bound; the paper's 1.8-2.8% band is the compiled-TPU target
-tracked in ROADMAP.md.
+per-request, both >= 2x acceptance gates), per-scope ``ft_overhead_pct``
+records — ``serve_ft_overhead_pct`` (scope=head) /
+``serve_ft_overhead_pct_all`` (scope=all), and the prefill twins — and
+``ft_coverage`` records asserting which protected-site CATEGORIES the
+scope=all engines actually compiled plans for: ``serve_ft_coverage_all``
+(dense arch: head/qkv/mlp/out) and ``serve_ft_coverage_moe`` (a
+census-only MoE engine: + the grouped per-expert ``moe`` category). Since
+the v2 redesign ``ft_scope='all'`` must genuinely cover everything, so CI
+gates on these records. The CPU numbers run the Pallas kernels in
+interpret mode — the FT overhead % here is an upper bound; the paper's
+1.8-2.8% band is the compiled-TPU target tracked in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -72,6 +77,18 @@ def _derive(emit, records, tps, *, prefix: str, label: str, main: str,
                         "below_noise": below_noise,
                         "note": "interpret CPU upper bound; TPU target is "
                                 "the paper's 1.8-2.8% band"})
+    return ok
+
+
+def _coverage(emit, records, name: str, eng, want: set) -> bool:
+    """Record the protected-site categories a scope=all engine compiled
+    plans for — the 'ft_scope=all means ALL' regression gate."""
+    cats = {"head"} | (set(eng.plans.categories()) if eng.plans else set())
+    ok = want <= cats
+    emit(name, 0.0, f"categories={sorted(cats)} "
+                    f"(gate >= {sorted(want)}: {'PASS' if ok else 'FAIL'})")
+    records.append({"name": name, "categories": sorted(cats),
+                    "required": sorted(want), "ok": ok})
     return ok
 
 
@@ -131,6 +148,24 @@ def run(emit, *, max_batch: int = 8, n_requests: int = 16,
                  base="serve_per_slot",
                  ft={"head": "serve_batched_ft",
                      "all": "serve_batched_ft_all"})
+
+    # coverage gates: scope=all really protects every category. The dense
+    # arch above covers head/qkv/mlp/out; the MoE categories (grouped
+    # per-expert GEMMs + router) are asserted on a census-only MoE engine —
+    # startup plan compilation is cheap (abstract traces, no kernels), so
+    # no extra wave is needed.
+    ok &= _coverage(emit, records, "serve_ft_coverage_all",
+                    variants["serve_batched_ft_all"],
+                    {"head", "qkv", "mlp", "out"})
+    moe_cfg = get_smoke_config("deepseek-v2-lite-16b")
+    moe_params = get_model(moe_cfg).init(jax.random.PRNGKey(0), moe_cfg,
+                                         max_seq=64)
+    moe_eng = ServeEngine(
+        moe_cfg, ServeConfig(max_batch=max_batch, max_seq=64,
+                             ft_mode="entangle", ft_M=ft_M,
+                             ft_scope="all"), moe_params)
+    ok &= _coverage(emit, records, "serve_ft_coverage_moe", moe_eng,
+                    {"head", "qkv", "mlp", "out", "moe"})
 
     # -- prompt-heavy admission wave: pure prefill throughput ----------------
     # max_new=1 requests finish at admission, so the wave measures ONLY the

@@ -1,51 +1,74 @@
 """Unified protected-GEMM subsystem: the paper's numerical entanglement as
 a reusable wrapper around EVERY hot-path projection.
 
-Until PR 4 only the serving head GEMM ran entangled
-(``serve/ft_logits.py``); the far larger prefill-chunk QKV/MLP admission
-GEMMs were unprotected — the exact gap checksum-style ABFT pays 9-14x more
-to close. This package extracts that one-off wiring into a subsystem any
-GEMM can opt into:
+v2 architecture — compiled at the top, pluggable at the bottom:
 
-  quantize.py   the int8 policy — per-tensor weight quantization + the
-                eq. (13) depth-aware activation budget
-  registry.py   PlanRegistry: (site, shape, M, backend) -> PlanEntry
-                (shared EntanglePlan + per-shape block sizes); the
+  quantize.py   the int8 policy — per-tensor weight quantization (with
+                the stacked per-layer/per-expert form the startup hoist
+                uses) + the eq. (13) depth-aware activation budget, and
+                the TRACE_STATS counter proving no weight-quantization op
+                enters a traced step
+  registry.py   PlanRegistry: (site, shape, M, backend) ->
+                :class:`ProtectionPlan` (shared EntanglePlan + per-shape
+                block sizes; ``grouped`` marks MoE per-expert sites); the
                 protected shape census warm_autotune iterates
-  protected.py  protected_matmul / ProtectedLinear — flatten, quantize,
-                round-robin group, fused entangled kernel, roll-forward —
+  plans.py      the ahead-of-time layer: ``compile_plans`` freezes the
+                startup census into an immutable :class:`CompiledPlans`,
+                ``prepare_params`` quantizes every protected site's
+                weights ONCE into ``q8`` entries inside the params pytree
+                (per layer, per expert — sliced by the layer scan like
+                the float masters)
+  protected.py  protected_matmul / protected_matmul_grouped — flatten,
+                quantize, round-robin group, fused entangled kernel
+                (backend-pluggable via kernels/ops), roll-forward —
+                ProtectedLinear (a thin executor over one compiled plan)
                 and FTContext, the scope-aware object threaded through
                 models/api -> transformer.apply_stack -> layers
+  heads.py      the serving head entries (ft_logits / _decode / _prefill,
+                quantize_head); ``repro.serve.ft_logits`` is a deprecated
+                shim over this module
 
 Scope model (``ServeConfig.ft_scope``): ``"head"`` protects the vocab
-projection (PR 2/3 behavior), ``"qkv"`` adds the mixer input projections
-(attention Q/K/V, MLA q/kv_a, Mamba in_proj, RG-LRU in_x/in_gate),
-``"mlp"`` adds the FFN projections (gate/up/down and the MoE router),
-``"all"`` protects everything. At every scope, a single fail-stop injected
-into any of the M request groups — during batched decode or chunked
-bucketed admission — rolls forward in-kernel with bit-identical tokens.
+projection, ``"qkv"`` adds the mixer input projections (attention Q/K/V,
+MLA q/kv_a, Mamba in_proj, RG-LRU in_x/in_gate), ``"mlp"`` the FFN
+projections (gate/up/down and the MoE router), ``"out"`` the mixer output
+projections (attention/MLA wo, Mamba out_proj, RG-LRU out), ``"moe"`` the
+MoE per-expert GEMMs (grouped entangled kernel), and ``"all"`` — since v2
+— genuinely everything. At every scope, a single fail-stop injected into
+any of the M request groups — during batched decode or chunked bucketed
+admission — rolls forward in-kernel with bit-identical tokens.
 
 See ``repro/kernels/__init__.py`` ("how to protect a new GEMM") for the
-recipe to add a site.
+recipe to add a site to the v2 plan-compile flow.
 """
+from repro.ft.plans import (PROTECTED_WEIGHT_KEYS, CompiledPlans,
+                            compile_plans, prepare_params)
 from repro.ft.protected import (FTContext, ProtectedLinear, SCOPES,
-                                group_order, protected_matmul)
+                                group_order, protected_matmul,
+                                protected_matmul_grouped)
 from repro.ft.quantize import (activation_budget, quantize_acts,
-                               quantize_weight)
-from repro.ft.registry import (PlanEntry, PlanRegistry, default_blocks,
-                               group_rows)
+                               quantize_weight, quantize_weight_stacked)
+from repro.ft.registry import (PlanEntry, PlanRegistry, ProtectionPlan,
+                               default_blocks, group_rows)
 
 __all__ = [
+    "CompiledPlans",
     "FTContext",
+    "PROTECTED_WEIGHT_KEYS",
     "PlanEntry",
     "PlanRegistry",
     "ProtectedLinear",
+    "ProtectionPlan",
     "SCOPES",
     "activation_budget",
+    "compile_plans",
     "default_blocks",
     "group_order",
     "group_rows",
+    "prepare_params",
     "protected_matmul",
+    "protected_matmul_grouped",
     "quantize_acts",
     "quantize_weight",
+    "quantize_weight_stacked",
 ]

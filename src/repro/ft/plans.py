@@ -1,0 +1,169 @@
+"""Ahead-of-time protection planning — the v2 top of the subsystem.
+
+PR 4 protected GEMMs *at call time*: every traced projection re-resolved
+its registry entry and re-quantized its float weights onto the eq. (13)
+int8 grid inside the traced graph — per call, per failed-group retrace.
+This module moves both to startup:
+
+  :func:`compile_plans`   walks the protected-site census (the registry
+                          populated by the engine's census-only abstract
+                          traces) and freezes it into an immutable
+                          :class:`CompiledPlans` — one
+                          :class:`~repro.ft.registry.ProtectionPlan` per
+                          (site, call shape), block sizes bound, backend
+                          namespaced. The FTContext threaded through the
+                          model then only *looks up* plans; a traced step
+                          can never create or mutate one.
+  :func:`prepare_params`  quantizes every protected site's weights ONCE
+                          (per layer / per expert, via
+                          :func:`~repro.ft.quantize.quantize_weight_stacked`)
+                          and installs the integer copies INSIDE the params
+                          pytree — a ``q8`` entry next to each dense site's
+                          float master, a ``<name>_q8`` sibling for raw
+                          MoE/router arrays. ``lax.scan`` over layer
+                          repeats slices the quantized stack exactly like
+                          the float one, so each layer keeps its own grid
+                          while the traced decode/prefill graph contains
+                          ZERO weight-quantization ops (asserted by the
+                          ``repro.ft.quantize.TRACE_STATS`` trace-count
+                          tests). Float masters stay in place for the
+                          unprotected/training paths; the integer copies
+                          cost one extra weight-sized buffer per protected
+                          site (int8 values in the kernel's int32
+                          container — packing is a recorded follow-up).
+
+Site discovery is declarative: :data:`PROTECTED_WEIGHT_KEYS` maps the
+param-dict key of every protectable projection to its scope category, so
+``prepare_params`` needs no model-specific walker — adding a protected
+site to a model means giving its weight dict one of these keys (or adding
+a new key here) plus the ``site=`` kwarg at the ``dense()`` call.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ft.quantize import quantize_weight_stacked
+from repro.ft.registry import PlanRegistry, ProtectionPlan
+
+# param-tree key -> scope category, for every protectable projection.
+# Dense sites are dicts holding a float "w"; raw sites (MoE expert stacks,
+# the router) are bare arrays and get a "<key>_q8" sibling instead.
+PROTECTED_WEIGHT_KEYS: dict[str, str] = {
+    # mixer input projections (category "qkv")
+    "wq": "qkv", "wk": "qkv", "wv": "qkv",          # GQA/MQA attention
+    "wq_a": "qkv", "wq_b": "qkv", "wkv_a": "qkv",   # MLA low-rank q / kv
+    "in_proj": "qkv",                               # Mamba
+    "in_x": "qkv", "in_gate": "qkv",                # RG-LRU
+    # FFN projections (category "mlp"; includes the MoE shared expert)
+    "gate": "mlp", "up": "mlp", "down": "mlp",
+    "router": "mlp",                                # raw [D, E] array
+    # output projections (category "out")
+    "wo": "out",                                    # attention / MLA
+    "out_proj": "out",                              # Mamba
+    "out": "out",                                   # RG-LRU
+    # MoE per-expert GEMMs (category "moe"; raw [E, D, F] stacks)
+    "we_gate": "moe", "we_up": "moe", "we_down": "moe",
+}
+
+# subtrees never touched by the serving forward pass — skipped so their
+# weights are not needlessly duplicated (MTP is a train-only head)
+_SKIP_SUBTREES = frozenset({"mtp"})
+
+
+def _is_float_weight(v) -> bool:
+    return (hasattr(v, "ndim") and hasattr(v, "dtype") and v.ndim >= 2
+            and jnp.issubdtype(v.dtype, jnp.floating))
+
+
+def prepare_params(params, *, scope: str):
+    """Return a copy of ``params`` with every in-scope protected site's
+    weights pre-quantized (see module docstring). Structure-preserving:
+    float masters and all other leaves pass through untouched, so the
+    result drops into every existing model entry point.
+    """
+    from repro.ft.protected import SCOPES  # deferred: protected imports us
+
+    cats = SCOPES[scope]
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                cat = PROTECTED_WEIGHT_KEYS.get(k)
+                if k in _SKIP_SUBTREES or cat not in cats:
+                    out[k] = walk(v) if k not in _SKIP_SUBTREES else v
+                elif isinstance(v, dict) and _is_float_weight(v.get("w")):
+                    nv = dict(v)
+                    nv["q8"] = quantize_weight_stacked(v["w"])
+                    out[k] = nv
+                elif _is_float_weight(v):
+                    out[k] = v
+                    out[k + "_q8"] = quantize_weight_stacked(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(x) for x in node)
+        return node
+
+    return walk(params)
+
+
+class CompiledPlans:
+    """Immutable (site, shape) -> :class:`ProtectionPlan` map.
+
+    Built once at startup by :func:`compile_plans`; the serving FTContext
+    resolves every protected projection here at trace time. Lookup misses
+    return ``None`` (the context falls back to a lazily created registry
+    entry with a warning — a census gap must degrade, not crash, a
+    serving process)."""
+
+    def __init__(self, plans: Iterable[ProtectionPlan]):
+        self._plans: dict[tuple, ProtectionPlan] = {
+            (p.site, p.shape): p for p in plans}
+
+    def lookup(self, site: str, shape: tuple) -> Optional[ProtectionPlan]:
+        return self._plans.get((site, shape))
+
+    def plans(self) -> tuple:
+        return tuple(self._plans.values())
+
+    def sites(self) -> frozenset:
+        return frozenset(p.site for p in self._plans.values())
+
+    def categories(self) -> frozenset:
+        """Protected scope categories covered by the compiled plans."""
+        return frozenset(p.site.split(".", 1)[0]
+                         for p in self._plans.values())
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def __iter__(self):
+        return iter(self._plans.values())
+
+    def __repr__(self) -> str:
+        return (f"CompiledPlans({len(self)} plans, "
+                f"sites={sorted(self.sites())})")
+
+
+def compile_plans(registry: PlanRegistry,
+                  census: Optional[Mapping] = None) -> CompiledPlans:
+    """Freeze the registry's protected-site census into immutable per-site
+    plans.
+
+    ``census`` (``{(site, shape): blocks}``, the engine's
+    ``protected_census``) selects which entries to freeze; ``None`` takes
+    every entry the registry holds. The registry must already be populated
+    — in the engine that happens via the census-only abstract traces of
+    the decode step and every prefill chunk width, so the compiled set
+    covers every shape a traced program can request.
+    """
+    entries = registry.entries()
+    if census is not None:
+        wanted = set(census)
+        entries = [e for e in entries if (e.site, e.shape) in wanted]
+    return CompiledPlans(entries)

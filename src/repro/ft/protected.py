@@ -1,26 +1,35 @@
 """ProtectedLinear — the paper's entangled roll-forward wrapped around any
 hot-path GEMM.
 
-:func:`protected_matmul` is the one code path every protected projection
-runs through: float activations of ANY leading shape are flattened to rows,
-quantized onto the plan's eq. (13) integer grid (:mod:`repro.ft.quantize`),
-padded with zero rows to a multiple of M (exact — zeros entangle to zeros
-and cannot perturb any other stream's accumulator, nor the shared
-activation scale), mapped round-robin onto the M entangled streams
-(row -> group = row % M, the serving engine's slot -> group contract), and
-pushed through the fused Pallas kernel
-(:func:`repro.kernels.ops.entangled_matmul`): entangle-on-load, int GEMM,
-extraction in the flush epilogue — one pallas_call, zero codec HBM sweeps.
-A fail-stopped group's accumulator is statically excluded from the
-in-kernel extraction (``failed=r``), so its outputs are rolled forward from
-the other M-1 streams and the recovered integers are bit-identical to a
+:func:`protected_matmul` is the one code path every plain protected
+projection runs through: float activations of ANY leading shape are
+flattened to rows, quantized onto the plan's eq. (13) integer grid
+(:mod:`repro.ft.quantize`), padded with zero rows to a multiple of M
+(exact — zeros entangle to zeros and cannot perturb any other stream's
+accumulator, nor the shared activation scale), mapped round-robin onto the
+M entangled streams (row -> group = row % M, the serving engine's
+slot -> group contract), and pushed through the fused kernel behind
+:mod:`repro.kernels.ops` (backend-pluggable: Pallas TPU, interpret CPU,
+reference, or a registered port): entangle-on-load, int GEMM, extraction
+in the flush epilogue — one kernel call, zero codec HBM sweeps. A
+fail-stopped group's accumulator is statically excluded from the in-kernel
+extraction (``failed=r``), so its outputs are rolled forward from the
+other M-1 streams and the recovered integers are bit-identical to a
 healthy run.
+
+:func:`protected_matmul_grouped` is the grouped (per-expert) twin for MoE:
+activations ``[..., E, C, K]`` against per-expert weights ``[E, K, N]``
+run as ONE grouped entangled kernel call — rows map round-robin onto the M
+streams *within each expert*, so recovery holds independently and
+identically for every expert.
 
 :class:`FTContext` is the object threaded through the model
 (``models/api.py -> transformer.apply_stack -> layers``): it decides which
 site categories the configured ``ft_scope`` protects, resolves each call
-site's :class:`~repro.ft.registry.PlanEntry`, and carries the static
-``failed_group`` of the current traced program.  Site names are
+site's :class:`~repro.ft.registry.ProtectionPlan` — ahead-of-time from the
+immutable :class:`~repro.ft.plans.CompiledPlans` the engine builds at
+startup, or lazily from the registry for library users — and carries the
+static ``failed_group`` of the current traced program.  Site names are
 ``"<category>.<proj>"`` — categories:
 
   ``head``  the vocab projection (always protected when FT is on)
@@ -28,13 +37,18 @@ site's :class:`~repro.ft.registry.PlanEntry`, and carries the static
             Mamba in_proj, RG-LRU in_x/in_gate
   ``mlp``   FFN projections: MLP gate/up/down (dense and MoE-shared) and
             the MoE router
+  ``out``   mixer output projections: attention/MLA wo, Mamba out_proj,
+            RG-LRU out
+  ``moe``   MoE per-expert gate/up/down GEMMs (the grouped kernel)
 
 ``ft_scope`` widens protection cumulatively: ``"head"`` | ``"qkv"`` |
-``"mlp"`` (each includes the head) | ``"all"``.
+``"mlp"`` | ``"out"`` | ``"moe"`` (each includes the head) | ``"all"`` —
+which, since v2, genuinely covers every hot-path GEMM.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Union
 
 import jax
@@ -45,15 +59,18 @@ from repro.core.entangle import disentangle as core_disentangle
 from repro.core.entangle import entangle as core_entangle
 from repro.core.failstop import GARBAGE
 from repro.core.plan import EntanglePlan
-from repro.ft.quantize import quantize_acts, quantize_weight
-from repro.ft.registry import PlanEntry, PlanRegistry, group_rows
+from repro.ft.quantize import (quantize_acts, quantize_weight,
+                               quantize_weight_stacked)
+from repro.ft.registry import PlanRegistry, ProtectionPlan, group_rows
 
 # scope -> protected site categories (cumulative; head is always in)
 SCOPES: dict[str, frozenset] = {
     "head": frozenset({"head"}),
     "qkv": frozenset({"head", "qkv"}),
     "mlp": frozenset({"head", "mlp"}),
-    "all": frozenset({"head", "qkv", "mlp"}),
+    "out": frozenset({"head", "out"}),
+    "moe": frozenset({"head", "moe"}),
+    "all": frozenset({"head", "qkv", "mlp", "out", "moe"}),
 }
 
 # float weight, or (int8-range int32 weights, scale) pre-quantized at startup
@@ -76,6 +93,15 @@ def group_order(R: int, M: int) -> tuple[np.ndarray, np.ndarray]:
     return order, inv
 
 
+def _split_weight(w: Weight):
+    """(wq, w_scale) from a float master (in-graph quantization — the
+    legacy/library path) or a pre-quantized (wq, scale) pair (the v2
+    prepared-params path; no quantization op enters the trace)."""
+    if isinstance(w, tuple):
+        return w
+    return quantize_weight(w)
+
+
 def protected_matmul(
     x: jax.Array,  # [..., K] float activations
     w: Weight,  # [K, N] float weights, or (wq, w_scale) pre-quantized
@@ -87,20 +113,19 @@ def protected_matmul(
     blocks=None,
     contiguous: bool = False,
     interpret=None,
+    backend: Optional[str] = None,
 ) -> jax.Array:
     """Entangled int8 GEMM with in-kernel fail-stop roll-forward.
 
     Returns dequantized float32 outputs ``[..., N]``. ``contiguous=True``
     keeps the caller's row order as the [M, R/M] group layout (the library
-    :func:`repro.serve.ft_logits.ft_logits` contract); the default maps
-    rows round-robin onto groups. ``fuse_epilogue=False`` keeps the
-    separate disentangle pass for callers that must inject/persist
-    entangled outputs; ``use_pallas=False`` is the XLA reference path.
+    :func:`repro.ft.heads.ft_logits` contract); the default maps rows
+    round-robin onto groups. ``fuse_epilogue=False`` keeps the separate
+    disentangle pass for callers that must inject/persist entangled
+    outputs; ``use_pallas=False`` is the XLA reference path; ``backend``
+    routes to a registered kernel backend (default: the platform rule).
     """
-    if isinstance(w, tuple):
-        wq, w_scale = w
-    else:
-        wq, w_scale = quantize_weight(w)
+    wq, w_scale = _split_weight(w)
     lead, K = x.shape[:-1], x.shape[-1]
     N = wq.shape[1]
     R = int(np.prod(lead, dtype=np.int64)) if lead else 1
@@ -123,16 +148,17 @@ def protected_matmul(
 
     if use_pallas and fuse_epilogue:
         # production hot path: entangle -> GEMM -> extract in ONE
-        # pallas_call; a fail-stopped group is rolled forward in-kernel by
+        # kernel call; a fail-stopped group is rolled forward in-kernel by
         # statically excluding its accumulator from the extraction (the
         # algebra never reads it, so injecting garbage is equivalent)
         rec = kops.entangled_matmul(
             xg, wq, plan, fuse_epilogue=True, failed=failed_group,
-            blocks=blocks, interpret=interpret)
+            blocks=blocks, interpret=interpret, backend=backend)
     else:
         if use_pallas:
             delta = kops.entangled_matmul(xg, wq, plan, blocks=blocks,
-                                          interpret=interpret)
+                                          interpret=interpret,
+                                          backend=backend)
         else:
             eps = core_entangle(xg, plan)
             delta = jnp.einsum("mbk,kn->mbn", eps, wq).astype(jnp.int32)
@@ -147,44 +173,122 @@ def protected_matmul(
     return y.reshape(*lead, N)
 
 
+def protected_matmul_grouped(
+    x: jax.Array,  # [..., E, C, K] float activations (C rows per expert)
+    w: Weight,  # [E, K, N] float, or (wq [E, K, N], w_scale scalar or [E])
+    *,
+    plan: EntanglePlan,
+    failed_group: Optional[int] = None,
+    use_pallas: bool = True,
+    fuse_epilogue: bool = True,
+    blocks=None,
+    interpret=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Grouped (per-expert) entangled int8 GEMM — the MoE form.
+
+    Expert e's C rows (times any leading batch axes) multiply expert e's
+    [K, N] weights; all E GEMMs run in ONE grouped entangled kernel call
+    (:func:`repro.kernels.ops.entangled_matmul_grouped`). Rows map
+    round-robin onto the M streams within each expert, zero rows pad each
+    expert's bucket to a multiple of M (exact), and ``failed_group``
+    statically excludes that stream's accumulators from extraction — the
+    roll-forward recovers every expert's outputs bit-identically at once.
+    Returns dequantized float32 ``[..., E, C, N]``.
+    """
+    if isinstance(w, tuple):
+        wq, w_scale = w
+    else:
+        q8 = quantize_weight_stacked(w)  # per-expert grids
+        wq, w_scale = q8["w"], q8["scale"]
+    E, K, N = wq.shape
+    lead = x.shape[:-3]
+    C = x.shape[-2]
+    assert x.shape[-3] == E, (x.shape, wq.shape)
+    L = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    R = L * C  # rows per expert
+    M = plan.M
+
+    # [..., E, C, K] -> [E, R, K]: expert-major rows, leading axes folded
+    xf = jnp.moveaxis(x.reshape(L, E, C, K), 1, 0).reshape(E, R, K)
+    xf = xf.astype(jnp.float32)
+    xq, a_scale = quantize_acts(xf, plan, K)
+    pad = (-R) % M
+    if pad:
+        xq = jnp.concatenate(
+            [xq, jnp.zeros((E, pad, K), jnp.int32)], axis=1)
+    Rp = R + pad
+    order, inv = group_order(Rp, M)
+    # per-expert round-robin onto streams: [E, Rp, K] -> [M, E, Rp/M, K]
+    xg = jnp.moveaxis(xq[:, order].reshape(E, M, Rp // M, K), 1, 0)
+
+    from repro.kernels import ops as kops  # deferred: keeps core import-light
+
+    if use_pallas and fuse_epilogue:
+        rec = kops.entangled_matmul_grouped(
+            xg, wq, plan, fuse_epilogue=True, failed=failed_group,
+            blocks=blocks, interpret=interpret, backend=backend)
+    else:
+        if use_pallas:
+            delta = kops.entangled_matmul_grouped(
+                xg, wq, plan, blocks=blocks, interpret=interpret,
+                backend=backend)
+        else:
+            eps = core_entangle(xg, plan)
+            delta = jnp.einsum("meck,ekn->mecn", eps,
+                               wq.astype(jnp.int32)).astype(jnp.int32)
+        if failed_group is not None:
+            delta = delta.at[failed_group].set(GARBAGE)
+        rec = core_disentangle(delta, plan, failed=failed_group)
+
+    y = jnp.moveaxis(rec, 0, 1).reshape(E, Rp, N).astype(jnp.float32)
+    y = y[:, inv][:, :R]
+    w_s = jnp.asarray(w_scale)
+    scale = a_scale * (w_s if w_s.ndim == 0 else w_s[:, None, None])
+    y = y / scale
+    return jnp.moveaxis(y.reshape(E, L, C, N), 0, 1).reshape(*lead, E, C, N)
+
+
 @dataclasses.dataclass(frozen=True)
 class ProtectedLinear:
-    """One protected GEMM site bound to its registry entry.
+    """Thin executor over ONE compiled :class:`ProtectionPlan`.
 
-    A thin, reusable binding of (site name, plan registry, backend policy):
-    calling it resolves the :class:`PlanEntry` for the incoming activation
-    shape and runs :func:`protected_matmul` with that entry's plan and
-    block sizes. The serving engine holds one per protected projection
-    (implicitly, through :class:`FTContext`); library users can construct
-    them directly.
+    Since v2 this class holds no resolution logic: the plan (site, shape,
+    entanglement parameters, block sizes, backend, grouped-ness) is fixed
+    at construction — built ahead of time by
+    :func:`repro.ft.plans.compile_plans` — and calling the executor just
+    runs :func:`protected_matmul` / :func:`protected_matmul_grouped` with
+    those static parameters. The serving engine holds one per protected
+    (site, shape) implicitly through :class:`FTContext`; library users can
+    bind one directly from a registry entry.
     """
 
-    site: str
-    registry: PlanRegistry
+    plan: ProtectionPlan
     use_pallas: bool = True
     interpret: Optional[bool] = None
-
-    def entry(self, x: jax.Array, w: Weight) -> PlanEntry:
-        wq = w[0] if isinstance(w, tuple) else w
-        K, N = wq.shape
-        rows = int(np.prod(x.shape[:-1], dtype=np.int64)) if x.ndim > 1 else 1
-        return self.registry.entry(self.site, rows, K, N, _backend())
 
     def __call__(self, x: jax.Array, w: Weight, *,
                  failed_group: Optional[int] = None,
                  contiguous: bool = False) -> jax.Array:
-        e = self.entry(x, w)
+        p = self.plan
+        if p.grouped:
+            return protected_matmul_grouped(
+                x, w, plan=p.plan, failed_group=failed_group,
+                use_pallas=self.use_pallas, blocks=p.blocks,
+                interpret=self.interpret, backend=p.backend)
         return protected_matmul(
-            x, w, plan=e.plan, failed_group=failed_group,
-            use_pallas=self.use_pallas, blocks=e.blocks,
-            contiguous=contiguous, interpret=self.interpret)
+            x, w, plan=p.plan, failed_group=failed_group,
+            use_pallas=self.use_pallas, blocks=p.blocks,
+            contiguous=contiguous, interpret=self.interpret,
+            backend=p.backend)
 
 
 def _backend() -> str:
-    """Registry backend tag — mirrors kernels.ops dispatch (compiled on
-    TPU, interpret elsewhere)."""
-    return jax.default_backend() if jax.default_backend() == "tpu" \
-        else "interpret"
+    """Registry backend tag — the kernel-registry namespace this process
+    resolves to (mirrors :func:`repro.kernels.ops.resolve_backend`)."""
+    from repro.kernels import ops as kops
+
+    return kops.resolve_backend()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,10 +300,18 @@ class FTContext:
     jit argument, so each injected-failure variant is its own compiled
     program sharing the same plans and autotune winners).
 
-    ``census_only=True`` turns :meth:`matmul` into a plain float einsum
-    that merely REGISTERS the call shape — the engine's ``warm_autotune``
-    abstract-traces the forward pass with such a context to enumerate
-    every protected shape without running (or compiling) any kernel.
+    ``plans`` (the v2 flow) is the immutable
+    :class:`~repro.ft.plans.CompiledPlans` built by ``compile_plans`` at
+    startup: every protected projection resolves there, and a lookup miss
+    — a census gap — falls back to a lazily created registry entry with a
+    warning instead of crashing the serving process. ``plans=None`` keeps
+    the pure lazy-registry behavior for library users.
+
+    ``census_only=True`` turns :meth:`matmul` / :meth:`matmul_grouped`
+    into plain float einsums that merely REGISTER the call shape — the
+    engine abstract-traces the forward pass with such a context to
+    enumerate every protected shape without running (or compiling) any
+    kernel; ``compile_plans`` then freezes exactly that census.
     """
 
     registry: PlanRegistry
@@ -207,6 +319,7 @@ class FTContext:
     use_pallas: bool = True
     failed_group: Optional[int] = None
     census_only: bool = False
+    plans: Optional[object] = None  # repro.ft.plans.CompiledPlans
 
     def __post_init__(self):
         if self.scope not in SCOPES:
@@ -224,16 +337,48 @@ class FTContext:
     def with_failed(self, failed_group: Optional[int]) -> "FTContext":
         return dataclasses.replace(self, failed_group=failed_group)
 
-    def linear(self, site: str) -> ProtectedLinear:
-        return ProtectedLinear(site=site, registry=self.registry,
-                               use_pallas=self.use_pallas)
+    def with_plans(self, plans) -> "FTContext":
+        return dataclasses.replace(self, plans=plans)
+
+    def _resolve(self, site: str, rows: int, K: int, N: int,
+                 groups: Optional[int] = None) -> ProtectionPlan:
+        """AOT plan lookup with a loud-but-degrading lazy fallback."""
+        if self.plans is not None:
+            shape = self.registry.shape_for(rows, K, N, groups)
+            p = self.plans.lookup(site, shape)
+            if p is not None:
+                return p
+            warnings.warn(
+                f"protected site {site!r} shape {shape} is missing from "
+                f"the compiled plans (startup census gap); creating a "
+                f"lazy registry entry", RuntimeWarning)
+        return self.registry.entry(site, rows, K, N, _backend(),
+                                   groups=groups)
 
     def matmul(self, site: str, x: jax.Array, w: Weight) -> jax.Array:
         """Run (or, census-only, record) one protected GEMM site."""
-        lin = self.linear(site)
-        lin.entry(x, w)  # register the shape even when census-only
+        wq = w[0] if isinstance(w, tuple) else w
+        K, N = wq.shape[-2:]
+        rows = int(np.prod(x.shape[:-1], dtype=np.int64)) if x.ndim > 1 else 1
         if self.census_only:
-            wq = w[0] if isinstance(w, tuple) else w
+            self.registry.entry(site, rows, K, N, _backend())
             return jnp.einsum("...k,kn->...n", x.astype(jnp.float32),
                               wq.astype(jnp.float32))
-        return lin(x, w, failed_group=self.failed_group)
+        plan = self._resolve(site, rows, K, N)
+        return ProtectedLinear(plan=plan, use_pallas=self.use_pallas)(
+            x, w, failed_group=self.failed_group)
+
+    def matmul_grouped(self, site: str, x: jax.Array,
+                       w: Weight) -> jax.Array:
+        """Run (or record) one grouped per-expert protected GEMM site:
+        x [..., E, C, K] against per-expert weights [E, K, N]."""
+        wq = w[0] if isinstance(w, tuple) else w
+        E, K, N = wq.shape[-3:]
+        rows = int(np.prod(x.shape[:-3], dtype=np.int64)) * x.shape[-2]
+        if self.census_only:
+            self.registry.entry(site, rows, K, N, _backend(), groups=E)
+            return jnp.einsum("...eck,ekn->...ecn", x.astype(jnp.float32),
+                              wq.astype(jnp.float32))
+        plan = self._resolve(site, rows, K, N, groups=E)
+        return ProtectedLinear(plan=plan, use_pallas=self.use_pallas)(
+            x, w, failed_group=self.failed_group)

@@ -6,8 +6,9 @@ head and the in-model QKV/MLP/router sites alike):
   * **weights** — symmetric per-tensor int8: ``scale = 127 / max|w|``,
     values clipped to [-127, 127] and carried in an int32 container (the
     entangled kernel's stream dtype).  This is exactly the policy the head
-    GEMM shipped with (``serve/ft_logits.quantize_head`` now re-exports
-    :func:`quantize_weight`).
+    GEMM shipped with (``repro.ft.heads.quantize_head`` re-exports
+    :func:`quantize_weight`), applied per layer / per expert by the
+    startup hoist via :func:`quantize_weight_stacked`.
   * **activations** — symmetric per-call integer quantization into the
     plan's eq. (13) budget: a ``K``-deep integer dot of int8 weights
     satisfies ``K * |a|max * 127 <= plan.max_output_magnitude`` iff the
@@ -29,11 +30,38 @@ import jax.numpy as jnp
 from repro.core.plan import EntanglePlan
 
 
+# observability: how often the eq.-13 weight policy actually runs. The v2
+# plan-compile flow quantizes every protected site's weights ONCE at engine
+# startup (repro.ft.plans.prepare_params), so a traced decode/prefill step
+# must never bump this counter — tests assert exactly that (the hoisted-
+# quantization contract). Plain dict so tests can reset it in place.
+TRACE_STATS = {"weight_quantize_calls": 0}
+
+
 def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor int8 weight quantization (int32 container)."""
+    TRACE_STATS["weight_quantize_calls"] += 1
     amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-9)
     scale = 127.0 / amax
     return jnp.clip(jnp.round(w * scale), -127, 127).astype(jnp.int32), scale
+
+
+def quantize_weight_stacked(w: jax.Array) -> dict:
+    """Per-matrix int8 quantization of a stacked weight ``[..., K, N]``.
+
+    Every leading axis (layer-repeat, expert) gets its own scale: the
+    quantization is vmapped over all but the last two dims, so a scanned
+    stack of layers (or a stack of MoE experts) quantizes each matrix on
+    its own grid — exactly what the per-call policy produced, now computed
+    once at startup. Returns ``{"w": int32 [..., K, N], "scale": [...]}``,
+    the ``q8`` pytree entry :func:`repro.ft.plans.prepare_params` installs
+    next to the float master.
+    """
+    fn = quantize_weight
+    for _ in range(w.ndim - 2):
+        fn = jax.vmap(fn)
+    wq, scale = fn(w)
+    return {"w": wq, "scale": scale}
 
 
 def activation_budget(plan: EntanglePlan, depth: int) -> int:

@@ -1,10 +1,12 @@
-"""Plan registry: one entry per (site, shape, M, backend) protected GEMM.
+"""Plan registry: one :class:`ProtectionPlan` per (site, shape, M, backend)
+protected GEMM.
 
 The serving engine constructs ONE registry at startup; every protected
-projection — head, QKV, MLP up/down, MoE router — resolves its
-:class:`PlanEntry` here at trace time, so the whole forward pass shares a
-single :class:`~repro.core.plan.EntanglePlan` (stable autotune/compile keys
-across the serving lifetime) while each call shape gets its own block-size
+projection — head, QKV, MLP up/down, MoE router, the attention/SSM output
+projections and the MoE per-expert GEMMs — resolves its
+:class:`ProtectionPlan` here, so the whole forward pass shares a single
+:class:`~repro.core.plan.EntanglePlan` (stable autotune/compile keys across
+the serving lifetime) while each call shape gets its own block-size
 decision:
 
   * ``blocks`` policy ``None`` — shape-clamped power-of-two defaults
@@ -15,9 +17,15 @@ decision:
     subsystem; the engine's ``warm_autotune`` pre-sweeps every registered
     shape eagerly so the in-jit resolution is a pure cache hit.
 
-Entries are created lazily at trace time (a Python dict lookup during
-tracing — never inside the compiled program) and double as the protected
-shape census ``warm_autotune`` iterates.
+In the v2 flow the registry is populated ONCE at startup by the engine's
+census-only abstract traces and then frozen into an immutable
+:class:`repro.ft.plans.CompiledPlans` via :func:`repro.ft.plans.
+compile_plans`; lazy trace-time creation remains for library users calling
+:class:`~repro.ft.protected.FTContext` without a compile step.
+
+Plan shapes: a plain GEMM site's shape is ``(M, Bg, K, N)``; a grouped
+(MoE per-expert) site's shape is ``(M, E, Bg, K, N)`` with
+``grouped=True`` — ``Bg`` then counts per-expert rows per stream.
 """
 from __future__ import annotations
 
@@ -50,50 +58,73 @@ def default_blocks(Bg: int, K: int, N: int) -> dict:
 
 
 @dataclasses.dataclass(frozen=True)
-class PlanEntry:
-    """Resolved protection parameters of one GEMM site at one call shape."""
+class ProtectionPlan:
+    """Immutable protection parameters of one GEMM site at one call shape.
+
+    Built ahead of time (engine startup census -> ``compile_plans``) or
+    lazily at trace time (library use); either way every field is static:
+    a :class:`~repro.ft.protected.ProtectedLinear` bound to a plan is a
+    pure executor, and the traced program can never re-derive blocks,
+    shapes or entanglement parameters mid-flight.
+    """
 
     site: str
-    shape: tuple  # (M, Bg, K, N) — the entangled kernel call signature
+    shape: tuple  # (M, Bg, K, N) — or (M, E, Bg, K, N) when grouped
     backend: str
     plan: EntanglePlan
     blocks: object  # None | dict | "auto" — passed through to kernels.ops
+    grouped: bool = False
+
+
+# pre-v2 name: registry entries used to be mutable-registry-only objects
+PlanEntry = ProtectionPlan
 
 
 class PlanRegistry:
-    """(site, shape, M, backend) -> :class:`PlanEntry` map."""
+    """(site, shape, M, backend) -> :class:`ProtectionPlan` map."""
 
     def __init__(self, plan: EntanglePlan, *, blocks: object = None):
         self.plan = plan
         self.blocks_policy = blocks
-        self._entries: dict[tuple, PlanEntry] = {}
+        self._entries: dict[tuple, ProtectionPlan] = {}
 
     @staticmethod
     def key(site: str, shape: tuple, M: int, backend: str) -> tuple:
         return (site, shape, M, backend)
 
+    def shape_for(self, rows: int, K: int, N: int,
+                  groups: Optional[int] = None) -> tuple:
+        """The kernel-call shape key of a site invocation: ``rows`` is the
+        flattened sample count (per expert when ``groups`` is given)."""
+        Bg = group_rows(rows, self.plan.M)
+        if groups is None:
+            return (self.plan.M, Bg, K, N)
+        return (self.plan.M, groups, Bg, K, N)
+
     def entry(self, site: str, rows: int, K: int, N: int,
-              backend: str) -> PlanEntry:
-        """Resolve (creating on first use) the entry for one call site."""
-        shape = (self.plan.M, group_rows(rows, self.plan.M), K, N)
+              backend: str, *, groups: Optional[int] = None) -> ProtectionPlan:
+        """Resolve (creating on first use) the plan for one call site."""
+        shape = self.shape_for(rows, K, N, groups)
         k = self.key(site, shape, self.plan.M, backend)
         e = self._entries.get(k)
         if e is None:
             blocks = self.blocks_policy
             if blocks is None:
-                blocks = default_blocks(*shape[1:])
-            e = PlanEntry(site=site, shape=shape, backend=backend,
-                          plan=self.plan, blocks=blocks)
+                blocks = default_blocks(*shape[-3:])
+            e = ProtectionPlan(site=site, shape=shape, backend=backend,
+                               plan=self.plan, blocks=blocks,
+                               grouped=groups is not None)
             self._entries[k] = e
         return e
 
-    def entries(self) -> list[PlanEntry]:
+    def entries(self) -> list[ProtectionPlan]:
         return list(self._entries.values())
 
     def census(self) -> dict:
-        """{(site, (M, Bg, K, N)): blocks} — what warm_autotune iterates."""
+        """{(site, shape): blocks} — what warm_autotune iterates; grouped
+        sites carry 5-tuple shapes."""
         return {(e.site, e.shape): e.blocks for e in self._entries.values()}
 
     def get(self, site: str, shape: tuple,
-            backend: str) -> Optional[PlanEntry]:
+            backend: str) -> Optional[ProtectionPlan]:
         return self._entries.get(self.key(site, shape, self.plan.M, backend))

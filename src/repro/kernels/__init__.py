@@ -10,14 +10,23 @@ Architecture (one PR-sized map; details in each module's docstring):
   checksum.py          checksum-ABFT baseline stream
   entangled_matmul.py  fused entangle -> int GEMM -> extract, one
                        pallas_call; M streams fully resident per block
+  entangled_matmul_grouped.py
+                       the grouped (MoE per-expert) variant: E independent
+                       GEMMs, one kernel call, expert axis on the grid
   conv1d.py            unentangled depthwise causal conv1d
   entangled_conv1d.py  fused entangle -> conv1d -> extract
-  autotune.py          block-size autotuner: per-(op, shape, backend) sweep
-                       with in-process + JSON-file winner cache
-  ops.py               the dispatch layer — padding, backend selection,
+  autotune.py          block-size autotuner: per-(op, shape, backend,
+                       flags) sweep with in-process + JSON-file winner
+                       cache; keys are backend-namespaced; hardened loader
+                       (a corrupt cache degrades to the pretuned seed)
+  pretuned/            shipped seed caches, one JSON per backend namespace
+  ops.py               the dispatch layer — padding, the BACKEND REGISTRY
+                       (register_backend: pallas_tpu / interpret_cpu /
+                       reference shipped; Triton/CUDA stub documented),
                        `blocks` (None | dict | "auto") and `fuse_epilogue`
                        dispatch; the only module callers import
-  ref.py               pure-jnp oracles (exact-equality targets for tests)
+  ref.py               pure-jnp oracles (exact-equality targets for tests;
+                       also registered as the "reference" backend)
 
 Adding a new LSB kernel behind ops.py:
 
@@ -26,38 +35,53 @@ Adding a new LSB kernel behind ops.py:
      a separate HBM sweep);
   2. add the jnp oracle to ref.py and exact-equality tests (including each
      failed-stream index r and a dualword plan);
-  3. add a candidate table entry in autotune.candidates_for and a wrapper
-     in ops.py following the `blocks`/`fuse_epilogue` signature;
+  3. add a candidate table entry in autotune.candidates_for, a wrapper in
+     ops.py following the `blocks`/`fuse_epilogue`/`backend` signature,
+     and an entry in every registered backend's impls dict (the op name
+     joins ops.REQUIRED_OPS);
   4. extend benchmarks/kernel_micro.py with its fused-vs-separate bytes
      model so the overhead trajectory stays tracked in BENCH_*.json.
 
-How to protect a new GEMM (the repro.ft subsystem):
+Porting the kernels to a new backend (Triton/CUDA):
+see the "Porting to Triton/CUDA" section of the ops.py docstring —
+``ops.register_backend(name, impls)`` with the three required ops, keyed
+autotune namespace, optional ``pretuned/<name>.json`` seed cache.
+
+How to protect a new GEMM (the repro.ft subsystem, v2 plan-compile flow):
 
   1. find the projection's ``layers.dense`` call (or raw einsum) and give
      it a site name ``"<category>.<proj>"`` — category ``qkv`` (mixer
-     input projections), ``mlp`` (FFN projections incl. routers) or a new
-     one added to ``repro.ft.protected.SCOPES``. For a ``dense`` call,
-     protection is one kwarg: ``dense(p["w_new"], h, ft=ft,
+     input projections), ``mlp`` (FFN projections incl. routers), ``out``
+     (mixer output projections), ``moe`` (per-expert grouped GEMMs), or a
+     new one added to ``repro.ft.protected.SCOPES``. For a ``dense``
+     call, protection is one kwarg: ``dense(p["w_new"], h, ft=ft,
      site="qkv.new")``; for a raw einsum, guard with
      ``ft is not None and ft.protects(site)`` and call
-     ``ft.matmul(site, x, w)`` (returns float32 — cast back to the
-     surrounding activation dtype).
-  2. thread the ``ft`` kwarg from the block's ``apply`` down to the call
+     ``ft.matmul(site, x, w)`` — or ``ft.matmul_grouped(site, x, w)`` for
+     per-expert stacks x [..., E, C, K] against w [E, K, N] (returns
+     float32 — cast back to the surrounding activation dtype).
+  2. register the site's weight for the startup quantization hoist: add
+     its param-dict key to ``repro.ft.plans.PROTECTED_WEIGHT_KEYS`` (if
+     the key is new) so ``prepare_params`` installs the pre-quantized
+     ``q8`` copy at engine startup; at the call site prefer the ``q8``
+     entry when present (see ``layers.dense`` — one line).
+  3. thread the ``ft`` kwarg from the block's ``apply`` down to the call
      if the site lives in a block that did not previously take it
      (``transformer.apply_stack`` already passes ``ft`` to every block).
-  3. nothing else: the site's :class:`repro.ft.PlanRegistry` entry (plan +
-     block sizes) is created at trace time, ``ServeEngine.warm_autotune``
-     discovers the new shape through its census-only abstract trace and
-     pre-sweeps it for ``blocks='auto'``, and ``step(failed_group=r)``
-     reaches it automatically.
-  4. extend the scope x failure-injection matrix test
-     (tests/test_serve_engine.py::test_ft_scope_failstop_bit_identical)
-     if the site introduced a new category, and regenerate the pre-tuned
-     seed cache (``kernels/pretuned/``) if the new shape should cold-hit
-     in CI.
+  4. nothing else: the engine's census-only abstract trace discovers the
+     new shape at startup, ``repro.ft.compile_plans`` freezes it into the
+     immutable per-site plan set, ``warm_autotune`` pre-sweeps it for
+     ``blocks='auto'``, and ``step(failed_group=r)`` reaches it
+     automatically.
+  5. extend the scope x failure-injection matrix test
+     (tests/test_serve_engine.py::test_ft_scope_failstop_bit_identical —
+     or the grouped MoE twin) if the site introduced a new category, and
+     regenerate the pre-tuned seed cache (``kernels/pretuned/``) if the
+     new shape should cold-hit in CI.
 
-The quantization policy (int8 weights, eq.-13-budgeted activations) is
-shared — see repro/ft/quantize.py; exactness of the roll-forward does not
-depend on block sizes, plan choice or backend, only on both runs taking
-the same protected path.
+The quantization policy (int8 weights — hoisted to startup by
+``prepare_params`` — and eq.-13-budgeted activations) is shared — see
+repro/ft/quantize.py; exactness of the roll-forward does not depend on
+block sizes, plan choice or backend, only on both runs taking the same
+protected path.
 """

@@ -35,6 +35,7 @@ import os
 import pathlib
 import tempfile
 import time
+import warnings
 from typing import Any, Callable, Iterable, Optional
 
 import jax
@@ -78,7 +79,7 @@ def candidates_for(op: str, **dims: int) -> list[dict[str, int]]:
             p *= 2
         return out or [lo]
 
-    if op == "entangled_matmul":
+    if op in ("entangled_matmul", "entangled_matmul_grouped"):
         B, N, K = dims["B"], dims["N"], dims["K"]
         return [
             {"bb": bb, "bn": bn, "bk": bk}
@@ -117,30 +118,94 @@ class AutotuneCache:
         self.hits = 0
         self.sweeps = 0
 
+    @staticmethod
+    def _parse_cache_json(text: str, origin: str) -> dict[str, dict]:
+        """Parse one cache file defensively.
+
+        A corrupted or partially-written cache (interrupted process, disk
+        full, hand edit) must NEVER crash startup — the cache is an
+        optimization, so malformed content degrades to "re-sweep / fall
+        back to the pretuned seed" with a warning. Malformed entries are
+        skipped individually: one bad key cannot poison the valid winners
+        next to it.
+        """
+        try:
+            data = json.loads(text)
+        except ValueError as e:
+            warnings.warn(
+                f"autotune cache {origin} is not valid JSON ({e}); "
+                f"ignoring it (winners fall back to the pretuned seed "
+                f"cache or a fresh sweep)", RuntimeWarning, stacklevel=3)
+            return {}
+        if not isinstance(data, dict):
+            warnings.warn(
+                f"autotune cache {origin} must be a JSON object, got "
+                f"{type(data).__name__}; ignoring it",
+                RuntimeWarning, stacklevel=3)
+            return {}
+        out: dict[str, dict] = {}
+        bad = []
+        for k, v in data.items():
+            if k == "_meta":
+                continue
+            try:
+                out[k] = {kk: int(vv) for kk, vv in v.items()}
+            except (AttributeError, TypeError, ValueError):
+                bad.append(k)
+        if bad:
+            warnings.warn(
+                f"autotune cache {origin}: skipped {len(bad)} malformed "
+                f"entries (e.g. {bad[0]!r}); remaining winners kept",
+                RuntimeWarning, stacklevel=3)
+        return out
+
+    @staticmethod
+    def _known_namespace(key: str) -> bool:
+        """True when the key's backend field names a registered backend.
+
+        Keys from a pre-v2 cache (backend tag ``interpret``/``cpu``) or
+        from a port that is not registered in THIS process can never
+        match a lookup here — loading them would only inflate stats and
+        mask the fact that those shapes will re-sweep."""
+        from repro.kernels import ops  # deferred: ops imports this module
+
+        parts = key.split("|")
+        return len(parts) >= 3 and parts[2] in ops.backend_names()
+
     def _load_file(self) -> None:
         if self._loaded:
             return
         self._loaded = True
         if self.path and self.path.exists():
             try:
-                data = json.loads(self.path.read_text())
-            except (OSError, ValueError):
-                data = {}
-            for k, v in data.items():
-                if k != "_meta" and k not in self._mem:
-                    self._mem[k] = {kk: int(vv) for kk, vv in v.items()}
+                text = self.path.read_text()
+            except OSError as e:
+                warnings.warn(f"autotune cache {self.path} unreadable "
+                              f"({e}); ignoring it", RuntimeWarning)
+                text = "{}"
+            stale = 0
+            for k, v in self._parse_cache_json(text, str(self.path)).items():
+                if self._known_namespace(k):
+                    self._mem.setdefault(k, v)
+                else:
+                    stale += 1
+            if stale:
+                warnings.warn(
+                    f"autotune cache {self.path}: ignored {stale} entries "
+                    f"from backend namespaces not registered in this "
+                    f"process (pre-v2 cache or unloaded port); those "
+                    f"shapes will re-tune", RuntimeWarning)
         # shipped seed caches: consulted AFTER in-process and file winners
         # (kept in their own dict so `put` never re-persists them)
         if PRETUNED_DIR.is_dir():
             for f in sorted(PRETUNED_DIR.glob("*.json")):
                 try:
-                    data = json.loads(f.read_text())
-                except (OSError, ValueError):
+                    text = f.read_text()
+                except OSError:
                     continue
-                for k, v in data.items():
-                    if k != "_meta" and k not in self._shipped:
-                        self._shipped[k] = {kk: int(vv)
-                                            for kk, vv in v.items()}
+                for k, v in self._parse_cache_json(
+                        text, f"pretuned/{f.name}").items():
+                    self._shipped.setdefault(k, v)
 
     def get(self, key: str) -> Optional[dict[str, int]]:
         self._load_file()
@@ -162,12 +227,9 @@ class AutotuneCache:
             on_disk: dict = {}
             if self.path.exists():
                 try:
-                    on_disk = {
-                        k: v for k, v in
-                        json.loads(self.path.read_text()).items()
-                        if k != "_meta"
-                    }
-                except (OSError, ValueError):
+                    on_disk = self._parse_cache_json(self.path.read_text(),
+                                                     str(self.path))
+                except OSError:
                     on_disk = {}
             payload = {"_meta": {"version": _VERSION}, **on_disk, **self._mem}
             # atomic replace: concurrent processes never see a torn file
@@ -209,13 +271,14 @@ def stats() -> dict:
     """Cache counters for startup-warmup reporting (launch/serve --smoke):
     sweeps = shapes tuned this process, hits = cache hits (in-process,
     the JSON file, or a shipped pre-tuned seed cache), keys = distinct
-    winners usable on THIS backend (shipped files carry every backend
-    generation; foreign-backend keys can never hit here and would inflate
-    the coverage counter)."""
+    winners usable on THIS process's default kernel backend (shipped files
+    carry every backend namespace; foreign-backend keys can never hit here
+    and would inflate the coverage counter)."""
+    from repro.kernels import ops  # deferred: ops imports this module
+
     c = get_cache()
     c._load_file()
-    tag = "interpret" if jax.default_backend() != "tpu" \
-        else jax.default_backend()
+    tag = ops.resolve_backend()
     usable = {k for k in c._shipped if k.split("|")[2] == tag}
     return {"hits": c.hits, "sweeps": c.sweeps,
             "keys": len(set(c._mem) | usable)}
@@ -280,6 +343,11 @@ def _sig_dims(op: str, shape_sig: tuple) -> dict[str, int]:
     if op == "entangled_matmul":
         M, B, K, N = shape_sig
         return {"B": B, "N": N, "K": K}
+    if op == "entangled_matmul_grouped":
+        # the expert axis never changes block choices (blocked at 1); the
+        # per-expert row bucket Cg plays the batch role
+        M, E, Cg, K, N = shape_sig
+        return {"B": Cg, "N": N, "K": K}
     if op in ("entangled_conv1d",):
         M, B, D, T, kf = shape_sig
         return {"D": D, "T": T}

@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: grouped (per-expert) integer GEMM with the fused
+entanglement codec — the MoE counterpart of :mod:`entangled_matmul`.
+
+A Mixture-of-Experts layer runs E independent GEMMs per call, one per
+expert, each over that expert's capacity-bounded row bucket:
+
+    out[m, e] = c[m, e] @ g[e]        c: [M, E, Cg, K], g: [E, K, N]
+
+Ragged token->expert assignments are padded to the uniform capacity Cg by
+the dispatcher (exactly how capacity-bounded MoE already materializes its
+expert buffers), so the kernel sees a *uniformly grouped* batch: the grid
+simply gains a leading expert axis and every expert's tile reuses the
+fused schedule of :mod:`entangled_matmul` verbatim:
+
+  prologue  eps = (roll(c, 1) << l) + c      entangle-on-load, in registers
+  body      acc[m] += eps[m, e] @ g[e]       MXU, int32 accumulate in VMEM
+  epilogue  d = disentangle(acc)             at the k == nk-1 flush
+
+Entanglement spans the M stream axis only — each expert's GEMM is linear,
+so the codec commutes with it per expert and a fail-stopped stream's
+outputs roll forward from the other M-1 accumulators inside the kernel
+(``failed=r``), independently and identically for every expert. Zero pad
+rows entangle to zeros and cannot perturb any live stream.
+
+Tiling: grid (E, Cg/bb, N/bn, K/bk), K innermost; the expert axis is
+blocked at 1 (each program owns one expert's (bb, bk)x(bk, bn) tile), the
+small M stream axis is fully resident per block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.plan import EntanglePlan
+from repro.kernels.codec import disentangle_block, entangle_block
+
+
+def _emmg_kernel(
+    c_ref, g_ref, out_ref, acc_ref, *,
+    plan: EntanglePlan, nk: int, fuse_epilogue: bool, r: int,
+):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    eps = entangle_block(c_ref[:, 0], plan.l)  # [M, bb, bk], registers
+    g = g_ref[0]  # [bk, bn] — this program's expert slice
+    acc_ref[...] += jnp.stack(  # static unroll over streams; M is 3..8
+        [jnp.dot(eps[m], g, preferred_element_type=jnp.int32)
+         for m in range(plan.M)],
+        axis=0,
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        acc = acc_ref[...]
+        if fuse_epilogue:
+            out_ref[...] = disentangle_block(acc, plan, r)[:, None]
+        else:
+            out_ref[...] = acc[:, None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("plan", "fuse_epilogue", "failed", "bb", "bn", "bk",
+                     "interpret"),
+)
+def entangled_matmul_grouped_pallas(
+    c: jax.Array,
+    g: jax.Array,
+    *,
+    plan: EntanglePlan,
+    fuse_epilogue: bool = False,
+    failed: int = 0,
+    bb: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused grouped entangle[-GEMM-extract]: c [M, E, Cg, K], g [E, K, N].
+
+    Returns entangled per-expert products when ``fuse_epilogue=False`` or
+    the recovered true products when ``True`` (extraction never reads
+    stream ``failed``). Cg, K, N must be multiples of bb, bk, bn (ops.py
+    pads/unpads); the expert axis E is never padded — the grid walks it.
+    """
+    M, E, Cg, K = c.shape
+    E2, K2, N = g.shape
+    assert (E, K) == (E2, K2), ((E, K), (E2, K2))
+    assert M == plan.M, (M, plan.M)
+    grid = (E, Cg // bb, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _emmg_kernel, plan=plan, nk=grid[3],
+            fuse_epilogue=fuse_epilogue, r=failed % M,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((M, 1, bb, bk), lambda e, b, n, k: (0, e, b, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, b, n, k: (e, k, n)),
+        ],
+        out_specs=pl.BlockSpec((M, 1, bb, bn), lambda e, b, n, k: (0, e, b, n)),
+        out_shape=jax.ShapeDtypeStruct((M, E, Cg, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((M, bb, bn), jnp.int32)],
+        interpret=interpret,
+    )(c, g)

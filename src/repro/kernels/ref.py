@@ -40,6 +40,27 @@ def entangled_matmul_fused_ref(c: jax.Array, g: jax.Array, plan,
     return disentangle(entangled_matmul_ref(c, g, plan.l), plan, failed=r)
 
 
+def entangled_matmul_grouped_ref(c: jax.Array, g: jax.Array,
+                                 l: int) -> jax.Array:
+    """Grouped/per-expert variant: delta[m, e] = (E c)[m, e] @ g[e] for
+    c [M, E, Cg, K], g [E, K, N] — entanglement spans the M axis only."""
+    eps = entangle_ref(c, l)
+    return jnp.einsum(
+        "meck,ekn->mecn", eps, g.astype(jnp.int32)
+    ).astype(jnp.int32)
+
+
+def entangled_matmul_grouped_fused_ref(c: jax.Array, g: jax.Array, plan,
+                                       r: int = 0) -> jax.Array:
+    """Oracle for the fused grouped epilogue: per-expert disentangled
+    products (each expert's GEMM is linear, so one disentangle over the
+    stream axis recovers every expert at once)."""
+    from repro.core.entangle import disentangle
+
+    return disentangle(entangled_matmul_grouped_ref(c, g, plan.l), plan,
+                       failed=r)
+
+
 def entangled_conv1d_ref(x: jax.Array, w: jax.Array, l: int) -> jax.Array:
     """delta[m] = conv1d_causal(E x)[m] for x [M, B, D, T], w [D, K_f]."""
     eps = entangle_ref(x, l)

@@ -5,8 +5,10 @@ checkpoint directory) and runs a synthetic request wave. Fault tolerance is
 first-class: ``--ft-mode entangle`` turns on the fused entangled int8 head
 GEMM on every decode step AND on every admission batch's first token
 (slot -> group = slot % ft_M), ``--ft-scope`` widens protection to the
-in-model projections (``qkv`` | ``mlp`` | ``all`` — QKV, MLP up/down, MoE
-router run entangled through the repro.ft subsystem), ``--failed-group r``
+in-model projections (``qkv`` | ``mlp`` | ``out`` | ``moe`` | ``all`` —
+QKV, MLP up/down + router, output projections and MoE per-expert GEMMs
+run entangled through the repro.ft subsystem; protection plans and weight
+quantization are compiled once at startup), ``--failed-group r``
 injects a fail-stop into group r's compute on every step, and ``--smoke``
 prints a per-scope recovery summary (healthy vs injected outputs compared
 token-by-token, for the head scope and the configured scope) plus the
@@ -24,6 +26,7 @@ import numpy as np
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.ft import SCOPES
 from repro.kernels import autotune
 from repro.models import get_model
 from repro.serve.engine import Request, ServeConfig, ServeEngine
@@ -42,6 +45,47 @@ def _wave(eng: ServeEngine, n_requests: int, vocab: int, max_new: int,
     return {r.rid: np.asarray(r.out) for r in done}
 
 
+def _validate_args(ap: argparse.ArgumentParser, args) -> None:
+    """Fail FT/admission misconfigurations loudly at PARSE time.
+
+    Every one of these would otherwise surface deep inside engine startup
+    or a traced step (a mid-wave shape error, a silent mod-M wrap of the
+    injected group, an autotune sweep of an impossible plan) — the
+    launcher is the first place all the flags meet, so it owns the
+    cross-flag contracts. ``--ft-scope`` itself is validated by argparse
+    ``choices`` against the one true scope set (``repro.ft.SCOPES``).
+    Returns the parsed ``--prefill-buckets`` tuple (or None) so ``main``
+    consumes the exact value that was validated."""
+    if args.ft_mode == "entangle":
+        if args.ft_M < 3:
+            ap.error(f"--ft-M must be >= 3 (the paper's minimum stream "
+                     f"count), got {args.ft_M}")
+        if args.max_batch % args.ft_M:
+            ap.error(f"--max-batch ({args.max_batch}) must be divisible "
+                     f"by --ft-M ({args.ft_M}): slots map round-robin "
+                     f"onto the M entangled request groups")
+    if args.failed_group >= 0:
+        if args.ft_mode != "entangle":
+            ap.error("--failed-group requires --ft-mode entangle")
+        if args.failed_group >= args.ft_M:
+            ap.error(f"--failed-group must be < --ft-M ({args.ft_M}); the "
+                     f"kernel indexes streams mod M, so wrapping silently "
+                     f"would drill a different group than requested")
+    if args.prefill_chunk < 0:
+        ap.error(f"--prefill-chunk must be >= 0, got {args.prefill_chunk}")
+    buckets = None
+    if args.prefill_buckets:
+        try:
+            buckets = tuple(int(b) for b in args.prefill_buckets.split(","))
+        except ValueError:
+            ap.error(f"--prefill-buckets must be comma-separated ints, "
+                     f"got {args.prefill_buckets!r}")
+        if any(b < 1 or b > args.max_seq for b in buckets):
+            ap.error(f"--prefill-buckets {list(buckets)} must lie in "
+                     f"[1, max-seq={args.max_seq}]")
+    return buckets
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(ARCH_IDS))
@@ -56,10 +100,10 @@ def main():
                          "decode step")
     ap.add_argument("--ft-M", type=int, default=4,
                     help="entangled request groups (max-batch %% ft-M == 0)")
-    ap.add_argument("--ft-scope", default="head",
-                    choices=["head", "qkv", "mlp", "all"],
+    ap.add_argument("--ft-scope", default="head", choices=sorted(SCOPES),
                     help="which projections run entangled: head only, or "
-                         "also the in-model QKV / MLP+router / all sites")
+                         "also the in-model QKV / MLP+router / output-proj "
+                         "/ MoE-expert sites (all = everything)")
     ap.add_argument("--failed-group", type=int, default=-1,
                     help=">= 0: inject a fail-stop into this group's head "
                          "GEMM on every decode step (rolled forward "
@@ -75,6 +119,7 @@ def main():
                          "many tokens, one chunk per engine step "
                          "(interleaved with decode)")
     args = ap.parse_args()
+    buckets = _validate_args(ap, args)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = get_model(cfg)
@@ -86,18 +131,12 @@ def main():
         params = restored["params"]
         print(f"[launch.serve] restored params from step {step}")
 
-    buckets = (tuple(int(b) for b in args.prefill_buckets.split(","))
-               if args.prefill_buckets else None)
     scfg = ServeConfig(
         max_batch=args.max_batch, max_seq=args.max_seq,
         ft_mode=args.ft_mode, ft_M=args.ft_M, ft_scope=args.ft_scope,
         blocks=(args.blocks or None),
         prefill_buckets=buckets, prefill_chunk=args.prefill_chunk)
     failed = args.failed_group if args.failed_group >= 0 else None
-    if failed is not None and args.ft_mode != "entangle":
-        ap.error("--failed-group requires --ft-mode entangle")
-    if failed is not None and failed >= args.ft_M:
-        ap.error(f"--failed-group must be < --ft-M ({args.ft_M})")
 
     eng = ServeEngine(cfg, scfg, params)
     outs = _wave(eng, args.requests, cfg.vocab_size, args.max_new, failed)

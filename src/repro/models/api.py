@@ -15,14 +15,20 @@ one position) or an int32 vector [B] of per-row positions — the batched
 serving engine decodes every active slot at its own position in ONE call.
 ``decode_hidden`` returns the final-norm'd hidden states [B, D] *before* the
 vocab projection, so serving can route the head GEMM through the
-FT-protected entangled int8 path (serve/ft_logits) instead;
+FT-protected entangled int8 path (repro.ft.heads) instead;
 ``decode_step`` == head_project(decode_hidden).
 
 ``decode_hidden`` and ``prefill_chunk`` accept an optional ``ft`` kwarg —
 a :class:`repro.ft.FTContext` threaded down to every block so the serving
-engine's ``ft_scope`` can run the in-model QKV/MLP/router projections as
-entangled int8 GEMMs with in-kernel fail-stop roll-forward (``ft=None``,
-the default, is the unprotected fast path; decoder-only).
+engine's ``ft_scope`` can run the in-model projections (QKV, MLP + router,
+the attention/SSM output projections, and the MoE per-expert GEMMs via the
+grouped entangled kernel) as entangled int8 GEMMs with in-kernel fail-stop
+roll-forward (``ft=None``, the default, is the unprotected fast path;
+decoder-only). Protection parameters resolve from the engine's
+ahead-of-time compiled plans, and the ``params`` passed in may carry
+startup-quantized ``q8`` weight copies (``repro.ft.prepare_params``) that
+the protected sites consume directly — the float masters stay
+authoritative for every unprotected path.
 
 ``prefill_chunk`` is the batched/bucketed prefill contract (decoder-only):
 ``tokens`` [B, C] is one chunk of a bucket-padded prompt batch processed at

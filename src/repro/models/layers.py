@@ -92,9 +92,16 @@ def dense(p, x, *, ft=None, site=None):
     entangled int8 GEMM with in-kernel fail-stop roll-forward instead of
     the bf16 einsum; the bias stays in float either way. ``ft=None`` (train
     and every pre-existing caller) is the unprotected fast path.
+
+    A ``q8`` entry (installed by :func:`repro.ft.prepare_params` at engine
+    startup) carries the site's pre-quantized int8 weights + scale; when
+    present the protected path uses it directly, so the traced step holds
+    no eq.-13 weight-quantization ops — the float master ``w`` stays the
+    source of truth for every unprotected caller.
     """
     if ft is not None and site is not None and ft.protects(site):
-        y = ft.matmul(site, x, p["w"]).astype(ACT_DTYPE)
+        w = (p["q8"]["w"], p["q8"]["scale"]) if "q8" in p else p["w"]
+        y = ft.matmul(site, x, w).astype(ACT_DTYPE)
     else:
         y = jnp.einsum("...d,df->...f", x.astype(ACT_DTYPE),
                        p["w"].astype(ACT_DTYPE))
@@ -375,7 +382,7 @@ def apply_attention(
         o = attend(qg, kt, vt, kind="window" if window else "causal",
                    window=window, q_off=off)
     out = o.transpose(0, 3, 1, 2, 4).reshape(B, T, H * hd)
-    out = dense(p["wo"], out.astype(ACT_DTYPE))
+    out = dense(p["wo"], out.astype(ACT_DTYPE), ft=ft, site="out.o")
     return constrain(out, "batch", "seq", "embed"), new_cache
 
 
@@ -501,7 +508,8 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
         probs = jax.nn.softmax(s, axis=-1)
         ctx = jnp.einsum("bhts,bsr->bthr", probs, ckv_s.astype(jnp.float32))
         o = jnp.einsum("bthr,rhd->bthd", ctx, w_uv.astype(jnp.float32))
-        out = dense(p["wo"], o.reshape(B, T, H * dv).astype(ACT_DTYPE))
+        out = dense(p["wo"], o.reshape(B, T, H * dv).astype(ACT_DTYPE),
+                    ft=ft, site="out.o")
         return constrain(out, "batch", "seq", "embed"), new_cache
 
     # up-project latents to per-head K_nope and V (paper-faithful/naive path)
@@ -523,7 +531,7 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     else:
         o = attend(qg, kt, vt, kind="causal", scale=scale, q_off=off)
     out = o[:, :, 0].transpose(0, 2, 1, 3).reshape(B, T, H * dv)
-    out = dense(p["wo"], out.astype(ACT_DTYPE))
+    out = dense(p["wo"], out.astype(ACT_DTYPE), ft=ft, site="out.o")
     return constrain(out, "batch", "seq", "embed"), new_cache
 
 
@@ -633,7 +641,9 @@ def apply_moe(p, x, *, cfg: ModelConfig, valid=None, ft=None):
         # MoE routing decisions steer EVERY expert GEMM downstream —
         # protecting this small projection makes routing itself fail-stop
         # recoverable, so a failed group cannot silently reroute tokens
-        logits = ft.matmul("mlp.router", hg, p["router"])
+        rw = ((p["router_q8"]["w"], p["router_q8"]["scale"])
+              if "router_q8" in p else p["router"])
+        logits = ft.matmul("mlp.router", hg, rw)
     else:
         logits = jnp.einsum("gnd,de->gne", hg,
                             p["router"].astype(ACT_DTYPE),
@@ -675,10 +685,31 @@ def apply_moe(p, x, *, cfg: ModelConfig, valid=None, ft=None):
     expert_in = jnp.where(slot_ok[..., None], rows, 0).reshape(G, E, C, D)
     # the EP boundary: data-sharded groups -> expert-sharded buffers
     expert_in = constrain(expert_in, "batch", "experts", None, None)
-    a = jax.nn.silu(
-        jnp.einsum("gecd,edf->gecf", expert_in, p["we_gate"].astype(ACT_DTYPE))
-    ) * jnp.einsum("gecd,edf->gecf", expert_in, p["we_up"].astype(ACT_DTYPE))
-    out_e = jnp.einsum("gecf,efd->gecd", a, p["we_down"].astype(ACT_DTYPE))
+    if ft is not None and ft.protects("moe.gate"):
+        # the per-expert batched GEMMs — the last big unprotected FLOPs of
+        # the MoE block — run through the GROUPED entangled kernel: one
+        # call per projection covers all E experts, rows round-robin onto
+        # the M streams within each expert, fail-stop rolled forward
+        # per-expert in-kernel. Startup-quantized q8 stacks (per-expert
+        # grids) are used when prepare_params installed them.
+        def _we(name):
+            q = p.get(name + "_q8")
+            return (q["w"], q["scale"]) if q is not None else p[name]
+
+        a = jax.nn.silu(
+            ft.matmul_grouped("moe.gate", expert_in, _we("we_gate"))
+        ).astype(ACT_DTYPE) * ft.matmul_grouped(
+            "moe.up", expert_in, _we("we_up")).astype(ACT_DTYPE)
+        out_e = ft.matmul_grouped("moe.down", a,
+                                  _we("we_down")).astype(ACT_DTYPE)
+    else:
+        a = jax.nn.silu(
+            jnp.einsum("gecd,edf->gecf", expert_in,
+                       p["we_gate"].astype(ACT_DTYPE))
+        ) * jnp.einsum("gecd,edf->gecf", expert_in,
+                       p["we_up"].astype(ACT_DTYPE))
+        out_e = jnp.einsum("gecf,efd->gecd", a,
+                           p["we_down"].astype(ACT_DTYPE))
     out_e = constrain(out_e, "batch", "experts", None, None)
     h_flat = constrain(out_e.reshape(G, E * C, D), "batch", None, None)
 
@@ -847,7 +878,7 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
         hT, ys = lax.scan(step, h0, xs)
     y = ys.swapaxes(0, 1) + u * p["D_skip"].astype(jnp.float32)  # [B, T, di]
     y = y.astype(ACT_DTYPE) * jax.nn.silu(z)
-    out = dense(p["out_proj"], y)
+    out = dense(p["out_proj"], y, ft=ft, site="out.o")
     new_cache = None
     if mode in ("prefill", "decode"):
         new_cache = {"conv": new_conv_state.astype(ACT_DTYPE), "h": hT}
@@ -946,7 +977,7 @@ def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
         scan_xs = scan_xs + (valid_tb,)
     hT, hs = lax.scan(step, h0, scan_xs)
     rec = hs.swapaxes(0, 1).astype(ACT_DTYPE)  # [B, T, w]
-    out = dense(p["out"], rec * gate)
+    out = dense(p["out"], rec * gate, ft=ft, site="out.o")
     new_cache = None
     if mode in ("prefill", "decode"):
         new_cache = {"conv": new_conv_state, "h": hT}

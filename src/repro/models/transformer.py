@@ -192,8 +192,11 @@ def apply_stack(units_params, x, *, cfg: ModelConfig, caches=None, pos=None,
     stay exact under bucket padding; ``pos`` in prefill mode is the static
     chunk offset. ``ft`` (serving) is the :class:`repro.ft.FTContext`
     protection context — the scan body traces each unit ONCE, so every
-    repeat of a protected projection shares one registry entry and one
-    in-kernel roll-forward schedule."""
+    repeat of a protected projection shares one compiled ProtectionPlan
+    and one in-kernel roll-forward schedule; startup-quantized ``q8``
+    weight stacks (repro.ft.prepare_params) are sliced per repeat by the
+    scan exactly like the float masters, keeping per-layer int8 grids
+    with zero in-trace quantization."""
     new_caches = []
     for u, (blocks, repeat) in enumerate(cfg.layer_pattern()):
         p_u = units_params[u]
@@ -257,7 +260,7 @@ def embed_tokens(p, tokens, cfg: ModelConfig, pos=None):
 
 def final_hidden(p, x, cfg: ModelConfig):
     """Final-norm'd hidden states — the input the FT-protected serving head
-    (serve/ft_logits) quantizes; ``logits_head`` is head_project of this."""
+    (repro.ft.heads) quantizes; ``logits_head`` is head_project of this."""
     return L.apply_norm(p["final_norm"], x, cfg)
 
 

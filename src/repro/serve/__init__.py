@@ -11,10 +11,10 @@
                          shape census
   reference.PerSlotEngine  the pre-batching per-slot baseline (A/B tests,
                          throughput benchmarks)
-  ft_logits              the entangled int8 logits projection — since PR 4
-                         a thin shim over repro.ft.protected_matmul keeping
-                         the serving signatures (ft_logits_decode,
-                         ft_logits_prefill, quantize_head)
+  ft_logits              DEPRECATED shim (warns on import) — the entangled
+                         int8 logits projection lives in repro.ft.heads
+                         (ft_logits_decode, ft_logits_prefill,
+                         quantize_head), re-exported here for compat
 
 Prefill pipeline (admission hot path)
 -------------------------------------
@@ -40,13 +40,13 @@ call per request:
   * **protection** — with ``ft_mode='entangle'`` the first token of every
     admitted request is projected through the same fused entangled int8
     kernel (and the same startup plan) as decode
-    (:func:`repro.serve.ft_logits.ft_logits_prefill`), so a fail-stop
-    injected during admission rolls forward in-kernel, bit-identically.
+    (:func:`repro.ft.heads.ft_logits_prefill`), so a fail-stop injected
+    during admission rolls forward in-kernel, bit-identically.
 """
+from repro.ft.heads import (ft_logits, ft_logits_decode, ft_logits_prefill,
+                            quantize_head)
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,
                                 geometric_buckets)
-from repro.serve.ft_logits import (ft_logits, ft_logits_decode,
-                                   ft_logits_prefill, quantize_head)
 from repro.serve.reference import PerSlotEngine
 
 __all__ = [

@@ -35,14 +35,21 @@ call per request):
 Fault tolerance (the paper's technique in the serving path): with
 ``ft_mode='entangle'`` the final logits projection of EVERY decode step —
 and of every admission batch's first token — runs as the fused entangled
-int8 GEMM over M request groups (serve/ft_logits), slots mapped round-robin
+int8 GEMM over M request groups (repro.ft.heads), slots mapped round-robin
 to groups (slot -> group = slot % M). ``ServeConfig.ft_scope`` widens the
 protection beyond the head through the unified protected-GEMM subsystem
 (:mod:`repro.ft`): ``"qkv"`` additionally runs the mixer input projections
 (attention Q/K/V, Mamba in_proj, RG-LRU in_x/in_gate) entangled, ``"mlp"``
-the FFN projections (MLP gate/up/down, MoE router), ``"all"`` every
-protected site — on the decode hot path AND inside every prefill-admission
-chunk, where the QKV/MLP GEMMs dominate the FLOP budget.
+the FFN projections (MLP gate/up/down, MoE router), ``"out"`` the mixer
+output projections (attention/MLA wo, Mamba out_proj, RG-LRU out),
+``"moe"`` the MoE per-expert GEMMs (the grouped entangled kernel), and
+``"all"`` every protected site — on the decode hot path AND inside every
+prefill-admission chunk, where the QKV/MLP GEMMs dominate the FLOP budget.
+Protection parameters are compiled AHEAD OF TIME: the startup census is
+frozen into immutable per-site ProtectionPlans (``repro.ft.compile_plans``)
+and every in-model site's weights are int8-quantized once at startup
+(``repro.ft.prepare_params``), so traced steps only look up plans and
+never re-quantize weights.
 ``step(failed_group=r)`` injects a fail-stop into group r's compute at
 every protected site of the step; the in-kernel roll-forward recovers its
 outputs from the other M-1 groups' entangled accumulators, so decoded
@@ -72,13 +79,14 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.plan import make_plan
 from repro.dist import sharding
-from repro.ft import SCOPES, FTContext, PlanRegistry
+from repro.ft import (SCOPES, FTContext, PlanRegistry, compile_plans,
+                      prepare_params)
+from repro.ft.heads import (ft_logits_decode, ft_logits_prefill,
+                            quantize_head)
 from repro.kernels import ops as kops
 from repro.models.api import get_model
 from repro.models.layers import ACT_DTYPE
 from repro.models.transformer import readout_scale
-from repro.serve.ft_logits import (ft_logits_decode, ft_logits_prefill,
-                                   quantize_head)
 
 
 def geometric_buckets(max_seq: int, base: int = 8) -> tuple:
@@ -101,8 +109,8 @@ class ServeConfig:
     ft_mode: str = "none"  # none | entangle
     ft_M: int = 4
     ft_w: int = 32
-    # protected-GEMM scope: head | qkv | mlp | all (repro.ft.SCOPES) —
-    # which projections beyond the logits head run entangled
+    # protected-GEMM scope: head | qkv | mlp | out | moe | all
+    # (repro.ft.SCOPES) — which projections beyond the head run entangled
     ft_scope: str = "head"
     greedy: bool = True
     # head-GEMM block sizes: None | dict | "auto" (autotuned at startup)
@@ -221,10 +229,22 @@ class ServeEngine:
         self._decode = jax.jit(self._decode_impl,
                                static_argnames=("failed_group",),
                                donate_argnums=(1,) if donate else ())
-        # startup plan construction: prime the registry with every
-        # protected shape the engine can trace (decode + all chunk widths)
-        # so no trace ever creates a plan entry mid-flight
+        # startup plan compilation (the v2 AOT flow): prime the registry
+        # with every protected shape the engine can trace (decode + all
+        # chunk widths) via census-only abstract traces, freeze it into
+        # immutable per-site ProtectionPlans, and hoist the eq.-13 int8
+        # weight quantization of every in-model protected site out of the
+        # traced graph — ``ft_params`` carries the startup-quantized q8
+        # copies alongside the float masters, so a traced decode/prefill
+        # step contains ZERO weight-quantization ops (tested via the
+        # quantize.TRACE_STATS trace counter)
         self.protected_census = self._protected_shape_census()
+        self.plans = None
+        self.ft_params = params
+        if scfg.ft_mode == "entangle" and scfg.ft_scope != "head":
+            self.plans = compile_plans(self.registry, self.protected_census)
+            self.ftx = self.ftx.with_plans(self.plans)
+            self.ft_params = prepare_params(params, scope=scfg.ft_scope)
         if scfg.blocks == "auto":
             self.warm_autotune()
 
@@ -431,7 +451,7 @@ class ServeEngine:
         fg = (failed_group if self._model_ft(failed_group) is not None
               else None)
         p["h_last"], p["cache"] = chunk_fn(
-            self.params, p["tokens"][:, pos0 : pos0 + sz], p["cache"],
+            self.ft_params, p["tokens"][:, pos0 : pos0 + sz], p["cache"],
             p["lengths"], p["h_last"], pos0=pos0, failed_group=fg)
         self.prefill_calls += 1
         p["pos0"] = pos0 + sz
@@ -443,7 +463,7 @@ class ServeEngine:
         head = (None if self.scfg.ft_mode != "entangle"
                 else (self.head_q, self.w_scale))
         first = np.asarray(self._prefill_head(
-            self.params, p["h_last"], jnp.asarray(valid), head,
+            self.ft_params, p["h_last"], jnp.asarray(valid), head,
             failed_group=failed_group))
         sids, vmask = self._pad_sids([i for i, _ in p["reqs"]])
         self.cache = self._scatter_rows(self.cache, p["cache"], sids, vmask)
@@ -531,7 +551,7 @@ class ServeEngine:
             head = (None if self.scfg.ft_mode != "entangle"
                     else (self.head_q, self.w_scale))
             nxt, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(self.last_tok),
+                self.ft_params, self.cache, jnp.asarray(self.last_tok),
                 jnp.asarray(self.pos), jnp.asarray(active), head,
                 failed_group=failed_group)
             self.decode_calls += 1
@@ -584,8 +604,10 @@ class ServeEngine:
                                                     fuse_epilogue=True)
             self.census.setdefault("head_gemm", {})[shape] = won[shape]
         for site, shape in sorted(self.protected_census):
-            w = kops.warm_entangled_matmul(*shape, self.plan,
-                                           fuse_epilogue=True)
+            # 5-tuple shapes are grouped (MoE per-expert) sites
+            warm = (kops.warm_entangled_matmul_grouped if len(shape) == 5
+                    else kops.warm_entangled_matmul)
+            w = warm(*shape, self.plan, fuse_epilogue=True)
             self.census.setdefault("protected", {})[(site, shape)] = w
             won[(site, shape)] = w
         return won

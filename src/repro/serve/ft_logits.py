@@ -1,119 +1,43 @@
-"""Entangled int8 logits projection — now a thin user of the unified
-protected-GEMM subsystem (:mod:`repro.ft`).
+"""DEPRECATED shim — the entangled logits projection lives in
+:mod:`repro.ft.heads` since the entangled-ops v2 redesign.
 
-The head GEMM (hidden [B, D] x head [D, V]) is sesquilinear, so it runs
-directly on entangled inputs through :func:`repro.ft.protected_matmul`:
-the batch is split into M request groups (streams), activations are
-fixed-point-quantized within the plan's eq. (13) budget, and the fused
-Pallas kernel rolls any single group's fail-stop forward from the other
-M-1 entangled accumulators inside the same kernel.
+Importing this module works but emits a :class:`DeprecationWarning`; every
+public name (``quantize_head``, ``ft_logits``, ``ft_logits_decode``,
+``ft_logits_prefill``, ``decode_group_order``) keeps its exact signature
+and semantics, re-exported from the subsystem. Migrate imports::
 
-The quantize-head / plan-construction logic that used to live here (and
-was duplicated between the decode and prefill entries) moved to
-``repro/ft/quantize.py`` and ``repro/ft/protected.py``; this module keeps
-the public serving signatures:
+    from repro.serve.ft_logits import ft_logits_decode   # old
+    from repro.ft.heads import ft_logits_decode          # new
 
-:func:`ft_logits` is the library form (caller-chosen contiguous grouping).
-:func:`ft_logits_decode` is the batched serving engine's per-step entry:
-slots map round-robin to groups (slot -> group = slot % M) so every group
-stays populated under continuous batching, and the
-:class:`~repro.core.plan.EntanglePlan` is made once at engine startup and
-reused every step. :func:`ft_logits_prefill` is the admission-time entry —
-the first token of every bucketed batched prefill goes through the same
-fused kernel (and the same startup plan), so a fail-stop during prefill
-rolls forward exactly like one during decode.
-
-Returns dequantized float logits. Integer recovery is EXACT (tests assert
-bit-equality under injected failure); the quantization itself trades logits
-precision for protection like any int8 serving path.
+The shim (and a test locking its public surface,
+``tests/test_ft_logits_shim.py``) stays until a release after every known
+caller has migrated.
 """
 from __future__ import annotations
 
-from typing import Optional
+import warnings
 
-import jax
+warnings.warn(
+    "repro.serve.ft_logits is deprecated: the entangled head projection "
+    "moved into the protected-GEMM subsystem — import quantize_head / "
+    "ft_logits / ft_logits_decode / ft_logits_prefill from repro.ft.heads "
+    "instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
-from repro.core.plan import EntanglePlan, make_plan
-from repro.ft.protected import group_order, protected_matmul
-from repro.ft.quantize import quantize_weight as quantize_head  # noqa: F401
-# re-exported compat names: quantize_head is the subsystem's weight policy
+from repro.ft.heads import (  # noqa: E402,F401  (re-exported surface)
+    decode_group_order,
+    ft_logits,
+    ft_logits_decode,
+    ft_logits_prefill,
+    quantize_head,
+)
 
-
-def ft_logits(
-    h: jax.Array,  # [B, D] float hidden states (final norm applied)
-    head_q: jax.Array,  # [D, V] int8-range int32 weights
-    w_scale: jax.Array,
-    *,
-    M: int = 4,
-    plan: Optional[EntanglePlan] = None,
-    failed_group: Optional[int] = None,
-    use_pallas: bool = True,
-    fuse_epilogue: bool = True,
-    blocks=None,
-) -> jax.Array:
-    """Library form: rows grouped contiguously ([M, B/M] caller layout)."""
-    B = h.shape[0]
-    assert B % M == 0, f"batch {B} must split into M={M} request groups"
-    plan = plan or make_plan(M, 32)
-    return protected_matmul(
-        h, (head_q, w_scale), plan=plan, failed_group=failed_group,
-        use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks,
-        contiguous=True)
-
-
-def decode_group_order(B: int, M: int):
-    """Compat alias for :func:`repro.ft.protected.group_order` — the
-    engine's slot -> group = slot % M permutation."""
-    return group_order(B, M)
-
-
-def ft_logits_decode(
-    h: jax.Array,  # [B, D] hidden states of ONE engine decode step
-    head_q: jax.Array,  # [D, V] int8-range int32 weights
-    w_scale: jax.Array,
-    *,
-    plan: EntanglePlan,
-    failed_group: Optional[int] = None,
-    use_pallas: bool = True,
-    fuse_epilogue: bool = True,
-    blocks=None,
-) -> jax.Array:
-    """The serving engine's per-step entry: one fused entangled head GEMM
-    over the whole slot batch, slots mapped round-robin to groups
-    (slot -> group = slot % plan.M).
-
-    Unlike :func:`ft_logits` the plan is REQUIRED: the engine makes it once
-    at startup and reuses it every step, so no per-step (l, k) re-planning
-    and a stable autotune/compile key across the serving lifetime.
-    """
-    return protected_matmul(
-        h, (head_q, w_scale), plan=plan, failed_group=failed_group,
-        use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks)
-
-
-def ft_logits_prefill(
-    h: jax.Array,  # [n, D] per-request last-prompt hidden states
-    head_q: jax.Array,  # [D, V] int8-range int32 weights
-    w_scale: jax.Array,
-    *,
-    plan: EntanglePlan,
-    failed_group: Optional[int] = None,
-    use_pallas: bool = True,
-    fuse_epilogue: bool = True,
-    blocks=None,
-) -> jax.Array:
-    """Admission-time entry: project the last-prompt hidden states gathered
-    from a bucketed batched prefill through the SAME fused entangled kernel
-    (and the same startup :class:`~repro.core.plan.EntanglePlan`) as decode.
-
-    Rows map round-robin to groups like decode (row -> group = row % M);
-    an admission batch that does not divide into M groups is padded with
-    zero rows inside :func:`repro.ft.protected_matmul` (exact: zeros
-    entangle to zeros and cannot perturb any other stream's accumulator,
-    nor the shared activation scale). The caller must zero any garbage rows
-    (empty admission slots) before calling, exactly like the decode path's
-    ``active`` masking, so they cannot poison the shared quantization scale.
-    """
-    return protected_matmul(
-        h, (head_q, w_scale), plan=plan, failed_group=failed_group,
-        use_pallas=use_pallas, fuse_epilogue=fuse_epilogue, blocks=blocks)
+__all__ = [
+    "decode_group_order",
+    "ft_logits",
+    "ft_logits_decode",
+    "ft_logits_prefill",
+    "quantize_head",
+]

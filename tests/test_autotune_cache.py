@@ -1,0 +1,132 @@
+"""Autotune cache-loader hardening.
+
+The JSON winner cache is an *optimization*: a corrupted or partially
+written ``REPRO_AUTOTUNE_CACHE`` file (interrupted process, disk full,
+hand edit) must degrade to the shipped pre-tuned seed cache — or a fresh
+sweep — with a warning, never crash startup. Covered:
+
+  * corrupt-file: truncated/invalid JSON is ignored with a RuntimeWarning
+    and lookups fall through to the pretuned seed;
+  * wrong-structure: a JSON file that is not an object, and entries whose
+    values are not block dicts, are skipped per-entry (one bad key cannot
+    poison the valid winners beside it);
+  * missing-key: a key absent from the user cache falls through to the
+    pretuned seed, and an unknown key sweeps and persists;
+  * precedence: a user-cache winner SHADOWS the pretuned seed for the
+    same key (user-tuned always wins).
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.kernels import autotune
+
+
+@pytest.fixture
+def pretuned_dir(tmp_path, monkeypatch):
+    """Point the shipped-seed loader at a controlled directory."""
+    d = tmp_path / "pretuned"
+    d.mkdir()
+    monkeypatch.setattr(autotune, "PRETUNED_DIR", d)
+    yield d
+    autotune.reset_cache(None)
+
+
+def _seed(d: pathlib.Path, key: str, blocks: dict):
+    (d / "interpret_cpu.json").write_text(json.dumps(
+        {"_meta": {"version": 1}, key: blocks}))
+
+
+KEY = "entangled_matmul|4x8x64x32|interpret_cpu|l8,dualword,fused"
+
+
+def test_corrupt_user_cache_falls_back_to_pretuned(tmp_path, pretuned_dir):
+    _seed(pretuned_dir, KEY, {"bb": 8, "bn": 32, "bk": 64})
+    user = tmp_path / "at.json"
+    user.write_text('{"entangled_matmul|4x8x64x32|interp')  # torn write
+    cache = autotune.AutotuneCache(str(user))
+    with pytest.warns(RuntimeWarning, match="not valid JSON"):
+        got = cache.get(KEY)
+    assert got == {"bb": 8, "bn": 32, "bk": 64}, \
+        "corrupt user cache must fall back to the pretuned seed"
+    assert cache.hits == 1
+
+
+def test_wrong_structure_skips_bad_entries(tmp_path, pretuned_dir):
+    _seed(pretuned_dir, KEY, {"bb": 8, "bn": 32, "bk": 64})
+    user = tmp_path / "at.json"
+    user.write_text(json.dumps({
+        "good|1x2|interpret_cpu|": {"bb": 16},
+        "bad1": "not-a-dict",
+        "bad2": ["nor", "a", "dict"],
+        "bad3": {"bb": "NaNish-garbage"},
+    }))
+    cache = autotune.AutotuneCache(str(user))
+    with pytest.warns(RuntimeWarning, match="malformed"):
+        assert cache.get("good|1x2|interpret_cpu|") == {"bb": 16}
+    assert cache.get("bad1") is None
+    assert cache.get("bad3") is None
+    # the pretuned seed is still intact behind the half-bad user cache
+    assert cache.get(KEY) == {"bb": 8, "bn": 32, "bk": 64}
+
+    top_level_list = tmp_path / "list.json"
+    top_level_list.write_text(json.dumps(["not", "an", "object"]))
+    cache2 = autotune.AutotuneCache(str(top_level_list))
+    with pytest.warns(RuntimeWarning, match="JSON object"):
+        assert cache2.get(KEY) == {"bb": 8, "bn": 32, "bk": 64}
+
+
+def test_missing_key_sweeps_and_persists(tmp_path, pretuned_dir):
+    """A key in neither cache sweeps once and lands in the user file."""
+    user = tmp_path / "at.json"
+    cache = autotune.AutotuneCache(str(user))
+    ticks = []
+
+    def bench(blocks):
+        def thunk():
+            ticks.append(blocks["block_n"])
+            return 0
+        return thunk
+
+    won = autotune.tune("entangle", (4, 64), "interpret_cpu", bench,
+                        candidates=[{"block_n": 128}, {"block_n": 256}],
+                        cache=cache)
+    assert won["block_n"] in (128, 256) and ticks
+    assert cache.sweeps == 1
+    on_disk = json.loads(user.read_text())
+    key = autotune.cache_key("entangle", (4, 64), "interpret_cpu")
+    assert on_disk[key] == won
+    # second resolve: pure hit, no sweep
+    n = len(ticks)
+    assert autotune.tune("entangle", (4, 64), "interpret_cpu", bench,
+                         cache=cache) == won
+    assert len(ticks) == n and cache.sweeps == 1
+
+
+def test_stale_backend_namespace_ignored(tmp_path, pretuned_dir):
+    """Keys from a pre-v2 cache (backend tag 'interpret') or an
+    unregistered port can never match a lookup in this process: they are
+    dropped at load with one aggregate warning instead of lingering in
+    the in-memory cache and inflating stats."""
+    old_key = "entangled_matmul|4x8x64x32|interpret|l8,dualword,fused"
+    user = tmp_path / "at.json"
+    user.write_text(json.dumps({
+        old_key: {"bb": 8, "bn": 32, "bk": 64},
+        "entangled_matmul|4x8x64x32|some_unloaded_port|": {"bb": 16},
+        KEY: {"bb": 128, "bn": 64, "bk": 32},
+    }))
+    cache = autotune.AutotuneCache(str(user))
+    with pytest.warns(RuntimeWarning, match="not registered"):
+        assert cache.get(KEY) == {"bb": 128, "bn": 64, "bk": 32}
+    assert cache.get(old_key) is None
+    assert old_key not in cache._mem
+
+
+def test_user_cache_shadows_pretuned(tmp_path, pretuned_dir):
+    _seed(pretuned_dir, KEY, {"bb": 8, "bn": 32, "bk": 64})
+    user = tmp_path / "at.json"
+    user.write_text(json.dumps({KEY: {"bb": 128, "bn": 64, "bk": 32}}))
+    cache = autotune.AutotuneCache(str(user))
+    assert cache.get(KEY) == {"bb": 128, "bn": 64, "bk": 32}, \
+        "user-tuned winners must take precedence over the shipped seed"

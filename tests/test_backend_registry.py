@@ -1,0 +1,131 @@
+"""Kernel backend registry (kernels/ops) invariants.
+
+  * the three builtin backends are registered and the platform rule picks
+    ``interpret_cpu`` off-TPU; the legacy ``interpret=`` flag still maps
+    onto backend names;
+  * a backend registered from OUTSIDE ops.py (no edits to the module)
+    receives the wrapper's padded operands and resolved blocks — ops
+    routes to it by name and via the process default;
+  * autotune keys are namespaced by backend name, so a port tunes into
+    its own cache rows and can never clobber (or steal) another backend's
+    winners;
+  * unregistering restores the platform default and unknown names fail
+    loudly;
+  * the registration contract is enforced (missing required ops rejected)
+    and the documented Triton/CUDA stub raises NotImplementedError with
+    porting guidance rather than computing garbage.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.plan import make_plan
+from repro.kernels import autotune, ops, ref
+
+PLAN = make_plan(4, 32)
+RNG = np.random.default_rng(3)
+
+
+def _cg(B=10, K=24, N=16):
+    c = jnp.asarray(RNG.integers(-40, 40, size=(4, B, K)).astype(np.int32))
+    g = jnp.asarray(RNG.integers(-25, 25, size=(K, N)).astype(np.int32))
+    return c, g
+
+
+def test_builtin_backends_and_resolution():
+    assert {"pallas_tpu", "interpret_cpu", "reference"} <= set(
+        ops.backend_names())
+    # off-TPU platform rule (CI runs on CPU)
+    assert ops.resolve_backend() == "interpret_cpu"
+    assert ops.resolve_backend(None, True) == "interpret_cpu"
+    assert ops.resolve_backend(None, False) == "pallas_tpu"
+    assert ops.resolve_backend("reference") == "reference"
+    with pytest.raises(KeyError, match="no kernel backend"):
+        ops.resolve_backend("cuda_rocm_fpga")
+
+
+def test_reference_backend_matches_interpret():
+    c, g = _cg()
+    for r in range(PLAN.M):
+        a = ops.entangled_matmul(c, g, PLAN, fuse_epilogue=True, failed=r,
+                                 bb=16, bn=32, bk=32, backend="interpret_cpu")
+        b = ops.entangled_matmul(c, g, PLAN, fuse_epilogue=True, failed=r,
+                                 bb=16, bn=32, bk=32, backend="reference")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_registered_fake_backend_routes_and_namespaces(tmp_path, monkeypatch):
+    """Register a spying backend WITHOUT touching ops.py: ops must route
+    calls to it (explicitly and as process default), autotune must key its
+    winners under the backend's own namespace, and unregistering must
+    restore the platform default."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "at.json"))
+    cache = autotune.reset_cache(str(tmp_path / "at.json"))
+    calls = []
+
+    def spy_emm(c, g, *, plan, fuse_epilogue, failed, blocks):
+        calls.append(("entangled_matmul", c.shape, dict(blocks)))
+        if fuse_epilogue:
+            return ref.entangled_matmul_fused_ref(c, g, plan, r=failed)
+        return ref.entangled_matmul_ref(c, g, plan.l)
+
+    impls = {"entangled_matmul": spy_emm,
+             "entangled_conv1d": lambda *a, **k: (_ for _ in ()).throw(
+                 AssertionError("conv not exercised")),
+             "entangled_matmul_grouped": lambda *a, **k: (_ for _ in ()).throw(
+                 AssertionError("grouped not exercised"))}
+    try:
+        ops.register_backend("fake_accel", impls, interpret=True)
+        c, g = _cg()
+        want = np.asarray(ops.entangled_matmul(
+            c, g, PLAN, fuse_epilogue=True, bb=16, bn=32, bk=32,
+            backend="interpret_cpu"))
+
+        # explicit routing: the spy sees padded operands + resolved blocks
+        got = ops.entangled_matmul(c, g, PLAN, fuse_epilogue=True,
+                                   bb=16, bn=32, bk=32, backend="fake_accel")
+        assert calls and calls[-1][0] == "entangled_matmul"
+        assert calls[-1][1] == (4, 16, 32)  # padded to bb=16, bk=32
+        assert calls[-1][2] == {"bb": 16, "bn": 32, "bk": 32}
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+        # process-default routing
+        ops.set_default_backend("fake_accel")
+        n0 = len(calls)
+        ops.entangled_matmul(c, g, PLAN, fuse_epilogue=True,
+                             bb=16, bn=32, bk=32)
+        assert len(calls) == n0 + 1
+        assert ops.resolve_backend() == "fake_accel"
+
+        # autotune namespacing: winners land under the backend's own name
+        ops.entangled_matmul(c, g, PLAN, fuse_epilogue=True, blocks="auto",
+                             backend="fake_accel")
+        keys = [k for k in cache._mem if "|fake_accel|" in k]
+        assert keys, f"no fake_accel-namespaced winners in {list(cache._mem)}"
+        assert not any("|interpret_cpu|" in k for k in cache._mem), \
+            "fake backend sweep leaked into the interpret_cpu namespace"
+    finally:
+        ops.unregister_backend("fake_accel")
+        autotune.reset_cache(None)
+
+    # unregistering restored the platform default and dropped the name
+    assert ops.resolve_backend() == "interpret_cpu"
+    with pytest.raises(KeyError):
+        ops.get_backend("fake_accel")
+
+
+def test_register_backend_contract_and_triton_stub():
+    with pytest.raises(ValueError, match="missing required ops"):
+        ops.register_backend("half_port", {"entangled_matmul": lambda: 0})
+    assert "half_port" not in ops.backend_names()
+
+    stub = ops.triton_cuda_stub()
+    assert set(stub) == set(ops.REQUIRED_OPS)
+    ops.register_backend("triton_cuda", stub, interpret=False)
+    try:
+        c, g = _cg()
+        with pytest.raises(NotImplementedError, match="not ported yet"):
+            ops.entangled_matmul(c, g, PLAN, fuse_epilogue=True,
+                                 bb=16, bn=32, bk=32, backend="triton_cuda")
+    finally:
+        ops.unregister_backend("triton_cuda")

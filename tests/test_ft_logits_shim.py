@@ -1,0 +1,66 @@
+"""repro.serve.ft_logits deprecation shim: warns on import, keeps the
+exact public surface working (signatures AND behavior) until every caller
+has migrated to repro.ft.heads."""
+import importlib
+import inspect
+import sys
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.plan import make_plan
+
+
+def _fresh_import():
+    sys.modules.pop("repro.serve.ft_logits", None)
+    return importlib.import_module("repro.serve.ft_logits")
+
+
+def test_import_emits_deprecation_warning():
+    with pytest.warns(DeprecationWarning, match="repro.ft.heads"):
+        _fresh_import()
+
+
+def test_public_surface_locked():
+    """The shim must keep every legacy name with its exact signature —
+    a rename or dropped kwarg would break pinned callers silently."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        shim = _fresh_import()
+
+    want = {
+        "ft_logits": ["h", "head_q", "w_scale", "M", "plan", "failed_group",
+                      "use_pallas", "fuse_epilogue", "blocks"],
+        "ft_logits_decode": ["h", "head_q", "w_scale", "plan",
+                             "failed_group", "use_pallas", "fuse_epilogue",
+                             "blocks"],
+        "ft_logits_prefill": ["h", "head_q", "w_scale", "plan",
+                              "failed_group", "use_pallas", "fuse_epilogue",
+                              "blocks"],
+        "decode_group_order": ["B", "M"],
+        "quantize_head": ["w"],
+    }
+    for name, params in want.items():
+        fn = getattr(shim, name)
+        assert list(inspect.signature(fn).parameters) == params, name
+    assert set(shim.__all__) == set(want)
+
+
+def test_shim_behavior_matches_subsystem():
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        shim = _fresh_import()
+    from repro.ft import heads
+
+    rng = np.random.default_rng(5)
+    h = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    head_q, w_scale = shim.quantize_head(w)
+    plan = make_plan(4, 32)
+    old = shim.ft_logits_decode(h, head_q, w_scale, plan=plan,
+                                failed_group=2)
+    new = heads.ft_logits_decode(h, head_q, w_scale, plan=plan,
+                                 failed_group=2)
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))

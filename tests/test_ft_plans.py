@@ -1,0 +1,200 @@
+"""Entangled-ops v2 invariants: ahead-of-time ProtectionPlans, the startup
+weight-quantization hoist, and the grouped (MoE per-expert) protected GEMM.
+
+  * protected_matmul_grouped recovery is EXACT for every failed group on
+    the fused kernel, the unfused kernel and the XLA reference path —
+    including per-expert row counts that do not divide into M groups;
+  * the grouped integer path is faithful to the float per-expert einsum
+    within quantization tolerance, and pre-quantized (startup) weights
+    produce bit-identical results to in-graph quantization;
+  * prepare_params installs q8 entries for exactly the in-scope sites
+    (per-layer / per-expert scales, float masters untouched, MTP skipped)
+    and a traced decode/prefill step after startup performs ZERO weight
+    quantizations (the hoist contract, via quantize.TRACE_STATS);
+  * compile_plans freezes the census into an immutable lookup the
+    FTContext resolves from; a census gap degrades to a lazy registry
+    entry with a RuntimeWarning instead of crashing.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.plan import make_plan
+from repro.ft import (CompiledPlans, FTContext, PlanRegistry, compile_plans,
+                      prepare_params, protected_matmul_grouped,
+                      quantize_weight_stacked)
+from repro.ft import quantize as ftq
+
+RNG = np.random.default_rng(41)
+
+
+def _xw(L=2, E=3, C=6, K=16, N=12):
+    x = jnp.asarray(RNG.normal(size=(L, E, C, K)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(E, K, N)).astype(np.float32))
+    return x, w
+
+
+@pytest.mark.parametrize("use_pallas,fuse", [(True, True), (True, False),
+                                             (False, False)])
+@pytest.mark.parametrize("C", [8, 6])  # 2*6=12 divides M=4; 2*6 rows -> pad 0
+def test_protected_matmul_grouped_failstop_exact(use_pallas, fuse, C):
+    plan = make_plan(4, 32)
+    x, w = _xw(C=C)
+    healthy = protected_matmul_grouped(x, w, plan=plan,
+                                       use_pallas=use_pallas,
+                                       fuse_epilogue=fuse)
+    assert healthy.shape == (2, 3, C, 12)
+    for r in range(plan.M):
+        injected = protected_matmul_grouped(
+            x, w, plan=plan, failed_group=r, use_pallas=use_pallas,
+            fuse_epilogue=fuse)
+        np.testing.assert_array_equal(np.asarray(healthy),
+                                      np.asarray(injected),
+                                      err_msg=f"failed_group={r}")
+
+
+def test_protected_matmul_grouped_ragged_pad_exact():
+    """Per-expert rows (L*C = 2*5 = 10) that do NOT divide into M=4 groups:
+    the zero-row padding must be invisible in the recovered outputs."""
+    plan = make_plan(4, 32)
+    x, w = _xw(C=5)
+    healthy = protected_matmul_grouped(x, w, plan=plan)
+    for r in range(plan.M):
+        injected = protected_matmul_grouped(x, w, plan=plan, failed_group=r)
+        np.testing.assert_array_equal(np.asarray(healthy),
+                                      np.asarray(injected))
+
+
+def test_protected_matmul_grouped_faithful_and_prequantized():
+    plan = make_plan(4, 32)
+    x, w = _xw()
+    got = np.asarray(protected_matmul_grouped(x, w, plan=plan))
+    ref = np.einsum("leck,ekn->lecn", np.asarray(x), np.asarray(w))
+    # per-expert int8 grids: comparable tolerance to the plain path
+    assert np.max(np.abs(got - ref)) < 0.15 * np.max(np.abs(ref))
+    # startup-prequantized weights are bit-identical to in-graph quantization
+    q8 = quantize_weight_stacked(w)
+    got_pre = np.asarray(protected_matmul_grouped(
+        x, (q8["w"], q8["scale"]), plan=plan, failed_group=1))
+    np.testing.assert_array_equal(got, got_pre)
+
+
+def test_quantize_weight_stacked_per_matrix_grids():
+    w = jnp.asarray(RNG.normal(size=(3, 2, 8, 5)).astype(np.float32))
+    q8 = quantize_weight_stacked(w)
+    assert q8["w"].shape == (3, 2, 8, 5) and q8["w"].dtype == jnp.int32
+    assert q8["scale"].shape == (3, 2)
+    # each matrix saturates its own grid at 127
+    assert int(jnp.max(jnp.abs(q8["w"][0, 0]))) == 127
+    assert int(jnp.max(jnp.abs(q8["w"][2, 1]))) == 127
+
+
+# ---------------------------------------------------------------------------
+# prepare_params / compile_plans / trace-count — engine-level contracts
+# ---------------------------------------------------------------------------
+
+def _engine(arch, **kw):
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0), cfg, max_seq=48)
+    scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
+                       **kw)
+    return cfg, params, ServeEngine(cfg, scfg, params)
+
+
+def test_prepare_params_scoped_q8_entries():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg, max_seq=48)
+
+    qkv_only = prepare_params(params, scope="qkv")
+    unit = qkv_only["stack"][1][0]  # the scanned attn_moe block params
+    assert "q8" in unit["attn"]["wkv_a"] and "q8" not in unit["attn"]["wo"]
+    assert "we_gate_q8" not in unit["moe"]
+    assert "router_q8" not in unit["moe"]
+
+    allp = prepare_params(params, scope="all")
+    unit_all = allp["stack"][1][0]
+    moe_all = unit_all["moe"]
+    assert "q8" in unit_all["attn"]["wo"], \
+        "scope=all must cover output projections"
+    for name in ("we_gate", "we_up", "we_down", "router"):
+        assert name + "_q8" in moe_all, name
+        # per-layer (and per-expert) scales follow the stacked leading dims
+        w = moe_all[name]
+        assert moe_all[name + "_q8"]["w"].shape == w.shape
+        assert moe_all[name + "_q8"]["scale"].shape == w.shape[:-2]
+        np.testing.assert_array_equal(  # float master untouched
+            np.asarray(w), np.asarray(params["stack"][1][0]["moe"][name]))
+
+
+def test_prepare_params_skips_mtp():
+    from repro.configs import get_smoke_config
+    from repro.models import get_model
+
+    cfg = get_smoke_config("deepseek-v3-671b")  # has the MTP head
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg, max_seq=32)
+    assert "mtp" in params
+    prepared = prepare_params(params, scope="all")
+    flat = jax.tree_util.tree_flatten_with_path(prepared["mtp"])[0]
+    assert not any("q8" in jax.tree_util.keystr(p) for p, _ in flat), \
+        "train-only MTP weights must not be duplicated into q8 copies"
+
+
+def test_compiled_plans_lookup_and_gap_fallback():
+    reg = PlanRegistry(make_plan(4, 32))
+    e1 = reg.entry("qkv.q", rows=4, K=64, N=48, backend="interpret_cpu")
+    e2 = reg.entry("moe.gate", rows=8, K=64, N=32, backend="interpret_cpu",
+                   groups=8)
+    plans = compile_plans(reg)
+    assert isinstance(plans, CompiledPlans) and len(plans) == 2
+    assert plans.lookup("qkv.q", e1.shape) is e1
+    assert plans.lookup("moe.gate", e2.shape) is e2
+    assert e2.grouped and e2.shape == (4, 8, 2, 64, 32)
+    assert plans.categories() == {"qkv", "moe"}
+
+    # census filter: freeze a subset
+    sub = compile_plans(reg, {("qkv.q", e1.shape): e1.blocks})
+    assert len(sub) == 1 and sub.lookup("moe.gate", e2.shape) is None
+
+    # a census gap warns and degrades to a lazy entry — never crashes
+    ctx = FTContext(registry=reg, scope="all", plans=sub, use_pallas=False)
+    x = jnp.asarray(RNG.normal(size=(4, 32)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(32, 16)).astype(np.float32))
+    with pytest.warns(RuntimeWarning, match="census gap"):
+        y = ctx.matmul("qkv.k", x, w)
+    assert y.shape == (4, 16)
+    assert reg.get("qkv.k", (4, 1, 32, 16), "interpret_cpu") is not None
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v2-lite-16b"])
+def test_no_weight_quantization_in_traced_steps(arch):
+    """THE hoist contract: with plans compiled at startup, tracing and
+    running decode steps and chunked prefill admissions — including the
+    per-failed-group retraces — performs zero eq.-13 weight quantizations.
+    (quantize_weight is a Python-level call, so any in-graph use would
+    bump the counter at trace time.)"""
+    from repro.serve import Request
+
+    cfg, params, eng = _engine(arch, ft_scope="all", prefill_chunk=8)
+    ftq.TRACE_STATS["weight_quantize_calls"] = 0
+    prompts = [RNG.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 9, 12, 5)]
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=p, max_new=2))
+    eng.run_to_completion(max_steps=100)
+    for r, p in enumerate(prompts):  # injected variant: fresh retraces
+        eng.submit(Request(rid=10 + r, prompt=p.copy(), max_new=2))
+    eng.run_to_completion(max_steps=100, failed_group=1)
+    assert ftq.TRACE_STATS["weight_quantize_calls"] == 0, \
+        "a traced step re-quantized weights despite the startup hoist"
+    assert eng.plans is not None and len(eng.plans) > 0
+    want = {"qkv", "mlp", "out"} | ({"moe"} if cfg.moe else set())
+    assert want <= eng.plans.categories()

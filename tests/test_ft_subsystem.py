@@ -140,10 +140,11 @@ def test_pretuned_seed_cache_cold_hit(tmp_path, monkeypatch):
                              ft_M=4, ft_scope="all", blocks="auto"), params)
         assert cache.sweeps == 0, "cold warm swept despite pretuned cache"
         assert cache.hits > 0
-        # warm covered head AND every in-model protected site
+        # warm covered head AND every in-model protected site (incl. the
+        # v2 output-projection category)
         assert eng.census["head_gemm"]
         sites = {s for s, _ in eng.census["protected"]}
         assert {"qkv.q", "qkv.k", "qkv.v",
-                "mlp.gate", "mlp.up", "mlp.down"} <= sites
+                "mlp.gate", "mlp.up", "mlp.down", "out.o"} <= sites
     finally:
         autotune.reset_cache(None)

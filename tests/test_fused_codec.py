@@ -64,6 +64,51 @@ def test_fused_matmul_matches_oracle_all_failures(case):
 
 
 @st.composite
+def grouped_case(draw):
+    M, w, temp = draw(st.sampled_from(PLANS))
+    plan = make_plan(M, w, temp=temp)
+    E = draw(st.integers(1, 5))
+    Cg = draw(st.integers(2, 17))
+    K = draw(st.integers(3, 33))
+    N = draw(st.integers(3, 40))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return plan, E, Cg, K, N, seed
+
+
+@given(grouped_case())
+@SET
+def test_fused_grouped_matmul_matches_oracle_all_failures(case):
+    """The grouped (per-expert) kernel: entangled products, fused
+    extraction and every failed-stream index must match the jnp oracle
+    and the numpy int64 disentangle — per expert, bit-exactly."""
+    plan, E, Cg, K, N, seed = case
+    rng = np.random.default_rng(seed)
+    lim = max(int(np.sqrt(plan.max_output_magnitude / K)) // 2, 1)
+    lim = min(lim, 15)
+    c = jnp.asarray(rng.integers(
+        -lim, lim + 1, size=(plan.M, E, Cg, K)).astype(np.int32))
+    g = jnp.asarray(rng.integers(
+        -lim, lim + 1, size=(E, K, N)).astype(np.int32))
+
+    delta = ops.entangled_matmul_grouped(c, g, plan, bb=16, bn=32, bk=32)
+    np.testing.assert_array_equal(
+        np.asarray(delta),
+        np.asarray(ref.entangled_matmul_grouped_ref(c, g, plan.l)))
+
+    true = np.einsum("meck,ekn->mecn", np.asarray(c, np.int64),
+                     np.asarray(g, np.int64))
+    for r in [None] + list(range(plan.M)):
+        fused = ops.entangled_matmul_grouped(
+            c, g, plan, fuse_epilogue=True, failed=r, bb=16, bn=32, bk=32)
+        oracle = disentangle_oracle_np(
+            np.asarray(delta).reshape(plan.M, -1), plan,
+            0 if r is None else r)
+        np.testing.assert_array_equal(
+            np.asarray(fused).reshape(plan.M, -1), oracle)
+        np.testing.assert_array_equal(np.asarray(fused), true)
+
+
+@st.composite
 def conv_case(draw):
     M, w, temp = draw(st.sampled_from(PLANS))
     plan = make_plan(M, w, temp=temp)
@@ -168,7 +213,7 @@ def test_explicit_blocks_dict_overrides_defaults():
 # ------------------------------------------------------- fused route users --
 
 def test_ft_logits_fused_equals_separate_pass():
-    from repro.serve.ft_logits import ft_logits, quantize_head
+    from repro.ft.heads import ft_logits, quantize_head
 
     rng = np.random.default_rng(11)
     h = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))

@@ -1,0 +1,45 @@
+"""launch/serve argument validation: FT/admission misconfigurations must
+die at PARSE time with a clear message — not deep inside engine startup
+or a traced step."""
+import sys
+
+import pytest
+
+from repro.launch import serve as launch_serve
+
+
+def _argv(*extra):
+    return ["prog", "--arch", "llama3.2-1b", "--smoke", *extra]
+
+
+@pytest.mark.parametrize("extra,msg", [
+    (["--failed-group", "1"], "requires --ft-mode entangle"),
+    (["--ft-mode", "entangle", "--failed-group", "4"], "--ft-M"),
+    (["--ft-mode", "entangle", "--failed-group", "7", "--ft-M", "4"],
+     "--ft-M"),
+    (["--ft-mode", "entangle", "--ft-M", "3"], "divisible"),  # max_batch 4
+    (["--ft-mode", "entangle", "--ft-M", "2", "--max-batch", "4"], ">= 3"),
+    (["--ft-scope", "everything"], "invalid choice"),
+    (["--prefill-chunk", "-3"], "prefill-chunk"),
+    (["--prefill-buckets", "8,banana"], "comma-separated"),
+    (["--prefill-buckets", "8,512", "--max-seq", "64"], "max-seq"),
+])
+def test_bad_args_fail_at_parse_time(monkeypatch, capsys, extra, msg):
+    monkeypatch.setattr(sys, "argv", _argv(*extra))
+    with pytest.raises(SystemExit) as e:
+        launch_serve.main()
+    assert e.value.code == 2, "argparse .error exits with code 2"
+    assert msg in capsys.readouterr().err
+
+
+def test_new_scopes_accepted_at_parse_time(monkeypatch, capsys):
+    """'out' and 'moe' are real choices now — the parser takes them and
+    dies on the NEXT invalid flag, proving scope validation passed."""
+    for scope in ("out", "moe", "all"):
+        monkeypatch.setattr(sys, "argv", _argv(
+            "--ft-mode", "entangle", "--ft-scope", scope,
+            "--prefill-chunk", "-1"))
+        with pytest.raises(SystemExit) as e:
+            launch_serve.main()
+        assert e.value.code == 2
+        assert "prefill-chunk" in capsys.readouterr().err

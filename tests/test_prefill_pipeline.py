@@ -107,13 +107,15 @@ def test_prefill_ft_failstop_bit_identical_all_groups():
 
 
 @pytest.mark.parametrize(
-    "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b"])
+    "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b",
+             "deepseek-v2-lite-16b"])
 def test_prefill_ft_scope_all_failstop_bit_identical(arch):
-    """ft_scope='all' + CHUNKED bucketed admission: every QKV/MLP GEMM of
-    every prefill chunk runs entangled, and a fail-stop injected on every
-    step in ANY single group rolls forward in-kernel — all generated
-    tokens bit-identical to the healthy scope='all' run, for dense, ssm
-    and hybrid models."""
+    """ft_scope='all' + CHUNKED bucketed admission: every QKV/MLP/output
+    GEMM of every prefill chunk — and, for the MoE model, every grouped
+    per-expert GEMM — runs entangled, and a fail-stop injected on every
+    step in ANY single group rolls forward in-kernel: all generated
+    tokens bit-identical to the healthy scope='all' run, for dense, ssm,
+    hybrid and MoE models."""
     cfg, _, params = _setup(arch)
     prompts = _ragged_prompts(cfg, [3, 20, 7, 12, 5])
     scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,

@@ -95,16 +95,17 @@ def test_ft_failstop_bit_identical():
                 healthy[r], injected[r], err_msg=f"failed_group={fg} rid={r}")
 
 
-@pytest.mark.parametrize("scope", ["head", "qkv", "mlp", "all"])
+@pytest.mark.parametrize("scope", ["head", "qkv", "mlp", "out", "all"])
 @pytest.mark.parametrize(
     "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b"])
 def test_ft_scope_failstop_bit_identical(arch, scope):
-    """The scope x failure matrix (dense/ssm/hybrid x head/qkv/mlp/all x
-    every group): with protection widened to the in-model QKV/MLP
-    projections (repro.ft), a fail-stop injected on EVERY step into ANY
-    single group — reaching every protected GEMM of the decode step and
-    the admission head — still decodes bit-identically to the healthy run
-    at the same scope, via the per-site in-kernel roll-forward."""
+    """The scope x failure matrix (dense/ssm/hybrid x
+    head/qkv/mlp/out/all x every group): with protection widened to the
+    in-model QKV/MLP/output projections (repro.ft), a fail-stop injected
+    on EVERY step into ANY single group — reaching every protected GEMM
+    of the decode step and the admission head — still decodes
+    bit-identically to the healthy run at the same scope, via the
+    per-site in-kernel roll-forward."""
     cfg, _, params = _setup(arch)
     prompts = _prompts(5, cfg.vocab_size)
     scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
@@ -118,6 +119,32 @@ def test_ft_scope_failstop_bit_identical(arch, scope):
             np.testing.assert_array_equal(
                 healthy[r], injected[r],
                 err_msg=f"{arch} scope={scope} failed_group={fg} rid={r}")
+
+
+@pytest.mark.parametrize("scope", ["moe", "all"])
+def test_ft_moe_grouped_failstop_bit_identical(scope):
+    """MoE coverage: with scope 'moe' (and 'all', which now includes it)
+    the per-expert batched GEMMs run through the GROUPED entangled kernel
+    on every decode step — a fail-stop in any single group rolls forward
+    bit-identically across all experts at once, with routing (router site)
+    and capacity drops identical between the healthy and injected runs."""
+    cfg, _, params = _setup("deepseek-v2-lite-16b")
+    prompts = _prompts(5, cfg.vocab_size)
+    scfg = ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
+                       ft_scope=scope)
+    healthy, eng, _ = _run(ServeEngine, cfg, scfg, params, prompts,
+                           max_new=3)
+    assert set(healthy) == set(range(5))
+    # the grouped sites actually compiled into the AOT plan set
+    assert "moe" in eng.plans.categories()
+    assert any(p.grouped for p in eng.plans)
+    for fg in range(4):
+        injected, _, _ = _run(ServeEngine, cfg, scfg, params, prompts,
+                              max_new=3, failed_group=fg)
+        for r in healthy:
+            np.testing.assert_array_equal(
+                healthy[r], injected[r],
+                err_msg=f"scope={scope} failed_group={fg} rid={r}")
 
 
 def test_exactly_max_new_tokens():

@@ -15,7 +15,7 @@ from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.dist.collectives import checksum_grad_sync, ft_grad_sync
 from repro.models import get_model
 from repro.serve.engine import Request, ServeConfig, ServeEngine
-from repro.serve.ft_logits import ft_logits, quantize_head
+from repro.ft.heads import ft_logits, quantize_head
 from repro.train.checkpoint import CheckpointManager
 from repro.train.straggler import DeadlineExecutor
 from repro.train.train_step import TrainConfig, init_state, make_train_step
