@@ -19,6 +19,13 @@ Two sections:
 
             run() validates ratio(three-pass/fused) >= 2 and reports
             wall-times on the current backend (interpret mode off-TPU).
+
+  packed_*  the int8-packing ledger: protected weights stored 4 int8
+            lanes per int32 word (unpacked container: 4*K*N bytes,
+            packed: 4*ceil(K/4)*N — true int8 bytes). run() validates
+            the packed fused kernel is bit-equal to the unpacked one
+            (healthy and failed) and that the weight-bytes ratio is
+            >= 3x (exactly 4x whenever 4 | K).
 """
 from __future__ import annotations
 
@@ -30,6 +37,7 @@ from benchmarks.common import fusion_bytes_model, time_call
 from repro.core.entangle import disentangle, entangle
 from repro.core.plan import make_plan
 from repro.kernels import ops as kops
+from repro.kernels.codec import pack_int8
 
 
 def _codec_section(emit, n: int):
@@ -92,9 +100,51 @@ def _fusion_section(emit, sizes) -> bool:
     return ok
 
 
+def _packed_section(emit, sizes) -> bool:
+    """Packed-int8 weight kernels: bit-equality vs the int32-container
+    path, wall-times, and the weight-bytes ledger (gate: >= 3x fewer)."""
+    rng = np.random.default_rng(6)
+    ok = True
+    for M, B, K, N in sizes:
+        plan = make_plan(M, 32)
+        lim = max(plan.max_output_magnitude // (K * 127), 1)
+        c = jnp.asarray(rng.integers(-lim, lim, size=(M, B, K)).astype(np.int32))
+        g = jnp.asarray(rng.integers(-127, 128, size=(K, N)).astype(np.int32))
+        gp = pack_int8(g, axis=0)
+        bl = {"bb": min(64, B), "bn": min(64, N), "bk": min(64, K)}
+
+        unpacked = lambda f=None: kops.entangled_matmul(
+            c, g, plan, fuse_epilogue=True, failed=f, blocks=bl)
+        packed = lambda f=None: kops.entangled_matmul(
+            c, gp, plan, fuse_epilogue=True, failed=f, packed=True,
+            blocks=bl)
+
+        for f in (None, 1):  # bit-equal before timing, healthy and failed
+            np.testing.assert_array_equal(
+                np.asarray(packed(f)), np.asarray(unpacked(f)))
+
+        t_u = time_call(unpacked)
+        t_p = time_call(packed)
+        w_unpacked = 4 * K * N  # int32 container holding int8 values
+        w_packed = 4 * (-(-K // 4)) * N  # 4 lanes per word: true int8 bytes
+        ratio = w_unpacked / w_packed
+        ok &= ratio >= 3.0
+        emit(
+            f"packed_M{M}_B{B}_K{K}_N{N}", t_p * 1e6,
+            f"t_unpacked_us={t_u * 1e6:.1f};"
+            f"weight_bytes_unpacked={w_unpacked};"
+            f"weight_bytes_packed={w_packed};"
+            f"weight_bytes_ratio={ratio:.2f} (gate >= 3x: "
+            f"{'PASS' if ratio >= 3.0 else 'FAIL'})",
+        )
+    return ok
+
+
 def run(emit, n: int = 1 << 20, fusion_sizes=None) -> bool:
     _codec_section(emit, n)
     if fusion_sizes is None:
         fusion_sizes = ((4, 128, 128, 128), (4, 256, 128, 256),
                         (8, 128, 128, 128))
-    return _fusion_section(emit, fusion_sizes)
+    ok = _fusion_section(emit, fusion_sizes)
+    ok &= _packed_section(emit, fusion_sizes)
+    return ok

@@ -10,7 +10,13 @@ compilation is amortized like a long-running server) for:
                             GEMM on every decode step (ft_mode='entangle',
                             ft_scope='head')
   * ``serve_batched_ft_all`` — ft_scope='all': EVERY hot-path projection
-                            (QKV, MLP up/down, head) runs entangled
+                            (QKV, MLP up/down, head) runs entangled, with
+                            the defaults on — weights int8-PACKED
+                            4-per-word (kernels unpack on load) and fanout
+                            site groups sharing one codec pass
+  * ``serve_batched_ft_all_unpacked`` — same scope with ``ft_packed=False,
+                            ft_chain=False``: the legacy int32-container /
+                            per-site-codec path, kept as the A/B baseline
 
 plus a PROMPT-HEAVY admission wave (max_new=1, so the wave is pure
 prefill) for:
@@ -23,7 +29,14 @@ prefill) for:
 Derived records: ``serve_speedup`` / ``prefill_speedup`` (batched vs
 per-request, both >= 2x acceptance gates), per-scope ``ft_overhead_pct``
 records — ``serve_ft_overhead_pct`` (scope=head) /
-``serve_ft_overhead_pct_all`` (scope=all), and the prefill twins — and
+``serve_ft_overhead_pct_all`` (scope=all, packed+fanout defaults) /
+``serve_ft_overhead_pct_all_packed`` (alias of the same measurement, the
+record CI compares against ``..._all_unpacked`` on real backends — on
+interpret CPU the unpack is simulated as extra compute while the 4x HBM
+byte cut it buys is free, so there the A/B is informational and the
+packed win is gated through the kernel_micro weight-bytes ledger) /
+``serve_ft_overhead_pct_all_unpacked`` (the legacy A/B baseline), and the
+prefill twins — and
 ``ft_coverage`` records asserting which protected-site CATEGORIES the
 scope=all engines actually compiled plans for: ``serve_ft_coverage_all``
 (dense arch: head/qkv/mlp/out) and ``serve_ft_coverage_moe`` (a
@@ -128,6 +141,11 @@ def run(emit, *, max_batch: int = 8, n_requests: int = 16,
             cfg, ServeConfig(max_batch=max_batch, max_seq=64,
                              ft_mode="entangle", ft_M=ft_M,
                              ft_scope="all"), params),
+        "serve_batched_ft_all_unpacked": ServeEngine(
+            cfg, ServeConfig(max_batch=max_batch, max_seq=64,
+                             ft_mode="entangle", ft_M=ft_M,
+                             ft_scope="all", ft_packed=False,
+                             ft_chain=False), params),
     }
 
     records = []
@@ -147,7 +165,9 @@ def run(emit, *, max_batch: int = 8, n_requests: int = 16,
                  label="batched/per-slot", main="serve_batched",
                  base="serve_per_slot",
                  ft={"head": "serve_batched_ft",
-                     "all": "serve_batched_ft_all"})
+                     "all": "serve_batched_ft_all",
+                     "all_packed": "serve_batched_ft_all",
+                     "all_unpacked": "serve_batched_ft_all_unpacked"})
 
     # coverage gates: scope=all really protects every category. The dense
     # arch above covers head/qkv/mlp/out; the MoE categories (grouped

@@ -44,10 +44,11 @@ recipe to add a site to the v2 plan-compile flow.
 from repro.ft.plans import (PROTECTED_WEIGHT_KEYS, CompiledPlans,
                             compile_plans, prepare_params)
 from repro.ft.protected import (FTContext, ProtectedLinear, SCOPES,
-                                group_order, protected_matmul,
-                                protected_matmul_grouped)
-from repro.ft.quantize import (activation_budget, quantize_acts,
-                               quantize_weight, quantize_weight_stacked)
+                                entangled_chain, group_order,
+                                protected_matmul, protected_matmul_grouped)
+from repro.ft.quantize import (activation_budget, chain_budget,
+                               quantize_acts, quantize_weight,
+                               quantize_weight_stacked)
 from repro.ft.registry import (PlanEntry, PlanRegistry, ProtectionPlan,
                                default_blocks, group_rows)
 
@@ -61,7 +62,9 @@ __all__ = [
     "ProtectionPlan",
     "SCOPES",
     "activation_budget",
+    "chain_budget",
     "compile_plans",
+    "entangled_chain",
     "default_blocks",
     "group_order",
     "group_rows",

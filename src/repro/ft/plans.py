@@ -78,11 +78,17 @@ def _is_float_weight(v) -> bool:
             and jnp.issubdtype(v.dtype, jnp.floating))
 
 
-def prepare_params(params, *, scope: str):
+def prepare_params(params, *, scope: str, packed: bool = True):
     """Return a copy of ``params`` with every in-scope protected site's
     weights pre-quantized (see module docstring). Structure-preserving:
     float masters and all other leaves pass through untouched, so the
     result drops into every existing model entry point.
+
+    ``packed=True`` (the default) stores each q8 copy int8-packed
+    4-per-int32-word along the contraction axis — 1x its true bytes in
+    HBM instead of the 4x int32 container; the kernels unpack on load
+    (``packed=False`` keeps the legacy int32-container copies, e.g. for
+    the unpacked benchmark baseline).
     """
     from repro.ft.protected import SCOPES  # deferred: protected imports us
 
@@ -97,11 +103,11 @@ def prepare_params(params, *, scope: str):
                     out[k] = walk(v) if k not in _SKIP_SUBTREES else v
                 elif isinstance(v, dict) and _is_float_weight(v.get("w")):
                     nv = dict(v)
-                    nv["q8"] = quantize_weight_stacked(v["w"])
+                    nv["q8"] = quantize_weight_stacked(v["w"], packed=packed)
                     out[k] = nv
                 elif _is_float_weight(v):
                     out[k] = v
-                    out[k + "_q8"] = quantize_weight_stacked(v)
+                    out[k + "_q8"] = quantize_weight_stacked(v, packed=packed)
                 else:
                     out[k] = walk(v)
             return out
@@ -121,12 +127,23 @@ class CompiledPlans:
     entry with a warning — a census gap must degrade, not crash, a
     serving process)."""
 
-    def __init__(self, plans: Iterable[ProtectionPlan]):
+    def __init__(self, plans: Iterable[ProtectionPlan],
+                 chains: Iterable[tuple] = ()):
         self._plans: dict[tuple, ProtectionPlan] = {
             (p.site, p.shape): p for p in plans}
+        # chainable site groups marked by the engine census at plan-compile
+        # time: each tuple names sites that share their input activations
+        # and run strictly linearly, so the fanout/chain executor covers
+        # them with ONE quantize+entangle pass (see ft/protected.py)
+        self._chains: frozenset = frozenset(tuple(c) for c in chains)
 
     def lookup(self, site: str, shape: tuple) -> Optional[ProtectionPlan]:
         return self._plans.get((site, shape))
+
+    @property
+    def chains(self) -> frozenset:
+        """Chainable site groups discovered by the compile-time census."""
+        return self._chains
 
     def plans(self) -> tuple:
         return tuple(self._plans.values())
@@ -166,4 +183,4 @@ def compile_plans(registry: PlanRegistry,
     if census is not None:
         wanted = set(census)
         entries = [e for e in entries if (e.site, e.shape) in wanted]
-    return CompiledPlans(entries)
+    return CompiledPlans(entries, chains=registry.chains())

@@ -59,8 +59,9 @@ from repro.core.entangle import disentangle as core_disentangle
 from repro.core.entangle import entangle as core_entangle
 from repro.core.failstop import GARBAGE
 from repro.core.plan import EntanglePlan
-from repro.ft.quantize import (quantize_acts, quantize_weight,
+from repro.ft.quantize import (chain_budget, quantize_acts, quantize_weight,
                                quantize_weight_stacked)
+from repro.kernels.codec import unpack_int8
 from repro.ft.registry import PlanRegistry, ProtectionPlan, group_rows
 
 # scope -> protected site categories (cumulative; head is always in)
@@ -102,6 +103,21 @@ def _split_weight(w: Weight):
     return quantize_weight(w)
 
 
+def _is_packed(wq: jax.Array, K: int, axis: int = -2) -> bool:
+    """Packedness of a pre-quantized weight, from its contraction-axis
+    length: the packed copy carries ceil(K/4) int32 words for K int8
+    lanes. Every protected K is >= 2, so the lengths can never collide."""
+    return wq.shape[axis] != K
+
+
+def _unpacked_f32(wq: jax.Array, K: int, axis: int) -> jax.Array:
+    """Float view of a maybe-packed weight for the census einsums (the
+    abstract traces only need shapes; a float master passes through)."""
+    if _is_packed(wq, K, axis=axis):
+        wq = unpack_int8(wq, axis=axis, n=K)
+    return wq.astype(jnp.float32)
+
+
 def protected_matmul(
     x: jax.Array,  # [..., K] float activations
     w: Weight,  # [K, N] float weights, or (wq, w_scale) pre-quantized
@@ -128,6 +144,7 @@ def protected_matmul(
     wq, w_scale = _split_weight(w)
     lead, K = x.shape[:-1], x.shape[-1]
     N = wq.shape[1]
+    packed = _is_packed(wq, K)
     R = int(np.prod(lead, dtype=np.int64)) if lead else 1
     M = plan.M
 
@@ -153,15 +170,17 @@ def protected_matmul(
         # algebra never reads it, so injecting garbage is equivalent)
         rec = kops.entangled_matmul(
             xg, wq, plan, fuse_epilogue=True, failed=failed_group,
-            blocks=blocks, interpret=interpret, backend=backend)
+            packed=packed, blocks=blocks, interpret=interpret,
+            backend=backend)
     else:
         if use_pallas:
-            delta = kops.entangled_matmul(xg, wq, plan, blocks=blocks,
-                                          interpret=interpret,
+            delta = kops.entangled_matmul(xg, wq, plan, packed=packed,
+                                          blocks=blocks, interpret=interpret,
                                           backend=backend)
         else:
             eps = core_entangle(xg, plan)
-            delta = jnp.einsum("mbk,kn->mbn", eps, wq).astype(jnp.int32)
+            wq_full = unpack_int8(wq, axis=0, n=K) if packed else wq
+            delta = jnp.einsum("mbk,kn->mbn", eps, wq_full).astype(jnp.int32)
         if failed_group is not None:
             delta = delta.at[failed_group].set(GARBAGE)
         rec = core_disentangle(delta, plan, failed=failed_group)
@@ -201,7 +220,9 @@ def protected_matmul_grouped(
     else:
         q8 = quantize_weight_stacked(w)  # per-expert grids
         wq, w_scale = q8["w"], q8["scale"]
-    E, K, N = wq.shape
+    E, N = wq.shape[0], wq.shape[2]
+    K = x.shape[-1]
+    packed = _is_packed(wq, K)
     lead = x.shape[:-3]
     C = x.shape[-2]
     assert x.shape[-3] == E, (x.shape, wq.shape)
@@ -227,16 +248,18 @@ def protected_matmul_grouped(
     if use_pallas and fuse_epilogue:
         rec = kops.entangled_matmul_grouped(
             xg, wq, plan, fuse_epilogue=True, failed=failed_group,
-            blocks=blocks, interpret=interpret, backend=backend)
+            packed=packed, blocks=blocks, interpret=interpret,
+            backend=backend)
     else:
         if use_pallas:
             delta = kops.entangled_matmul_grouped(
-                xg, wq, plan, blocks=blocks, interpret=interpret,
-                backend=backend)
+                xg, wq, plan, packed=packed, blocks=blocks,
+                interpret=interpret, backend=backend)
         else:
             eps = core_entangle(xg, plan)
+            wq_full = unpack_int8(wq, axis=1, n=K) if packed else wq
             delta = jnp.einsum("meck,ekn->mecn", eps,
-                               wq.astype(jnp.int32)).astype(jnp.int32)
+                               wq_full.astype(jnp.int32)).astype(jnp.int32)
         if failed_group is not None:
             delta = delta.at[failed_group].set(GARBAGE)
         rec = core_disentangle(delta, plan, failed=failed_group)
@@ -247,6 +270,102 @@ def protected_matmul_grouped(
     scale = a_scale * (w_s if w_s.ndim == 0 else w_s[:, None, None])
     y = y / scale
     return jnp.moveaxis(y.reshape(E, L, C, N), 0, 1).reshape(*lead, E, C, N)
+
+
+def entangled_chain(
+    x: jax.Array,  # [..., K] float activations of the FIRST hop
+    ws: list,  # per-hop weights: float [K_i, N_i] or (wq, w_scale) pairs
+    *,
+    plan: EntanglePlan,
+    failed_group: Optional[int] = None,
+    blocks=None,  # None, or one blocks policy per hop
+    contiguous: bool = False,
+    interpret=None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    """Run N consecutive strictly-linear protected GEMMs WITHOUT leaving
+    the entangled domain: one entangle, N GEMMs, one extract.
+
+    Entanglement is linear over streams, so ``(E c) @ g = E (c @ g)`` —
+    the first hop entangles on load and returns raw entangled accumulators
+    (``fuse_epilogue=False``), every middle hop multiplies them through a
+    plain per-stream GEMM (``'chain'``: no re-entangle, no extract), and
+    the last hop extracts at its flush (``'chain_final'``). A fail-stopped
+    stream's garbage propagates only within its own stream (each hop is
+    per-stream), and the final extraction statically excludes it — the
+    roll-forward is exact for any single failed stream failing at ANY
+    point in the chain.
+
+    The price is overflow headroom: the single extraction must absorb the
+    whole chain's amplification, so the first hop quantizes onto
+    :func:`~repro.ft.quantize.chain_budget`'s grid. When that budget is 0
+    the chain is infeasible under this plan and the call falls back to
+    per-hop :func:`protected_matmul` extraction (same protection, one
+    extract per hop, requantizing between hops).
+
+    Returns dequantized float32 outputs ``[..., N_last]``.
+    """
+    assert len(ws) >= 1
+    split = [_split_weight(w) for w in ws]
+    lead, K = x.shape[:-1], x.shape[-1]
+    depths = [K]
+    for wq, _ in split[:-1]:
+        n = wq.shape[1]
+        # a packed hop's true N is its column count (packing is along K
+        # only), so the next hop's depth is simply shape[1]
+        depths.append(n)
+    budget = chain_budget(plan, depths)
+    if budget < 1 or len(ws) == 1:
+        # infeasible under this plan (or trivial): extract per hop
+        y = x
+        bl = blocks if blocks is not None else [None] * len(ws)
+        for w, b in zip(ws, bl):
+            y = protected_matmul(
+                y, w, plan=plan, failed_group=failed_group, blocks=b,
+                contiguous=contiguous, interpret=interpret, backend=backend)
+        return y
+
+    M = plan.M
+    R = int(np.prod(lead, dtype=np.int64)) if lead else 1
+    xf = x.reshape(R, K).astype(jnp.float32)
+    xq, a_scale = quantize_acts(xf, plan, K, budget=budget)
+    pad = (-R) % M
+    if pad:
+        xq = jnp.concatenate([xq, jnp.zeros((pad, K), jnp.int32)], axis=0)
+    Rp = R + pad
+    if contiguous:
+        inv = None
+        xg = xq.reshape(M, Rp // M, K)
+    else:
+        order, inv = group_order(Rp, M)
+        xg = xq[order].reshape(M, Rp // M, K)
+
+    from repro.kernels import ops as kops  # deferred: keeps core import-light
+
+    bl = blocks if blocks is not None else [None] * len(ws)
+    cur, depth = xg, K
+    for i, (wq, _) in enumerate(split):
+        if i == 0:
+            mode = False  # entangle on load, keep entangled
+        elif i == len(split) - 1:
+            mode = "chain_final"  # extract at the last flush
+        else:
+            mode = "chain"
+        cur = kops.entangled_matmul(
+            cur, wq, plan, fuse_epilogue=mode, failed=failed_group,
+            packed=_is_packed(wq, depth), blocks=bl[i],
+            interpret=interpret, backend=backend)
+        depth = wq.shape[1]
+
+    N = split[-1][0].shape[1]
+    y = cur.reshape(Rp, N).astype(jnp.float32)
+    if inv is not None:
+        y = y[inv]
+    w_prod = 1.0
+    for _, s in split:
+        w_prod = w_prod * s
+    y = y[:R] / (a_scale * w_prod)
+    return y.reshape(*lead, N)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,6 +439,11 @@ class FTContext:
     failed_group: Optional[int] = None
     census_only: bool = False
     plans: Optional[object] = None  # repro.ft.plans.CompiledPlans
+    # share one quantize/permute codec pass across fanout site groups
+    # (sites consuming the same activations — attention Q/K/V, MLP
+    # gate/up, ...); census-only traces mark the groups either way, so
+    # the compiled plans always expose what COULD chain
+    chain: bool = True
 
     def __post_init__(self):
         if self.scope not in SCOPES:
@@ -358,27 +482,85 @@ class FTContext:
     def matmul(self, site: str, x: jax.Array, w: Weight) -> jax.Array:
         """Run (or, census-only, record) one protected GEMM site."""
         wq = w[0] if isinstance(w, tuple) else w
-        K, N = wq.shape[-2:]
+        # K comes from the ACTIVATIONS: a packed q8 copy's contraction
+        # axis holds ceil(K/4) words, never the true depth
+        K, N = x.shape[-1], wq.shape[-1]
         rows = int(np.prod(x.shape[:-1], dtype=np.int64)) if x.ndim > 1 else 1
         if self.census_only:
             self.registry.entry(site, rows, K, N, _backend())
             return jnp.einsum("...k,kn->...n", x.astype(jnp.float32),
-                              wq.astype(jnp.float32))
+                              _unpacked_f32(wq, K, axis=0))
         plan = self._resolve(site, rows, K, N)
         return ProtectedLinear(plan=plan, use_pallas=self.use_pallas)(
             x, w, failed_group=self.failed_group)
+
+    def matmul_fanout(self, sites: tuple, x: jax.Array,
+                      ws: tuple) -> list:
+        """Run (or record) a FANOUT site group: every site in ``sites``
+        multiplies the SAME activations ``x`` against its own weight.
+
+        With ``chain=True`` the group shares one quantize + group-permute
+        + pad codec pass — the dominant non-GEMM cost of a protected site
+        — and each member then runs its own fused entangle-GEMM-extract
+        kernel call. Bit-identical to per-site :meth:`matmul` calls: the
+        activation grid depends only on (x, plan, K), which the group
+        shares by construction, and extraction is per output column.
+        Census-only traces additionally mark the group as chainable
+        (:meth:`~repro.ft.registry.PlanRegistry.note_chain`), so the
+        compiled plans expose the chain sites at plan-compile time.
+        Returns one output per site, in order.
+        """
+        K = x.shape[-1]
+        rows = int(np.prod(x.shape[:-1], dtype=np.int64)) if x.ndim > 1 else 1
+        wqs = [w[0] if isinstance(w, tuple) else w for w in ws]
+        if self.census_only:
+            self.registry.note_chain(tuple(sites))
+            return [self.matmul(s, x, w) for s, w in zip(sites, ws)]
+        if not self.chain:
+            return [self.matmul(s, x, w) for s, w in zip(sites, ws)]
+
+        plans = [self._resolve(s, rows, K, wq.shape[-1])
+                 for s, wq in zip(sites, wqs)]
+        plan = plans[0].plan
+        M = plan.M
+        lead = x.shape[:-1]
+        xf = x.reshape(rows, K).astype(jnp.float32)
+        xq, a_scale = quantize_acts(xf, plan, K)
+        pad = (-rows) % M
+        if pad:
+            xq = jnp.concatenate([xq, jnp.zeros((pad, K), jnp.int32)],
+                                 axis=0)
+        Rp = rows + pad
+        order, inv = group_order(Rp, M)
+        xg = xq[order].reshape(M, Rp // M, K)
+
+        from repro.kernels import ops as kops
+
+        outs = []
+        for p, w in zip(plans, ws):
+            wq_i, w_scale = _split_weight(w)
+            N = wq_i.shape[-1]
+            rec = kops.entangled_matmul(
+                xg, wq_i, p.plan, fuse_epilogue=True,
+                failed=self.failed_group, packed=_is_packed(wq_i, K),
+                blocks=p.blocks, backend=p.backend)
+            y = rec.reshape(Rp, N).astype(jnp.float32)
+            y = y[inv][:rows] / (a_scale * w_scale)
+            outs.append(y.reshape(*lead, N))
+        return outs
 
     def matmul_grouped(self, site: str, x: jax.Array,
                        w: Weight) -> jax.Array:
         """Run (or record) one grouped per-expert protected GEMM site:
         x [..., E, C, K] against per-expert weights [E, K, N]."""
         wq = w[0] if isinstance(w, tuple) else w
-        E, K, N = wq.shape[-3:]
+        E, N = wq.shape[-3], wq.shape[-1]
+        K = x.shape[-1]
         rows = int(np.prod(x.shape[:-3], dtype=np.int64)) * x.shape[-2]
         if self.census_only:
             self.registry.entry(site, rows, K, N, _backend(), groups=E)
             return jnp.einsum("...eck,ekn->...ecn", x.astype(jnp.float32),
-                              wq.astype(jnp.float32))
+                              _unpacked_f32(wq, K, axis=1))
         plan = self._resolve(site, rows, K, N, groups=E)
         return ProtectedLinear(plan=plan, use_pallas=self.use_pallas)(
             x, w, failed_group=self.failed_group)

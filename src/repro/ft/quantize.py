@@ -24,10 +24,13 @@ identical logits and identical tokens (tested).
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.plan import EntanglePlan
+from repro.kernels.codec import pack_int8
 
 
 # observability: how often the eq.-13 weight policy actually runs. The v2
@@ -46,7 +49,7 @@ def quantize_weight(w: jax.Array) -> tuple[jax.Array, jax.Array]:
     return jnp.clip(jnp.round(w * scale), -127, 127).astype(jnp.int32), scale
 
 
-def quantize_weight_stacked(w: jax.Array) -> dict:
+def quantize_weight_stacked(w: jax.Array, *, packed: bool = False) -> dict:
     """Per-matrix int8 quantization of a stacked weight ``[..., K, N]``.
 
     Every leading axis (layer-repeat, expert) gets its own scale: the
@@ -56,11 +59,19 @@ def quantize_weight_stacked(w: jax.Array) -> dict:
     once at startup. Returns ``{"w": int32 [..., K, N], "scale": [...]}``,
     the ``q8`` pytree entry :func:`repro.ft.plans.prepare_params` installs
     next to the float master.
+
+    ``packed=True`` additionally packs the int8 values 4-per-int32-word
+    along the contraction axis (:func:`repro.kernels.codec.pack_int8`), so
+    the stored copy is ``[..., ceil(K/4), N]`` — its true int8 bytes in
+    HBM. The kernels unpack on load; consumers detect packedness from the
+    contraction-axis length (``w.shape[-2] != K``).
     """
     fn = quantize_weight
     for _ in range(w.ndim - 2):
         fn = jax.vmap(fn)
     wq, scale = fn(w)
+    if packed:
+        wq = pack_int8(wq, axis=-2)
     return {"w": wq, "scale": scale}
 
 
@@ -71,11 +82,33 @@ def activation_budget(plan: EntanglePlan, depth: int) -> int:
     return max(plan.max_output_magnitude // (depth * 127), 1)
 
 
-def quantize_acts(x: jax.Array, plan: EntanglePlan,
-                  depth: int) -> tuple[jax.Array, jax.Array]:
+def chain_budget(plan: EntanglePlan, depths: Sequence[int]) -> int:
+    """Activation budget for an entangled-domain GEMM *chain*.
+
+    A chain of GEMMs with contraction depths ``K_1 .. K_n`` (each against
+    int8 weights) amplifies the first hop's activations by at most
+    ``prod(K_i * 127)`` before the single final extraction, so the first
+    hop's integer grid must satisfy
+    ``budget * prod(K_i * 127) <= plan.max_output_magnitude`` for the whole
+    chain to stay within the plan's eq. (13) range at every hop. Returns 0
+    when no such grid exists — the chain is infeasible under this plan and
+    the executor must fall back to per-GEMM extraction (which it does; see
+    :func:`repro.ft.protected.entangled_chain`).
+    """
+    amp = 1
+    for K in depths:
+        amp *= int(K) * 127
+    return plan.max_output_magnitude // amp
+
+
+def quantize_acts(x: jax.Array, plan: EntanglePlan, depth: int, *,
+                  budget: int = None) -> tuple[jax.Array, jax.Array]:
     """Quantize float activations ``x`` onto the eq. (13)-budgeted integer
-    grid for a ``depth``-deep contraction. Returns (int32 values, scale)."""
-    budget = activation_budget(plan, depth)
+    grid for a ``depth``-deep contraction. Returns (int32 values, scale).
+    ``budget`` overrides the single-GEMM budget (the chain executor passes
+    :func:`chain_budget`'s tighter grid)."""
+    if budget is None:
+        budget = activation_budget(plan, depth)
     amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
     a_scale = budget / amax
     return jnp.round(x * a_scale).astype(jnp.int32), a_scale

@@ -74,6 +74,11 @@ class ProtectionPlan:
     plan: EntanglePlan
     blocks: object  # None | dict | "auto" — passed through to kernels.ops
     grouped: bool = False
+    # the site's startup-quantized q8 copy is int8-packed 4-per-word along
+    # K (kernels unpack on load); drives the autotune warm keys and the
+    # prepare_params packing policy — the executor itself re-derives
+    # packedness from the weight's contraction-axis length
+    packed: bool = False
 
 
 # pre-v2 name: registry entries used to be mutable-registry-only objects
@@ -83,10 +88,17 @@ PlanEntry = ProtectionPlan
 class PlanRegistry:
     """(site, shape, M, backend) -> :class:`ProtectionPlan` map."""
 
-    def __init__(self, plan: EntanglePlan, *, blocks: object = None):
+    def __init__(self, plan: EntanglePlan, *, blocks: object = None,
+                 packed: bool = False):
         self.plan = plan
         self.blocks_policy = blocks
+        self.packed = packed
         self._entries: dict[tuple, ProtectionPlan] = {}
+        # chainable site groups noted by the census-only traces: tuples of
+        # sites that consume the SAME activations and are strictly linear,
+        # so one entangle/quantize pass feeds all of them and the chain
+        # executor keeps them in the entangled domain
+        self._chains: set[tuple] = set()
 
     @staticmethod
     def key(site: str, shape: tuple, M: int, backend: str) -> tuple:
@@ -113,9 +125,21 @@ class PlanRegistry:
                 blocks = default_blocks(*shape[-3:])
             e = ProtectionPlan(site=site, shape=shape, backend=backend,
                                plan=self.plan, blocks=blocks,
-                               grouped=groups is not None)
+                               grouped=groups is not None,
+                               packed=self.packed)
             self._entries[k] = e
         return e
+
+    def note_chain(self, sites: tuple) -> None:
+        """Record one chainable site group (census-only traces call this
+        when a fanout/chain executor covers ``sites`` with one codec
+        pass)."""
+        if len(sites) >= 2:
+            self._chains.add(tuple(sites))
+
+    def chains(self) -> frozenset:
+        """Chainable site groups noted during the census traces."""
+        return frozenset(self._chains)
 
     def entries(self) -> list[ProtectionPlan]:
         return list(self._entries.values())

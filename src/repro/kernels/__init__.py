@@ -63,8 +63,22 @@ How to protect a new GEMM (the repro.ft subsystem, v2 plan-compile flow):
   2. register the site's weight for the startup quantization hoist: add
      its param-dict key to ``repro.ft.plans.PROTECTED_WEIGHT_KEYS`` (if
      the key is new) so ``prepare_params`` installs the pre-quantized
-     ``q8`` copy at engine startup; at the call site prefer the ``q8``
-     entry when present (see ``layers.dense`` — one line).
+     ``q8`` copy at engine startup — PACKED 4 int8 lanes per int32 word
+     along the contraction axis by default (``packed=True``; the kernels
+     unpack on load and executors infer packedness from the axis length,
+     so the call site never mentions it); at the call site prefer the
+     ``q8`` entry when present (see ``layers.dense`` — one line).
+  2b. if the new site shares its input activations with existing sites
+     (a FANOUT group like attention Q/K/V or MLP gate/up), route the
+     group through ONE ``dense_fanout(ps, x, ft=ft, sites=(...))`` call
+     instead of per-site ``dense`` calls: the group then shares a single
+     quantize + group-permute codec pass (the dominant non-GEMM cost)
+     and the census marks it chainable on the compiled plans
+     (``engine.plans.chains``). For strictly CONSECUTIVE linear GEMMs,
+     ``repro.ft.protected.entangled_chain`` runs the whole chain in the
+     entangled domain — one entangle, N GEMMs, one extract — whenever
+     ``repro.ft.quantize.chain_budget`` grants headroom (it falls back
+     to per-hop extraction when not).
   3. thread the ``ft`` kwarg from the block's ``apply`` down to the call
      if the site lives in a block that did not previously take it
      (``transformer.apply_stack`` already passes ``ft`` to every block).

@@ -160,17 +160,28 @@ class AutotuneCache:
         return out
 
     @staticmethod
-    def _known_namespace(key: str) -> bool:
-        """True when the key's backend field names a registered backend.
+    def _known_namespace(key: str, *, ops_too: bool = False) -> bool:
+        """True when the key names a backend registered in this process —
+        and, with ``ops_too`` (the SHIPPED pretuned files), an op this
+        build tunes.
 
         Keys from a pre-v2 cache (backend tag ``interpret``/``cpu``) or
-        from a port that is not registered in THIS process can never
-        match a lookup here — loading them would only inflate stats and
-        mask the fact that those shapes will re-sweep."""
+        from a port that is not registered in THIS process can never match
+        a lookup here — loading them would only inflate stats and mask the
+        fact that those shapes will re-sweep. USER caches keep free-form
+        op fields (library callers may tune private ops through this
+        cache); the op check applies only to the files we ship, where an
+        unknown op means a stale generation left behind by a rename."""
         from repro.kernels import ops  # deferred: ops imports this module
 
         parts = key.split("|")
-        return len(parts) >= 3 and parts[2] in ops.backend_names()
+        if len(parts) < 3 or parts[2] not in ops.backend_names():
+            return False
+        if not ops_too:
+            return True
+        known_ops = set(ops.REQUIRED_OPS) | {
+            "entangle", "disentangle", "checksum", "conv1d"}
+        return parts[0] in known_ops
 
     def _load_file(self) -> None:
         if self._loaded:
@@ -192,9 +203,9 @@ class AutotuneCache:
             if stale:
                 warnings.warn(
                     f"autotune cache {self.path}: ignored {stale} entries "
-                    f"from backend namespaces not registered in this "
-                    f"process (pre-v2 cache or unloaded port); those "
-                    f"shapes will re-tune", RuntimeWarning)
+                    f"from op/backend namespaces not registered in this "
+                    f"process (pre-v2 cache, stale generation or unloaded "
+                    f"port); those shapes will re-tune", RuntimeWarning)
         # shipped seed caches: consulted AFTER in-process and file winners
         # (kept in their own dict so `put` never re-persists them)
         if PRETUNED_DIR.is_dir():
@@ -203,9 +214,19 @@ class AutotuneCache:
                     text = f.read_text()
                 except OSError:
                     continue
+                stale = 0
                 for k, v in self._parse_cache_json(
                         text, f"pretuned/{f.name}").items():
-                    self._shipped.setdefault(k, v)
+                    if self._known_namespace(k, ops_too=True):
+                        self._shipped.setdefault(k, v)
+                    else:
+                        stale += 1
+                if stale:
+                    warnings.warn(
+                        f"autotune pretuned/{f.name}: dropped {stale} stale "
+                        f"entries (op or backend namespace unknown to this "
+                        f"build); covered shapes still cold-hit",
+                        RuntimeWarning)
 
     def get(self, key: str) -> Optional[dict[str, int]]:
         self._load_file()

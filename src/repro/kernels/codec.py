@@ -31,6 +31,64 @@ def entangle_block(c: jax.Array, l: int) -> jax.Array:
     return jnp.left_shift(jnp.roll(c, 1, axis=0), l) + c
 
 
+# ---------------------------------------------------------------------------
+# int8 lane packing — 4 int8 values per int32 word
+#
+# The startup-quantized q8 weight copies are int8-valued but ride the
+# kernels' int32 container, costing 4x their true bytes in HBM plus a
+# 4x-wide sweep per protected GEMM. Packing stores 4 consecutive values
+# along the contraction axis in one int32 word (lane j in bits
+# [8j, 8j+8)); the fused kernels unpack on load in VMEM registers with
+# two shifts per lane — arithmetic right-shift sign-extends, so the
+# roundtrip is bit-exact over the full int8 range.
+# ---------------------------------------------------------------------------
+
+PACK_LANES = 4  # int8 lanes per int32 word
+
+
+def pack_int8(x: jax.Array, axis: int = -2) -> jax.Array:
+    """Pack int8-valued int32 ``x`` 4-to-1 along ``axis``.
+
+    ``axis`` is zero-padded to a multiple of :data:`PACK_LANES` (zero packs
+    and unpacks exactly, so padding never perturbs a GEMM). Values must be
+    in [-128, 127]; out-of-range values are truncated mod 256.
+    """
+    axis = axis % x.ndim
+    n = x.shape[axis]
+    pad = (-n) % PACK_LANES
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    lanes = jnp.moveaxis(x, axis, -1).reshape(
+        *[s for a, s in enumerate(x.shape) if a != axis],
+        (n + pad) // PACK_LANES, PACK_LANES)
+    word = jnp.zeros(lanes.shape[:-1], jnp.int32)
+    for j in range(PACK_LANES):
+        word = word + jnp.left_shift(
+            jnp.bitwise_and(lanes[..., j].astype(jnp.int32), 0xFF), 8 * j)
+    return jnp.moveaxis(word, -1, axis)
+
+
+def unpack_int8(p: jax.Array, axis: int = -2, n: Optional[int] = None
+                ) -> jax.Array:
+    """Inverse of :func:`pack_int8`: expand ``axis`` 1-to-4, sign-extended.
+
+    ``n`` truncates the unpacked axis back to its original length (the
+    pack may have zero-padded it to a multiple of :data:`PACK_LANES`).
+    """
+    axis = axis % p.ndim
+    lanes = [jnp.right_shift(jnp.left_shift(p, 24 - 8 * j), 24)
+             for j in range(PACK_LANES)]
+    out = jnp.stack(lanes, axis=axis + 1)
+    shape = list(p.shape)
+    shape[axis] = p.shape[axis] * PACK_LANES
+    out = out.reshape(shape)
+    if n is not None and n != out.shape[axis]:
+        out = jax.lax.slice_in_dim(out, 0, n, axis=axis)
+    return out
+
+
 def disentangle_rows(
     delta_rows: Sequence[jax.Array],
     plan: EntanglePlan,

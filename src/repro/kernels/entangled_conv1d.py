@@ -31,12 +31,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.plan import EntanglePlan
-from repro.kernels.codec import disentangle_block, entangle_block
+from repro.kernels.codec import (PACK_LANES, disentangle_block,
+                                 entangle_block, unpack_int8)
 
 
 def _econv_kernel(
     x_cur_ref, x_prev_ref, w_ref, out_ref, *,
-    plan: EntanglePlan, kf: int, fuse_epilogue: bool, r: int,
+    plan: EntanglePlan, kf: int, fuse_epilogue: bool, r: int, packed: bool,
 ):
     t = pl.program_id(2)
     M, l = plan.M, plan.l
@@ -49,6 +50,8 @@ def _econv_kernel(
     bt = out_ref.shape[-1]
     acc = jnp.zeros(out_ref.shape[:1] + out_ref.shape[2:], jnp.int32)
     w = w_ref[...]
+    if packed:  # [bd/4, kf] words -> [bd, kf] sign-extended lanes
+        w = unpack_int8(w, axis=0)
     for j in range(kf):  # static unroll over taps
         acc += w[None, :, j : j + 1] * window[:, :, j : j + bt]
 
@@ -60,7 +63,7 @@ def _econv_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "fuse_epilogue", "failed", "bd", "bt",
-                     "interpret"),
+                     "packed", "interpret"),
 )
 def entangled_conv1d_pallas(
     x: jax.Array,
@@ -71,6 +74,7 @@ def entangled_conv1d_pallas(
     failed: int = 0,
     bd: int = 128,
     bt: int = 512,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Entangled depthwise causal conv: x [M, B, D, T] int32, w [D, K_f].
@@ -79,17 +83,21 @@ def entangled_conv1d_pallas(
     ``fuse_epilogue=False``, or the recovered true outputs
     d[m, b, d, t] = sum_j w[d, j] * x[m, b, d, t-K_f+1+j] when
     ``fuse_epilogue=True`` (extraction never reads stream ``failed``).
+    With ``packed=True``, ``w`` is [D/4, K_f] packed int8 lanes (4 per
+    int32 word along D), sign-extend-unpacked in registers per tile.
     D % bd == 0, T % bt == 0, 2 <= K_f <= bt (ops.py pads/unpads).
     """
     M, B, D, T = x.shape
-    D2, kf = w.shape
-    assert D == D2 and 2 <= kf <= bt, (D, D2, kf, bt)
+    Dg, kf = w.shape
+    assert D == (Dg * PACK_LANES if packed else Dg), (D, Dg, packed)
+    assert 2 <= kf <= bt, (kf, bt)
     assert M == plan.M, (M, plan.M)
     grid = (B, D // bd, T // bt)
+    bdg = bd // PACK_LANES if packed else bd
     return pl.pallas_call(
         functools.partial(
             _econv_kernel, plan=plan, kf=kf,
-            fuse_epilogue=fuse_epilogue, r=failed % M,
+            fuse_epilogue=fuse_epilogue, r=failed % M, packed=packed,
         ),
         grid=grid,
         in_specs=[
@@ -99,7 +107,7 @@ def entangled_conv1d_pallas(
                 (M, 1, bd, bt),
                 lambda b, d, t: (0, b, d, jnp.maximum(t - 1, 0)),
             ),
-            pl.BlockSpec((bd, kf), lambda b, d, t: (d, 0)),
+            pl.BlockSpec((bdg, kf), lambda b, d, t: (d, 0)),
         ],
         out_specs=pl.BlockSpec((M, 1, bd, bt), lambda b, d, t: (0, b, d, t)),
         out_shape=jax.ShapeDtypeStruct((M, B, D, T), jnp.int32),

@@ -21,10 +21,29 @@ DMAs of identical bytes): with all M streams in one block the predecessor
 row is a register roll, the operand is bound once, and the epilogue has
 every stream's accumulator in VMEM to disentangle against.
 
-``fuse_epilogue=False`` writes the raw entangled accumulators (the serving
-engine uses this when it must inject / inspect entangled outputs);
-``failed=r`` statically excludes stream r's accumulator from extraction —
-the fail-stop recovery path costs the same shifts/adds as the clean path.
+``fuse_epilogue`` is a four-state switch selecting which codec halves run:
+
+  ==============  =================  ===================
+  fuse_epilogue   entangle prologue  extract at flush
+  ==============  =================  ===================
+  ``True``        yes                yes  (standalone fused GEMM)
+  ``False``       yes                no   (raw entangled accumulators out)
+  ``'chain'``     no                 no   (input ALREADY entangled)
+  ``'chain_final'`` no               yes  (chain tail: extract only)
+  ==============  =================  ===================
+
+The chain modes exploit linearity of the codec over streams:
+``(E c) @ g = E (c @ g)``, so feeding one call's entangled accumulators
+straight into the next call's plain per-stream GEMM (no re-entangle, no
+extract between) keeps the whole chain in the entangled domain — one
+entangle, N GEMMs, one extract, and a fail-stopped stream's garbage stays
+confined to its own stream until the final extraction statically skips it
+(``failed=r``, same shifts/adds as the clean path).
+
+``packed=True`` reads ``g`` with 4 int8 lanes per int32 word (packed along
+K by :func:`repro.kernels.codec.pack_int8`): the weight block shrinks to
+(bk/4, bn) in HBM/VMEM and is sign-extend-unpacked in registers before the
+MXU dot — the q8 copies cost their true bytes end to end.
 """
 from __future__ import annotations
 
@@ -36,12 +55,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.plan import EntanglePlan
-from repro.kernels.codec import disentangle_block, entangle_block
+from repro.kernels.codec import (PACK_LANES, disentangle_block,
+                                 entangle_block, unpack_int8)
+
+# fuse_epilogue values whose prologue entangles / whose flush extracts
+ENTANGLE_MODES = (False, True)
+EXTRACT_MODES = (True, "chain_final")
+CHAIN_MODES = ("chain", "chain_final")
 
 
 def _emm_kernel(
     c_ref, g_ref, out_ref, acc_ref, *,
-    plan: EntanglePlan, nk: int, fuse_epilogue: bool, r: int,
+    plan: EntanglePlan, nk: int, fuse_epilogue, r: int, packed: bool,
 ):
     k = pl.program_id(2)
 
@@ -49,8 +74,11 @@ def _emm_kernel(
     def _zero():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    eps = entangle_block(c_ref[...], plan.l)  # [M, bb, bk], registers
+    c = c_ref[...]  # [M, bb, bk]
+    eps = entangle_block(c, plan.l) if fuse_epilogue in ENTANGLE_MODES else c
     g = g_ref[...]
+    if packed:  # [bk/4, bn] words -> [bk, bn] sign-extended lanes
+        g = unpack_int8(g, axis=0)
     acc_ref[...] += jnp.stack(  # static unroll over streams; M is 3..8
         [jnp.dot(eps[m], g, preferred_element_type=jnp.int32)
          for m in range(plan.M)],
@@ -60,7 +88,7 @@ def _emm_kernel(
     @pl.when(k == nk - 1)
     def _flush():
         acc = acc_ref[...]
-        if fuse_epilogue:
+        if fuse_epilogue in EXTRACT_MODES:
             out_ref[...] = disentangle_block(acc, plan, r)
         else:
             out_ref[...] = acc
@@ -69,18 +97,19 @@ def _emm_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "fuse_epilogue", "failed", "bb", "bn", "bk",
-                     "interpret"),
+                     "packed", "interpret"),
 )
 def entangled_matmul_pallas(
     c: jax.Array,
     g: jax.Array,
     *,
     plan: EntanglePlan,
-    fuse_epilogue: bool = False,
+    fuse_epilogue=False,
     failed: int = 0,
     bb: int = 128,
     bn: int = 128,
     bk: int = 128,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused entangle[-GEMM-extract] for c:[M, B, K] int32, g:[K, N] int32.
@@ -88,22 +117,26 @@ def entangled_matmul_pallas(
     Returns entangled products delta[m] = (E c)[m] @ g when
     ``fuse_epilogue=False``, or the recovered true products d[m] = c[m] @ g
     when ``fuse_epilogue=True`` (extraction never reads stream ``failed``).
-    B, K, N must be multiples of bb, bk, bn (ops.py pads/unpads).
+    ``'chain'`` / ``'chain_final'`` skip the entangle prologue (c must
+    already be entangled) and keep / extract the entangled accumulators —
+    see module docstring. With ``packed=True``, ``g`` is [K/4, N] packed
+    int8 lanes. B, K, N must be multiples of bb, bk, bn (ops.py pads).
     """
     M, B, K = c.shape
-    K2, N = g.shape
-    assert K == K2, (K, K2)
+    Kg, N = g.shape
+    assert K == (Kg * PACK_LANES if packed else Kg), (K, Kg, packed)
     assert M == plan.M, (M, plan.M)
     grid = (B // bb, N // bn, K // bk)
+    bkg = bk // PACK_LANES if packed else bk
     return pl.pallas_call(
         functools.partial(
             _emm_kernel, plan=plan, nk=grid[2],
-            fuse_epilogue=fuse_epilogue, r=failed % M,
+            fuse_epilogue=fuse_epilogue, r=failed % M, packed=packed,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((M, bb, bk), lambda b, n, k: (0, b, k)),
-            pl.BlockSpec((bk, bn), lambda b, n, k: (k, n)),
+            pl.BlockSpec((bkg, bn), lambda b, n, k: (k, n)),
         ],
         out_specs=pl.BlockSpec((M, bb, bn), lambda b, n, k: (0, b, n)),
         out_shape=jax.ShapeDtypeStruct((M, B, N), jnp.int32),

@@ -36,12 +36,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.plan import EntanglePlan
-from repro.kernels.codec import disentangle_block, entangle_block
+from repro.kernels.codec import (PACK_LANES, disentangle_block,
+                                 entangle_block, unpack_int8)
 
 
 def _emmg_kernel(
     c_ref, g_ref, out_ref, acc_ref, *,
-    plan: EntanglePlan, nk: int, fuse_epilogue: bool, r: int,
+    plan: EntanglePlan, nk: int, fuse_epilogue: bool, r: int, packed: bool,
 ):
     k = pl.program_id(3)
 
@@ -51,6 +52,8 @@ def _emmg_kernel(
 
     eps = entangle_block(c_ref[:, 0], plan.l)  # [M, bb, bk], registers
     g = g_ref[0]  # [bk, bn] — this program's expert slice
+    if packed:  # [bk/4, bn] words -> [bk, bn] sign-extended lanes
+        g = unpack_int8(g, axis=0)
     acc_ref[...] += jnp.stack(  # static unroll over streams; M is 3..8
         [jnp.dot(eps[m], g, preferred_element_type=jnp.int32)
          for m in range(plan.M)],
@@ -69,7 +72,7 @@ def _emmg_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("plan", "fuse_epilogue", "failed", "bb", "bn", "bk",
-                     "interpret"),
+                     "packed", "interpret"),
 )
 def entangled_matmul_grouped_pallas(
     c: jax.Array,
@@ -81,29 +84,35 @@ def entangled_matmul_grouped_pallas(
     bb: int = 128,
     bn: int = 128,
     bk: int = 128,
+    packed: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
     """Fused grouped entangle[-GEMM-extract]: c [M, E, Cg, K], g [E, K, N].
 
     Returns entangled per-expert products when ``fuse_epilogue=False`` or
     the recovered true products when ``True`` (extraction never reads
-    stream ``failed``). Cg, K, N must be multiples of bb, bk, bn (ops.py
-    pads/unpads); the expert axis E is never padded — the grid walks it.
+    stream ``failed``). With ``packed=True``, ``g`` is [E, K/4, N] packed
+    int8 lanes (4 per int32 word along K), sign-extend-unpacked in VMEM
+    registers before the MXU dot. Cg, K, N must be multiples of bb, bk, bn
+    (ops.py pads/unpads); the expert axis E is never padded — the grid
+    walks it.
     """
     M, E, Cg, K = c.shape
-    E2, K2, N = g.shape
-    assert (E, K) == (E2, K2), ((E, K), (E2, K2))
+    E2, Kg, N = g.shape
+    assert E == E2, (E, E2)
+    assert K == (Kg * PACK_LANES if packed else Kg), (K, Kg, packed)
     assert M == plan.M, (M, plan.M)
     grid = (E, Cg // bb, N // bn, K // bk)
+    bkg = bk // PACK_LANES if packed else bk
     return pl.pallas_call(
         functools.partial(
             _emmg_kernel, plan=plan, nk=grid[3],
-            fuse_epilogue=fuse_epilogue, r=failed % M,
+            fuse_epilogue=fuse_epilogue, r=failed % M, packed=packed,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((M, 1, bb, bk), lambda e, b, n, k: (0, e, b, k)),
-            pl.BlockSpec((1, bk, bn), lambda e, b, n, k: (e, k, n)),
+            pl.BlockSpec((1, bkg, bn), lambda e, b, n, k: (e, k, n)),
         ],
         out_specs=pl.BlockSpec((M, 1, bb, bn), lambda e, b, n, k: (0, e, b, n)),
         out_shape=jax.ShapeDtypeStruct((M, E, Cg, N), jnp.int32),

@@ -46,8 +46,8 @@ registrations at the bottom of this module)::
     ops.register_backend("triton_cuda", {
         "entangled_matmul": my_triton_emm,          # (c, g, *, plan,
         "entangled_conv1d": my_triton_conv,         #  fuse_epilogue,
-        "entangled_matmul_grouped": my_triton_emmg, #  failed, blocks)
-    }, interpret=False)
+        "entangled_matmul_grouped": my_triton_emmg, #  failed, blocks,
+    }, interpret=False)                             #  packed)
 
 Each callable receives block-multiple-padded int32 operands and the
 resolved ``blocks`` dict and must reproduce the reference oracle
@@ -72,7 +72,9 @@ import jax.numpy as jnp
 
 from repro.core.plan import EntanglePlan
 from repro.kernels import autotune as at
+from repro.kernels import codec
 from repro.kernels import ref
+from repro.kernels.codec import PACK_LANES
 from repro.kernels.checksum import checksum_pallas
 from repro.kernels.conv1d import conv1d_causal_pallas
 from repro.kernels.disentangle import disentangle_pallas
@@ -273,10 +275,23 @@ def checksum(c: jax.Array, *, block_n: int = 1024, blocks: Blocks = None,
 
 # ------------------------------------------------------------- LSB ops ------
 
+# valid fuse_epilogue values for the dense GEMM; grouped/conv accept only
+# the first two (chaining is a dense-site feature — see ft/protected.py)
+_FUSE_MODES = (False, True, "chain", "chain_final")
+
+
+def _check_fuse(fuse_epilogue, *, chain_ok: bool) -> None:
+    valid = _FUSE_MODES if chain_ok else _FUSE_MODES[:2]
+    if fuse_epilogue not in valid:
+        raise ValueError(
+            f"fuse_epilogue must be one of {valid}, got {fuse_epilogue!r}")
+
+
 def entangled_matmul(c: jax.Array, g: jax.Array, plan: EntanglePlan, *,
-                     fuse_epilogue: bool = False,
+                     fuse_epilogue=False,
                      failed: Optional[int] = None,
                      bb: int = 128, bn: int = 128, bk: int = 128,
+                     packed: bool = False,
                      blocks: Blocks = None, interpret=None,
                      backend: Optional[str] = None) -> jax.Array:
     """Fused entangle+GEMM[+extract]: c [M, B, K], g [K, N] int.
@@ -284,8 +299,17 @@ def entangled_matmul(c: jax.Array, g: jax.Array, plan: EntanglePlan, *,
     ``fuse_epilogue=False`` -> entangled products [M, B, N] (recover later
     via :func:`disentangle`). ``fuse_epilogue=True`` -> true products, the
     codec never leaving the kernel; ``failed`` statically excludes one
-    stream's accumulator from the in-kernel extraction.
+    stream's accumulator from the in-kernel extraction. The chain modes
+    ``'chain'`` / ``'chain_final'`` skip the entangle prologue — ``c`` must
+    already be entangled (e.g. a previous call's ``fuse_epilogue=False``
+    output) — and return entangled / extracted products respectively, so
+    consecutive linear GEMMs compose without leaving the entangled domain.
+    ``packed=True`` declares ``g`` as [ceil(K/4), N] int8 lanes packed 4
+    per int32 word along K (:func:`repro.kernels.codec.pack_int8`); the
+    kernels sign-extend-unpack in registers, so the weight sweep costs its
+    true int8 bytes.
     """
+    _check_fuse(fuse_epilogue, chain_ok=True)
     M, B, K = c.shape
     N = g.shape[1]
     c32 = c.astype(jnp.int32)
@@ -297,15 +321,16 @@ def entangled_matmul(c: jax.Array, g: jax.Array, plan: EntanglePlan, *,
     def call(bl, cc, gg):
         cp, _ = _pad_to(cc, 1, bl["bb"])
         cp, _ = _pad_to(cp, 2, bl["bk"])
-        gp, _ = _pad_to(gg, 0, bl["bk"])
+        # packed weights pad along K in words (bk/4 words == bk lanes)
+        gp, _ = _pad_to(gg, 0, bl["bk"] // PACK_LANES if packed else bl["bk"])
         gp, _ = _pad_to(gp, 1, bl["bn"])
         return impl(cp, gp, plan=plan, fuse_epilogue=fuse_epilogue,
-                    failed=r, blocks=bl)
+                    failed=r, blocks=bl, packed=packed)
 
     bl = _resolve_blocks(
         "entangled_matmul", {"bb": bb, "bn": bn, "bk": bk}, blocks,
         (M, B, K, N), bname, lambda b: (lambda: call(b, c32, g32)),
-        flags=_matmul_flags(plan, fuse_epilogue))
+        flags=_matmul_flags(plan, fuse_epilogue, packed))
     out = call(bl, c32, g32)
     return out[:, :B, :N]
 
@@ -314,6 +339,7 @@ def entangled_matmul_grouped(c: jax.Array, g: jax.Array, plan: EntanglePlan,
                              *, fuse_epilogue: bool = False,
                              failed: Optional[int] = None,
                              bb: int = 128, bn: int = 128, bk: int = 128,
+                             packed: bool = False,
                              blocks: Blocks = None, interpret=None,
                              backend: Optional[str] = None) -> jax.Array:
     """Grouped fused entangle+GEMM[+extract] — the MoE per-expert form:
@@ -325,7 +351,10 @@ def entangled_matmul_grouped(c: jax.Array, g: jax.Array, plan: EntanglePlan,
     all E). Ragged per-expert row counts must be padded to the uniform
     ``Cg`` by the caller with zero rows (exact — this is the same
     capacity-padding a bounded MoE dispatcher already performs).
+    ``packed=True`` declares ``g`` as [E, ceil(K/4), N] int8 lanes packed
+    along K. Chain modes are dense-only (raises here).
     """
+    _check_fuse(fuse_epilogue, chain_ok=False)
     M, E, Cg, K = c.shape
     N = g.shape[2]
     c32 = c.astype(jnp.int32)
@@ -337,27 +366,41 @@ def entangled_matmul_grouped(c: jax.Array, g: jax.Array, plan: EntanglePlan,
     def call(bl, cc, gg):
         cp, _ = _pad_to(cc, 2, bl["bb"])
         cp, _ = _pad_to(cp, 3, bl["bk"])
-        gp, _ = _pad_to(gg, 1, bl["bk"])
+        gp, _ = _pad_to(gg, 1, bl["bk"] // PACK_LANES if packed else bl["bk"])
         gp, _ = _pad_to(gp, 2, bl["bn"])
         return impl(cp, gp, plan=plan, fuse_epilogue=fuse_epilogue,
-                    failed=r, blocks=bl)
+                    failed=r, blocks=bl, packed=packed)
 
     bl = _resolve_blocks(
         "entangled_matmul_grouped", {"bb": bb, "bn": bn, "bk": bk}, blocks,
         (M, E, Cg, K, N), bname, lambda b: (lambda: call(b, c32, g32)),
-        flags=_matmul_flags(plan, fuse_epilogue))
+        flags=_matmul_flags(plan, fuse_epilogue, packed))
     out = call(bl, c32, g32)
     return out[:, :, :Cg, :N]
 
 
-def _matmul_flags(plan: EntanglePlan, fuse_epilogue: bool) -> tuple:
+def _matmul_flags(plan: EntanglePlan, fuse_epilogue,
+                  packed: bool = False) -> tuple:
     """Autotune flags for the fused GEMMs — single source of truth for the
-    wrapper's tune call and the startup warm's cache lookup."""
-    return _plan_flags(plan) + (("fused",) if fuse_epilogue else ())
+    wrapper's tune call and the startup warm's cache lookup. Every
+    fuse/packed variant gets its own namespace: the epilogue and the
+    unpack prologue both change the kernel's cost profile, so winners must
+    never be shared across them."""
+    flags = _plan_flags(plan)
+    if fuse_epilogue is True:
+        flags += ("fused",)
+    elif fuse_epilogue == "chain":
+        flags += ("chain",)
+    elif fuse_epilogue == "chain_final":
+        flags += ("chainf",)
+    if packed:
+        flags += ("packed",)
+    return flags
 
 
 def warm_entangled_matmul(M: int, B: int, K: int, N: int, plan: EntanglePlan,
-                          *, fuse_epilogue: bool = True, interpret=None,
+                          *, fuse_epilogue=True, packed: bool = False,
+                          interpret=None,
                           backend: Optional[str] = None) -> dict:
     """Eagerly autotune the fused GEMM for one (M, B, K, N) serving shape.
 
@@ -369,29 +412,32 @@ def warm_entangled_matmul(M: int, B: int, K: int, N: int, plan: EntanglePlan,
     and every fail-stop-injected variant. Returns the winning block sizes.
     """
     c = jnp.zeros((M, B, K), jnp.int32)
-    g = jnp.zeros((K, N), jnp.int32)
-    entangled_matmul(c, g, plan, fuse_epilogue=fuse_epilogue, blocks="auto",
-                     interpret=interpret, backend=backend)
+    Kg = -(-K // PACK_LANES) if packed else K
+    g = jnp.zeros((Kg, N), jnp.int32)
+    entangled_matmul(c, g, plan, fuse_epilogue=fuse_epilogue, packed=packed,
+                     blocks="auto", interpret=interpret, backend=backend)
     key = at.cache_key("entangled_matmul", (M, B, K, N),
                        resolve_backend(backend, interpret),
-                       _matmul_flags(plan, fuse_epilogue))
+                       _matmul_flags(plan, fuse_epilogue, packed))
     return at.get_cache().get(key) or {}
 
 
 def warm_entangled_matmul_grouped(M: int, E: int, Cg: int, K: int, N: int,
                                   plan: EntanglePlan, *,
-                                  fuse_epilogue: bool = True, interpret=None,
+                                  fuse_epilogue: bool = True,
+                                  packed: bool = False, interpret=None,
                                   backend: Optional[str] = None) -> dict:
     """Grouped twin of :func:`warm_entangled_matmul` for the MoE
     per-expert shapes of the engine census."""
     c = jnp.zeros((M, E, Cg, K), jnp.int32)
-    g = jnp.zeros((E, K, N), jnp.int32)
+    Kg = -(-K // PACK_LANES) if packed else K
+    g = jnp.zeros((E, Kg, N), jnp.int32)
     entangled_matmul_grouped(c, g, plan, fuse_epilogue=fuse_epilogue,
-                             blocks="auto", interpret=interpret,
-                             backend=backend)
+                             packed=packed, blocks="auto",
+                             interpret=interpret, backend=backend)
     key = at.cache_key("entangled_matmul_grouped", (M, E, Cg, K, N),
                        resolve_backend(backend, interpret),
-                       _matmul_flags(plan, fuse_epilogue))
+                       _matmul_flags(plan, fuse_epilogue, packed))
     return at.get_cache().get(key) or {}
 
 
@@ -399,17 +445,21 @@ def entangled_conv1d(x: jax.Array, w: jax.Array, plan: EntanglePlan, *,
                      fuse_epilogue: bool = False,
                      failed: Optional[int] = None,
                      bd: int = 128, bt: int = 512,
+                     packed: bool = False,
                      blocks: Blocks = None, interpret=None,
                      backend: Optional[str] = None) -> jax.Array:
     """Fused entangle+depthwise-causal-conv[+extract]: x [M, B, D, T],
-    w [D, K_f] int. Same fusion semantics as :func:`entangled_matmul`."""
+    w [D, K_f] int. Same fusion semantics as :func:`entangled_matmul`;
+    ``packed=True`` declares ``w`` as [ceil(D/4), K_f] int8 lanes packed
+    along the depth axis. Chain modes are dense-only (raises here)."""
+    _check_fuse(fuse_epilogue, chain_ok=False)
     M, B, D, T = x.shape
     kf = w.shape[1]
     x32 = x.astype(jnp.int32)
     w32 = w.astype(jnp.int32)
     if kf == 1:  # kernel needs a halo; a zero leading tap is exact
-        w32 = jnp.pad(w32, ((0, 0), (1, 0)))
-        kf = 2
+        w32 = jnp.pad(w32, ((0, 0), (1, 0)))  # (zero packed word == 4
+        kf = 2                                #  zero lanes, still exact)
     bname = resolve_backend(backend, interpret)
     impl = get_backend(bname).impls["entangled_conv1d"]
     r = 0 if failed is None else failed
@@ -417,14 +467,15 @@ def entangled_conv1d(x: jax.Array, w: jax.Array, plan: EntanglePlan, *,
     def call(bl, xx, ww):
         xp, _ = _pad_to(xx, 2, bl["bd"])
         xp, _ = _pad_to(xp, 3, bl["bt"])
-        wp, _ = _pad_to(ww, 0, bl["bd"])
+        wp, _ = _pad_to(ww, 0, bl["bd"] // PACK_LANES if packed else bl["bd"])
         return impl(xp, wp, plan=plan, fuse_epilogue=fuse_epilogue,
-                    failed=r, blocks=bl)
+                    failed=r, blocks=bl, packed=packed)
 
     bl = _resolve_blocks(
         "entangled_conv1d", {"bd": bd, "bt": bt}, blocks,
         (M, B, D, T, kf), bname, lambda b: (lambda: call(b, x32, w32)),
-        flags=_plan_flags(plan) + (("fused",) if fuse_epilogue else ()))
+        flags=_plan_flags(plan) + (("fused",) if fuse_epilogue else ())
+        + (("packed",) if packed else ()))
     out = call(bl, x32, w32)
     return out[:, :, :D, :T]
 
@@ -460,37 +511,55 @@ def conv1d_causal(x: jax.Array, w: jax.Array, *, bd: int = 128, bt: int = 512,
 def _pallas_impls(interpret: bool) -> dict:
     return {
         "entangled_matmul": lambda c, g, *, plan, fuse_epilogue, failed,
-        blocks: entangled_matmul_pallas(
+        blocks, packed=False: entangled_matmul_pallas(
             c, g, plan=plan, fuse_epilogue=fuse_epilogue, failed=failed,
             bb=blocks["bb"], bn=blocks["bn"], bk=blocks["bk"],
-            interpret=interpret),
+            packed=packed, interpret=interpret),
         "entangled_matmul_grouped": lambda c, g, *, plan, fuse_epilogue,
-        failed, blocks: entangled_matmul_grouped_pallas(
+        failed, blocks, packed=False: entangled_matmul_grouped_pallas(
             c, g, plan=plan, fuse_epilogue=fuse_epilogue, failed=failed,
             bb=blocks["bb"], bn=blocks["bn"], bk=blocks["bk"],
-            interpret=interpret),
+            packed=packed, interpret=interpret),
         "entangled_conv1d": lambda x, w, *, plan, fuse_epilogue, failed,
-        blocks: entangled_conv1d_pallas(
+        blocks, packed=False: entangled_conv1d_pallas(
             x, w, plan=plan, fuse_epilogue=fuse_epilogue, failed=failed,
-            bd=blocks["bd"], bt=blocks["bt"], interpret=interpret),
+            bd=blocks["bd"], bt=blocks["bt"], packed=packed,
+            interpret=interpret),
     }
 
 
 def _ref_impls() -> dict:
     """The jnp oracles as a backend: semantics without any Pallas schedule
-    (XLA lowers them directly; ``blocks`` is accepted and ignored)."""
-    def emm(c, g, *, plan, fuse_epilogue, failed, blocks):
+    (XLA lowers them directly; ``blocks`` is accepted and ignored). Packed
+    weights are unpacked up front — the oracle defines semantics, not a
+    memory schedule — and the chain modes compose the oracle pieces: a
+    plain per-stream GEMM on the already-entangled input (linearity:
+    ``(E c) @ g = E (c @ g)``), extracting only in ``'chain_final'``."""
+    def emm(c, g, *, plan, fuse_epilogue, failed, blocks, packed=False):
+        if packed:
+            g = codec.unpack_int8(g, axis=0)
+        if fuse_epilogue in ("chain", "chain_final"):
+            out = jnp.stack([jnp.dot(c[m], g,
+                                     preferred_element_type=jnp.int32)
+                             for m in range(plan.M)], axis=0)
+            if fuse_epilogue == "chain_final":
+                out = codec.disentangle_block(out, plan, failed)
+            return out
         if fuse_epilogue:
             return ref.entangled_matmul_fused_ref(c, g, plan, r=failed)
         return ref.entangled_matmul_ref(c, g, plan.l)
 
-    def emmg(c, g, *, plan, fuse_epilogue, failed, blocks):
+    def emmg(c, g, *, plan, fuse_epilogue, failed, blocks, packed=False):
+        if packed:
+            g = codec.unpack_int8(g, axis=1)
         if fuse_epilogue:
             return ref.entangled_matmul_grouped_fused_ref(c, g, plan,
                                                           r=failed)
         return ref.entangled_matmul_grouped_ref(c, g, plan.l)
 
-    def econv(x, w, *, plan, fuse_epilogue, failed, blocks):
+    def econv(x, w, *, plan, fuse_epilogue, failed, blocks, packed=False):
+        if packed:
+            w = codec.unpack_int8(w, axis=0)
         if fuse_epilogue:
             return ref.entangled_conv1d_fused_ref(x, w, plan, r=failed)
         return ref.entangled_conv1d_ref(x, w, plan.l)

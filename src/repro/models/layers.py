@@ -84,6 +84,12 @@ def init_dense(key, d_in, d_out, bias=False):
     return p
 
 
+def _dense_w(p):
+    """The weight :func:`dense` would hand the protected path: the startup
+    pre-quantized (wq, scale) pair when installed, else the float master."""
+    return (p["q8"]["w"], p["q8"]["scale"]) if "q8" in p else p["w"]
+
+
 def dense(p, x, *, ft=None, site=None):
     """Dense projection — THE protected-GEMM chokepoint.
 
@@ -100,14 +106,39 @@ def dense(p, x, *, ft=None, site=None):
     source of truth for every unprotected caller.
     """
     if ft is not None and site is not None and ft.protects(site):
-        w = (p["q8"]["w"], p["q8"]["scale"]) if "q8" in p else p["w"]
-        y = ft.matmul(site, x, w).astype(ACT_DTYPE)
+        y = ft.matmul(site, x, _dense_w(p)).astype(ACT_DTYPE)
     else:
         y = jnp.einsum("...d,df->...f", x.astype(ACT_DTYPE),
                        p["w"].astype(ACT_DTYPE))
     if "b" in p:
         y = y + p["b"].astype(ACT_DTYPE)
     return y
+
+
+def dense_fanout(ps, x, *, ft, sites):
+    """Fanout form of :func:`dense`: every site in ``sites`` projects the
+    SAME activations ``x`` — attention Q/K/V, MLP gate/up, RG-LRU
+    in_gate/in_x, MLA's two ``h`` projections, the MoE shared expert.
+
+    When all sites are protected the group runs through
+    :meth:`repro.ft.FTContext.matmul_fanout`: one quantize + group-permute
+    codec pass feeds every member's fused entangled kernel call
+    (bit-identical to per-site :func:`dense` calls, tested), and the
+    engine's census-only traces mark the group as chainable at
+    plan-compile time. Any other case — no ``ft``, a site out of scope —
+    degrades to the per-site path. Returns one output per site, in order.
+    """
+    if ft is None or not all(ft.protects(s) for s in sites):
+        return [dense(p, x, ft=ft, site=s) for p, s in zip(ps, sites)]
+    ys = ft.matmul_fanout(tuple(sites), x,
+                          tuple(_dense_w(p) for p in ps))
+    outs = []
+    for p, y in zip(ps, ys):
+        y = y.astype(ACT_DTYPE)
+        if "b" in p:
+            y = y + p["b"].astype(ACT_DTYPE)
+        outs.append(y)
+    return outs
 
 
 # ---------------------------------------------------------- GQA attention ----
@@ -280,11 +311,15 @@ def apply_attention(
     off = _prefill_off(pos, mode)
     h = apply_norm(p["norm"], x, cfg)
 
-    q = dense(p["wq"], h, ft=ft, site="qkv.q").reshape(B, T, H, hd)
     win_kabs = None  # set on the bucketed/chunked rolling-window path
     if cross_kv is None:
-        k = dense(p["wk"], h, ft=ft, site="qkv.k").reshape(B, T, Hkv, hd)
-        v = dense(p["wv"], h, ft=ft, site="qkv.v").reshape(B, T, Hkv, hd)
+        # Q/K/V consume the same normed activations: one fanout group
+        # (a protected run shares a single quantize+group codec pass)
+        q, k, v = dense_fanout((p["wq"], p["wk"], p["wv"]), h, ft=ft,
+                               sites=("qkv.q", "qkv.k", "qkv.v"))
+        q = q.reshape(B, T, H, hd)
+        k = k.reshape(B, T, Hkv, hd)
+        v = v.reshape(B, T, Hkv, hd)
         if rope_theta:
             if mode == "decode":
                 positions = _decode_positions(pos, B, T)
@@ -356,6 +391,7 @@ def apply_attention(
         else:
             Tk = T
     else:
+        q = dense(p["wq"], h, ft=ft, site="qkv.q").reshape(B, T, H, hd)
         k, v = cross_kv
         Tk = k.shape[1]
         new_cache = cache
@@ -437,17 +473,19 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     off = _prefill_off(pos, mode)
     h = apply_norm(p["norm"], x, cfg)
 
+    # wq_a (or wq) and wkv_a both project the normed residual stream:
+    # one fanout group per step
     if m.q_lora_rank:
-        q = dense(p["wq_b"],
-                  apply_norm(p["q_norm"],
-                             dense(p["wq_a"], h, ft=ft, site="qkv.q_a"), cfg),
+        qa, kv = dense_fanout((p["wq_a"], p["wkv_a"]), h, ft=ft,
+                              sites=("qkv.q_a", "qkv.kv"))
+        q = dense(p["wq_b"], apply_norm(p["q_norm"], qa, cfg),
                   ft=ft, site="qkv.q")
     else:
-        q = dense(p["wq"], h, ft=ft, site="qkv.q")
+        q, kv = dense_fanout((p["wq"], p["wkv_a"]), h, ft=ft,
+                             sites=("qkv.q", "qkv.kv"))
     q = q.reshape(B, T, H, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-
-    kv = dense(p["wkv_a"], h, ft=ft, site="qkv.kv")  # [B, T, r + dr]
+    # kv: [B, T, r + dr]
     ckv = apply_norm(p["kv_norm"], kv[..., : m.kv_lora_rank], cfg)
     k_rope_new = kv[..., m.kv_lora_rank :]  # [B, T, dr] shared across heads
 
@@ -568,10 +606,13 @@ def _mlp_act(cfg: ModelConfig, a):
 
 def apply_mlp(p, x, *, cfg: ModelConfig, ft=None):
     h = apply_norm(p["norm"], x, cfg)
-    up = dense(p["up"], h, ft=ft, site="mlp.up")
     if "gate" in p:
-        a = _mlp_act(cfg, dense(p["gate"], h, ft=ft, site="mlp.gate")) * up
+        # gate/up share the normed input: one fanout group
+        gate, up = dense_fanout((p["gate"], p["up"]), h, ft=ft,
+                                sites=("mlp.gate", "mlp.up"))
+        a = _mlp_act(cfg, gate) * up
     else:
+        up = dense(p["up"], h, ft=ft, site="mlp.up")
         a = _mlp_act(cfg, up) if cfg.norm_kind != "layernorm" \
             else jax.nn.gelu(up)
     a = constrain(a, "batch", "seq", "mlp")
@@ -730,8 +771,9 @@ def apply_moe(p, x, *, cfg: ModelConfig, valid=None, ft=None):
 
     if mc.n_shared:
         sp = dict(p["shared"])
-        a = jax.nn.silu(dense(sp["gate"], hf, ft=ft, site="mlp.gate")) \
-            * dense(sp["up"], hf, ft=ft, site="mlp.up")
+        g_s, u_s = dense_fanout((sp["gate"], sp["up"]), hf, ft=ft,
+                                sites=("mlp.gate", "mlp.up"))
+        a = jax.nn.silu(g_s) * u_s
         out = out + dense(sp["down"], a, ft=ft, site="mlp.down")
     return constrain(out.reshape(B, T, D), "batch", "seq", "embed")
 
@@ -923,9 +965,11 @@ def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     w = rc.lru_width or cfg.d_model
     off = _prefill_off(pos, mode)
     h_in = apply_norm(p["norm"], x, cfg)
-    # in_x / in_gate are the RG-LRU block's QKV-analog input projections
-    gate = jax.nn.gelu(dense(p["in_gate"], h_in, ft=ft, site="qkv.gate"))
-    u = dense(p["in_x"], h_in, ft=ft, site="qkv.in")
+    # in_x / in_gate are the RG-LRU block's QKV-analog input projections;
+    # they share h_in, so a protected run fans them out as one group
+    gate_p, u = dense_fanout((p["in_gate"], p["in_x"]), h_in, ft=ft,
+                             sites=("qkv.gate", "qkv.in"))
+    gate = jax.nn.gelu(gate_p)
 
     new_conv_state = None
     if mode == "decode":

@@ -84,6 +84,7 @@ from repro.ft import (SCOPES, FTContext, PlanRegistry, compile_plans,
 from repro.ft.heads import (ft_logits_decode, ft_logits_prefill,
                             quantize_head)
 from repro.kernels import ops as kops
+from repro.kernels.codec import pack_int8
 from repro.models.api import get_model
 from repro.models.layers import ACT_DTYPE
 from repro.models.transformer import readout_scale
@@ -112,6 +113,13 @@ class ServeConfig:
     # protected-GEMM scope: head | qkv | mlp | out | moe | all
     # (repro.ft.SCOPES) — which projections beyond the head run entangled
     ft_scope: str = "head"
+    # store protected q8 weights int8-packed 4-per-int32-word (kernels
+    # unpack on load): 4x fewer protected-weight HBM bytes per step.
+    # False keeps the legacy int32-container copies (A/B baseline).
+    ft_packed: bool = True
+    # share one quantize+group codec pass across fanout site groups
+    # (attention Q/K/V, MLP gate/up, ...); census marks groups either way
+    ft_chain: bool = True
     greedy: bool = True
     # head-GEMM block sizes: None | dict | "auto" (autotuned at startup)
     blocks: Optional[object] = None
@@ -191,16 +199,23 @@ class ServeEngine:
             self.plan = make_plan(scfg.ft_M, scfg.ft_w)
             self.head_q, self.w_scale = quantize_head(
                 self.model.head_weights(params, cfg))
+            # true [D, V] head dims — recorded BEFORE packing (the packed
+            # copy's contraction axis holds ceil(D/4) words, not D)
+            self._head_dims = tuple(self.head_q.shape)
+            if scfg.ft_packed:
+                self.head_q = pack_int8(self.head_q, axis=0)
             # the protected-GEMM subsystem: one registry for the whole
             # forward pass; layer sites get "auto" blocks only when the
             # engine itself autotunes (a user dict targets the HEAD shape
             # and must not leak onto differently-shaped layer GEMMs)
             self.registry = PlanRegistry(
                 self.plan,
-                blocks="auto" if scfg.blocks == "auto" else None)
+                blocks="auto" if scfg.blocks == "auto" else None,
+                packed=scfg.ft_packed)
             self.ftx = FTContext(registry=self.registry,
                                  scope=scfg.ft_scope,
-                                 use_pallas=scfg.use_pallas)
+                                 use_pallas=scfg.use_pallas,
+                                 chain=scfg.ft_chain)
         elif scfg.ft_mode != "none":
             raise ValueError(f"unknown ft_mode {scfg.ft_mode!r}")
         self._head_blocks = self._default_head_blocks()
@@ -244,7 +259,8 @@ class ServeEngine:
         if scfg.ft_mode == "entangle" and scfg.ft_scope != "head":
             self.plans = compile_plans(self.registry, self.protected_census)
             self.ftx = self.ftx.with_plans(self.plans)
-            self.ft_params = prepare_params(params, scope=scfg.ft_scope)
+            self.ft_params = prepare_params(params, scope=scfg.ft_scope,
+                                            packed=scfg.ft_packed)
         if scfg.blocks == "auto":
             self.warm_autotune()
 
@@ -594,20 +610,21 @@ class ServeEngine:
         if self.scfg.ft_mode != "entangle" or self.scfg.blocks != "auto":
             return {}
         M, B = self.plan.M, self.scfg.max_batch
-        D, V = self.head_q.shape
+        D, V = self._head_dims  # true dims; self.head_q may be packed
+        packed = self.scfg.ft_packed
         # prefill admission batches are padded to a multiple of M
         # (ft_logits_prefill), so the per-group row count is ceil(Bp / M)
         shapes = {(M, B // M, D, V), (M, -(-self.Bp // M), D, V)}
         won = {}
         for shape in sorted(shapes):
-            won[shape] = kops.warm_entangled_matmul(*shape, self.plan,
-                                                    fuse_epilogue=True)
+            won[shape] = kops.warm_entangled_matmul(
+                *shape, self.plan, fuse_epilogue=True, packed=packed)
             self.census.setdefault("head_gemm", {})[shape] = won[shape]
         for site, shape in sorted(self.protected_census):
             # 5-tuple shapes are grouped (MoE per-expert) sites
             warm = (kops.warm_entangled_matmul_grouped if len(shape) == 5
                     else kops.warm_entangled_matmul)
-            w = warm(*shape, self.plan, fuse_epilogue=True)
+            w = warm(*shape, self.plan, fuse_epilogue=True, packed=packed)
             self.census.setdefault("protected", {})[(site, shape)] = w
             won[(site, shape)] = w
         return won

@@ -63,7 +63,8 @@ def test_registered_fake_backend_routes_and_namespaces(tmp_path, monkeypatch):
     cache = autotune.reset_cache(str(tmp_path / "at.json"))
     calls = []
 
-    def spy_emm(c, g, *, plan, fuse_epilogue, failed, blocks):
+    def spy_emm(c, g, *, plan, fuse_epilogue, failed, blocks, packed):
+        assert packed is False  # unpacked int32-container weights here
         calls.append(("entangled_matmul", c.shape, dict(blocks)))
         if fuse_epilogue:
             return ref.entangled_matmul_fused_ref(c, g, plan, r=failed)

@@ -1,0 +1,167 @@
+"""Entangled-domain chain fusion: one entangle, N GEMMs, one extract.
+
+Three layers of evidence:
+
+  * the standalone :func:`repro.ft.protected.entangled_chain` executor
+    rolls a 2-hop and a genuinely-feasible 3-hop chain forward
+    BIT-identically for every single failed stream, at any chain point —
+    and falls back to per-hop extraction (still bit-identical under
+    failure) when :func:`~repro.ft.quantize.chain_budget` says the plan
+    has no headroom for the chain;
+  * the engine matrix: decode + CHUNKED prefill across protection scopes,
+    fanout codec sharing on (``ft_chain=True``, the default) vs off, with
+    a fail-stop injected on every step into every group — all token
+    streams bit-identical;
+  * the census exposes the chainable fanout site groups on the compiled
+    plans (``engine.plans.chains``) at plan-compile time.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.plan import make_plan
+from repro.ft.protected import entangled_chain, protected_matmul
+from repro.ft.quantize import chain_budget
+from repro.models import get_model
+from repro.serve import Request, ServeConfig, ServeEngine
+
+RNG = np.random.default_rng(23)
+
+
+# ----------------------------------------------- standalone executor ----
+
+def _chain_weights(depths, n_last, rng):
+    """Per-hop float weights [K_i, K_{i+1}] for contraction depths
+    ``depths`` ending in an ``n_last``-wide output."""
+    dims = list(depths) + [n_last]
+    return [rng.standard_normal((dims[i], dims[i + 1])).astype(np.float32)
+            for i in range(len(depths))]
+
+
+def _assert_chain_rolls_forward(plan, depths, n_last, rows=7):
+    rng = np.random.default_rng(hash((plan.M, tuple(depths))) % 2**32)
+    x = rng.standard_normal((rows, depths[0])).astype(np.float32)
+    ws = _chain_weights(depths, n_last, rng)
+    healthy = np.asarray(entangled_chain(x, ws, plan=plan))
+    assert healthy.shape == (rows, n_last)
+    assert np.isfinite(healthy).all()
+    for r in range(plan.M):
+        injected = np.asarray(
+            entangled_chain(x, ws, plan=plan, failed_group=r))
+        np.testing.assert_array_equal(
+            healthy, injected, err_msg=f"failed_group={r} depths={depths}")
+    return healthy
+
+
+def test_chain_two_hop_feasible_bit_identical():
+    """make_plan(4, 32) has budget 10 for an (8, 6)-deep 2-hop chain: the
+    fused chain path (single extract) is exercised, and every failed
+    stream recovers bit-identically."""
+    plan = make_plan(4, 32)
+    assert chain_budget(plan, (8, 6)) >= 1  # the FUSED path, not fallback
+    _assert_chain_rolls_forward(plan, (8, 6), n_last=5)
+
+
+def test_chain_three_hop_feasible_bit_identical():
+    """A genuine 3-GEMM chain needs the wide plan: make_plan(8, 32) holds
+    budget >= 1 for depths (4, 3, 2) — one entangle, THREE GEMMs, one
+    extract, exact under any single failure at any chain point."""
+    plan = make_plan(8, 32)
+    assert chain_budget(plan, (4, 3, 2)) >= 1
+    _assert_chain_rolls_forward(plan, (4, 3, 2), n_last=3)
+
+
+def test_chain_infeasible_falls_back_per_hop():
+    """make_plan(4, 32) cannot absorb a 3-hop amplification (budget 0):
+    the executor must fall back to per-hop extraction — same protection,
+    still bit-identical under every failure, and numerically equal to
+    explicitly chaining protected_matmul calls."""
+    plan = make_plan(4, 32)
+    assert chain_budget(plan, (8, 6, 4)) == 0
+    healthy = _assert_chain_rolls_forward(plan, (8, 6, 4), n_last=5)
+    rng = np.random.default_rng(hash((plan.M, (8, 6, 4))) % 2**32)
+    x = rng.standard_normal((7, 8)).astype(np.float32)
+    ws = _chain_weights((8, 6, 4), 5, rng)
+    y = x
+    for w in ws:
+        y = protected_matmul(y, w, plan=plan)
+    np.testing.assert_array_equal(healthy, np.asarray(y))
+
+
+def test_chain_single_hop_equals_protected_matmul():
+    """A length-1 'chain' is just a protected GEMM — bit-identical to
+    protected_matmul (trivial-chain degeneration guard)."""
+    plan = make_plan(4, 32)
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((6, 9)).astype(np.float32)
+    w = rng.standard_normal((9, 5)).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(entangled_chain(x, [w], plan=plan)),
+        np.asarray(protected_matmul(x, w, plan=plan)))
+
+
+# ------------------------------------------------------ engine matrix ----
+
+_PARAMS_CACHE: dict = {}
+
+
+def _setup(arch="llama3.2-1b", max_seq=48):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+        _PARAMS_CACHE[arch] = (cfg, params)
+    return _PARAMS_CACHE[arch]
+
+
+def _wave(eng, prompts, max_new=3, failed_group=None):
+    """One request wave on an ALREADY-BOOTED engine (waves reuse the
+    engine so the matrix costs boots-per-scope, not boots-per-run)."""
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=p.copy(), max_new=max_new))
+    done = eng.run_to_completion(max_steps=500, failed_group=failed_group)
+    out = {r.rid: np.asarray(r.out) for r in done}
+    eng.done = []
+    return out
+
+
+@pytest.mark.parametrize("scope", ["qkv", "out", "all"])
+def test_engine_chain_matrix_bit_identical(scope):
+    """Decode + chunked prefill, per scope: fanout-chained codec ON (the
+    default) equals chained-OFF bitwise on healthy runs, and the chained
+    engine rolls EVERY injected failed group forward to the same
+    tokens."""
+    cfg, params = _setup()
+    prompts = [RNG.integers(0, cfg.vocab_size, size=int(RNG.integers(5, 11)))
+               .astype(np.int32) for _ in range(4)]
+    base = dict(max_batch=4, max_seq=48, ft_mode="entangle", ft_M=4,
+                ft_scope=scope, prefill_chunk=4)
+    off = ServeEngine(cfg, ServeConfig(**base, ft_chain=False), params)
+    ref = _wave(off, prompts)
+    assert set(ref) == set(range(4))
+
+    on = ServeEngine(cfg, ServeConfig(**base), params)
+    healthy = _wave(on, prompts)
+    for r in ref:
+        np.testing.assert_array_equal(
+            ref[r], healthy[r], err_msg=f"scope={scope} chain on≠off rid={r}")
+    for fg in range(4):
+        injected = _wave(on, prompts, failed_group=fg)
+        for r in ref:
+            np.testing.assert_array_equal(
+                ref[r], injected[r],
+                err_msg=f"scope={scope} failed_group={fg} rid={r}")
+
+
+def test_census_exposes_fanout_chain_groups():
+    """The startup census marks the fanout site groups as chainable on the
+    compiled plans — the attention Q/K/V and MLP gate/up groups of the
+    dense arch at scope=all."""
+    cfg, params = _setup()
+    eng = ServeEngine(
+        cfg, ServeConfig(max_batch=4, max_seq=48, ft_mode="entangle",
+                         ft_M=4, ft_scope="all"), params)
+    chains = eng.plans.chains
+    assert ("qkv.q", "qkv.k", "qkv.v") in chains
+    assert ("mlp.gate", "mlp.up") in chains

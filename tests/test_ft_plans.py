@@ -127,9 +127,12 @@ def test_prepare_params_scoped_q8_entries():
         "scope=all must cover output projections"
     for name in ("we_gate", "we_up", "we_down", "router"):
         assert name + "_q8" in moe_all, name
-        # per-layer (and per-expert) scales follow the stacked leading dims
+        # per-layer (and per-expert) scales follow the stacked leading dims;
+        # the q8 copy is PACKED 4 int8 lanes per int32 word along K
         w = moe_all[name]
-        assert moe_all[name + "_q8"]["w"].shape == w.shape
+        packed_k = -(-w.shape[-2] // 4)
+        assert moe_all[name + "_q8"]["w"].shape == \
+            (*w.shape[:-2], packed_k, w.shape[-1])
         assert moe_all[name + "_q8"]["scale"].shape == w.shape[:-2]
         np.testing.assert_array_equal(  # float master untouched
             np.asarray(w), np.asarray(params["stack"][1][0]["moe"][name]))

@@ -1,0 +1,199 @@
+"""Packed-int8 weight path: pack/unpack roundtrip properties, packed
+fused kernels vs the int64 disentangle oracle for every plan and failed
+stream (dense, grouped, conv1d), and the pretuned-cache staleness
+contract for the new packed key namespace.
+
+The packed copy stores 4 int8 lanes per int32 word along the contraction
+axis (codec.pack_int8); kernels unpack on load with sign-extending shifts.
+Packing is a pure storage transform, so every packed kernel result must be
+BIT-identical to the int32-container path — healthy and for every
+failed-stream index r.
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.entangle import disentangle_oracle_np
+from repro.core.plan import make_plan
+from repro.kernels import autotune, ops
+from repro.kernels.codec import PACK_LANES, pack_int8, unpack_int8
+
+SET = settings(max_examples=8, deadline=None)
+
+PLANS = [(3, 16, None), (4, 32, None), (3, 32, "dualword"), (8, 32, None)]
+
+
+# ---------------------------------------------------------- roundtrip ----
+
+@st.composite
+def pack_case(draw):
+    ndim = draw(st.integers(1, 3))
+    shape = tuple(draw(st.integers(1, 13)) for _ in range(ndim))
+    axis = draw(st.integers(0, ndim - 1))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return shape, axis, seed
+
+
+@given(pack_case())
+@SET
+def test_pack_unpack_roundtrip_full_int8_range(case):
+    """pack -> unpack is bit-exact over the FULL int8 value range
+    [-128, 127], any shape, any axis, including non-multiple-of-4 axis
+    lengths (zero-padded words; unpack slices back to n)."""
+    shape, axis, seed = case
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=shape).astype(np.int32)
+    p = pack_int8(jnp.asarray(x), axis=axis)
+    n = shape[axis]
+    assert p.shape[axis] == -(-n // PACK_LANES)
+    back = unpack_int8(p, axis=axis, n=n)
+    np.testing.assert_array_equal(np.asarray(back), x)
+
+
+def test_pack_boundary_values_exact():
+    """The sign-extension edge cases: -128, -1, 0, 127 survive packing in
+    every lane position."""
+    vals = np.array([-128, -1, 0, 127, -127, 1, 64, -64], np.int32)
+    p = pack_int8(jnp.asarray(vals[:, None]), axis=0)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int8(p, axis=0, n=8))[:, 0], vals)
+
+
+# --------------------------------------------- packed kernels vs oracle ----
+# Deterministic fixed shapes per plan (NOT hypothesis-drawn): each unique
+# shape is a fresh interpret-mode kernel compile for every (failed, packed)
+# variant, so randomized shapes would blow the suite budget on compiles
+# without adding coverage — the value space is already exercised densely,
+# and the roundtrip property above fuzzes the codec itself. K=13 keeps the
+# non-multiple-of-4 packing tail in play on every kernel test.
+
+
+@pytest.mark.parametrize("M,w,temp", PLANS)
+def test_packed_matmul_matches_oracle_all_failures(M, w, temp):
+    """Packed dense fused GEMM == int64 disentangle oracle and == the
+    unpacked kernel, for failure-free extraction and every failed r."""
+    plan = make_plan(M, w, temp=temp)
+    B, K, N = 6, 13, 9
+    rng = np.random.default_rng(M * 1000 + w)
+    lim = min(max(int(np.sqrt(plan.max_output_magnitude / K)) // 2, 1), 15)
+    c = jnp.asarray(rng.integers(-lim, lim + 1,
+                                 size=(plan.M, B, K)).astype(np.int32))
+    g = jnp.asarray(rng.integers(-lim, lim + 1,
+                                 size=(K, N)).astype(np.int32))
+    gp = pack_int8(g, axis=0)
+    bl = {"bb": 16, "bn": 32, "bk": 32}
+
+    delta = ops.entangled_matmul(c, g, plan, blocks=bl)
+    for r in [None] + list(range(plan.M)):
+        packed = ops.entangled_matmul(c, gp, plan, fuse_epilogue=True,
+                                      failed=r, packed=True, blocks=bl)
+        oracle = disentangle_oracle_np(np.asarray(delta), plan,
+                                       0 if r is None else r)
+        np.testing.assert_array_equal(np.asarray(packed), oracle)
+        unpacked = ops.entangled_matmul(c, g, plan, fuse_epilogue=True,
+                                        failed=r, blocks=bl)
+        np.testing.assert_array_equal(np.asarray(packed),
+                                      np.asarray(unpacked))
+
+
+@pytest.mark.parametrize("M,w,temp", PLANS)
+def test_packed_grouped_matmul_matches_all_failures(M, w, temp):
+    """Packed grouped (per-expert) fused GEMM == the unpacked kernel ==
+    oracle for every failed stream."""
+    plan = make_plan(M, w, temp=temp)
+    E, C, K, N = 3, 4, 13, 7
+    rng = np.random.default_rng(M * 1000 + w + 1)
+    lim = min(max(int(np.sqrt(plan.max_output_magnitude / K)) // 2, 1), 15)
+    c = jnp.asarray(rng.integers(-lim, lim + 1,
+                                 size=(plan.M, E, C, K)).astype(np.int32))
+    g = jnp.asarray(rng.integers(-lim, lim + 1,
+                                 size=(E, K, N)).astype(np.int32))
+    gp = pack_int8(g, axis=1)
+    bl = {"bb": 8, "bn": 16, "bk": 16}
+
+    delta = ops.entangled_matmul_grouped(c, g, plan, blocks=bl)
+    for r in [None] + list(range(plan.M)):
+        packed = ops.entangled_matmul_grouped(
+            c, gp, plan, fuse_epilogue=True, failed=r, packed=True,
+            blocks=bl)
+        oracle = disentangle_oracle_np(
+            np.asarray(delta).reshape(plan.M, -1), plan,
+            0 if r is None else r)
+        np.testing.assert_array_equal(
+            np.asarray(packed).reshape(plan.M, -1), oracle)
+        unpacked = ops.entangled_matmul_grouped(
+            c, g, plan, fuse_epilogue=True, failed=r, blocks=bl)
+        np.testing.assert_array_equal(np.asarray(packed),
+                                      np.asarray(unpacked))
+
+
+@pytest.mark.parametrize("M,w,temp", PLANS)
+def test_packed_conv1d_matches_all_failures(M, w, temp):
+    """Packed depthwise conv1d (weights packed along D) == the unpacked
+    kernel for every failed stream."""
+    plan = make_plan(M, w, temp=temp)
+    B, D, T, kf = 2, 13, 12, 3
+    rng = np.random.default_rng(M * 1000 + w + 2)
+    lim = min(max(plan.max_output_magnitude // (kf * 127) // 2, 1), 15)
+    x = jnp.asarray(rng.integers(-lim, lim + 1,
+                                 size=(plan.M, B, D, T)).astype(np.int32))
+    w = jnp.asarray(rng.integers(-lim, lim + 1,
+                                 size=(D, kf)).astype(np.int32))
+    wp = pack_int8(w, axis=0)
+    bl = {"bd": 16, "bt": 64}
+
+    for r in [None] + list(range(plan.M)):
+        packed = ops.entangled_conv1d(x, wp, plan, fuse_epilogue=True,
+                                      failed=r, packed=True, blocks=bl)
+        unpacked = ops.entangled_conv1d(x, w, plan, fuse_epilogue=True,
+                                        failed=r, blocks=bl)
+        np.testing.assert_array_equal(np.asarray(packed),
+                                      np.asarray(unpacked))
+
+
+# -------------------------------------------------- pretuned staleness ----
+
+def test_pretuned_stale_keys_dropped_with_warning(tmp_path, monkeypatch):
+    """A pretuned file carrying keys from an op namespace this build no
+    longer tunes must load its VALID keys (cold hit) and drop the stale
+    ones with a warning — never crash, never inflate coverage."""
+    pre = tmp_path / "pretuned"
+    pre.mkdir()
+    backend = ops.resolve_backend()
+    good = autotune.cache_key("entangled_matmul", (4, 8, 32, 16), backend,
+                              ("l8", "dualword", "fused", "packed"))
+    stale_op = "entangled_matmul_v0|4x8x32x16|" + backend + "|fused"
+    stale_be = autotune.cache_key("entangled_matmul", (4, 8, 32, 16),
+                                  "no_such_backend", ("fused",))
+    (pre / "gen.json").write_text(json.dumps({
+        "_meta": {"version": 1},
+        good: {"bb": 16, "bn": 16, "bk": 32},
+        stale_op: {"bb": 8, "bn": 8, "bk": 8},
+        stale_be: {"bb": 8, "bn": 8, "bk": 8},
+    }))
+    monkeypatch.setattr(autotune, "PRETUNED_DIR", pre)
+    cache = autotune.AutotuneCache(str(tmp_path / "user.json"))
+    with pytest.warns(RuntimeWarning, match="stale"):
+        hit = cache.get(good)
+    assert hit == {"bb": 16, "bn": 16, "bk": 32}
+    assert cache.get(stale_op) is None
+    assert cache.get(stale_be) is None
+    assert cache.sweeps == 0
+
+
+def test_shipped_pretuned_file_has_packed_generation():
+    """The shipped interpret_cpu seed must carry the packed-flag keys the
+    packed-by-default engine warms, alongside the legacy unpacked ones —
+    and every key must parse into a known namespace."""
+    f = autotune.PRETUNED_DIR / "interpret_cpu.json"
+    data = json.loads(f.read_text())
+    keys = [k for k in data if k != "_meta"]
+    packed = [k for k in keys if k.endswith(",packed") or ",packed," in k]
+    assert packed, "no packed-generation keys shipped"
+    unpacked = [k for k in keys if "packed" not in k]
+    assert unpacked, "legacy unpacked keys dropped"
+    for k in keys:
+        assert autotune.AutotuneCache._known_namespace(k, ops_too=True), k

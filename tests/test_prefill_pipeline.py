@@ -145,7 +145,7 @@ def test_warm_autotune_covers_protected_scope_shapes(tmp_path, monkeypatch):
                                        ft_mode="entangle", ft_M=4,
                                        ft_scope="all", prefill_chunk=8,
                                        blocks="auto"), params)
-    D, V = eng.head_q.shape
+    D, V = eng._head_dims  # true dims; head_q is stored packed
     assert (4, 1, D, V) in eng.census["head_gemm"]
     shapes = eng.census["protected"]
     # decode: 4 rows -> 1 per group; chunk: Bp * 8 rows -> 8 per group
@@ -219,7 +219,7 @@ def test_warm_autotune_covers_prefill_shapes(tmp_path, monkeypatch):
     eng = ServeEngine(cfg, ServeConfig(max_batch=4, max_seq=48,
                                        ft_mode="entangle", ft_M=4,
                                        blocks="auto"), params)
-    D, V = eng.head_q.shape
+    D, V = eng._head_dims  # true dims; head_q is stored packed
     assert (4, 1, D, V) in eng.census["head_gemm"]  # decode AND prefill
     # the warmed engine serves a wave without error (auto inside jit)
     for r, p in enumerate(_ragged_prompts(cfg, [4, 6, 9])):
