@@ -45,6 +45,19 @@ the v2 redesign ``ft_scope='all'`` must genuinely cover everything, so CI
 gates on these records. The CPU numbers run the Pallas kernels in
 interpret mode — the FT overhead % here is an upper bound; the paper's
 1.8-2.8% band is the compiled-TPU target tracked in ROADMAP.md.
+
+Steady-state latency (open-loop): a seeded Poisson arrival trace of mixed
+short/long prompts is replayed against TWO engines on a VIRTUAL clock
+(1 unit per engine step — deterministic, immune to interpret-CPU wall
+noise): mid-flight refill on vs boundary admission (``refill=False``).
+Per-request time-to-first-token and inter-token latencies come from the
+engine's own ``t_submit`` / ``t_first`` / ``tok_times`` stamps; step units
+convert to ms via the measured warm mean step wall time. Records:
+``serve_ttft_ms`` / ``serve_itl_p50_ms`` / ``serve_itl_p99_ms`` (refill
+engine) and the gate ``serve_refill_ttft_speedup`` — mean boundary TTFT
+over mean refill TTFT on the identical trace, which must be > 1.0:
+recycling finished slots into the live chunk stream MUST beat waiting for
+admission-batch boundaries.
 """
 from __future__ import annotations
 
@@ -117,6 +130,42 @@ def _wave(eng, prompts, max_new: int) -> tuple[float, int, int]:
     toks = sum(len(r.out) for r in done)
     eng.done = []
     return dt, toks, eng.decode_calls - calls0
+
+
+def _openloop(cfg, params, *, refill: bool, arrivals, prompts,
+              max_new: int, mpps: int = 1):
+    """Replay one seeded open-loop arrival trace on a fresh engine.
+
+    The engine runs on a virtual clock advancing 1.0 per step, so TTFT /
+    ITL come out in STEP units — deterministic across machines (jit
+    compile stalls inside a step cannot leak into latency). Two passes:
+    the first compiles every program, the second (warm) is measured for
+    the step -> wall-ms conversion. Returns (requests, ms_per_step,
+    engine) from the warm pass."""
+    vclock = [0.0]
+    eng = ServeEngine(
+        cfg, ServeConfig(max_batch=8, max_seq=80, prefill_chunk=8,
+                         prefill_buckets=(16, 64), refill=refill,
+                         max_prefill_per_step=mpps,
+                         clock=lambda: vclock[0]), params)
+    for _pass in range(2):
+        vclock[0] = 0.0
+        reqs, i, steps = [], 0, 0
+        wall0 = time.perf_counter()
+        while i < len(prompts) or not eng.idle():
+            while i < len(prompts) and arrivals[i] <= vclock[0]:
+                rq = Request(rid=i, prompt=prompts[i].copy(),
+                             max_new=max_new)
+                eng.submit(rq)
+                reqs.append(rq)
+                i += 1
+            eng.step()
+            steps += 1
+            vclock[0] += 1.0
+            assert steps < 10_000, "open-loop trace failed to drain"
+        wall = time.perf_counter() - wall0
+        eng.done = []
+    return reqs, wall / steps * 1e3, eng
 
 
 def run(emit, *, max_batch: int = 8, n_requests: int = 16,
@@ -223,6 +272,65 @@ def run(emit, *, max_batch: int = 8, n_requests: int = 16,
                   base="prefill_per_request",
                   ft={"head": "prefill_bucketed_ft",
                       "all": "prefill_bucketed_ft_all"})
+
+    # -- steady-state latency: open-loop trace, refill vs boundary -----------
+    # Mixed trace: periodic LONG prompts (56 -> bucket 64, 8 chunks of 8)
+    # keep an admission batch mid-flight for many steps while short
+    # prompts (12 -> bucket 16) keep arriving; short max_new churns slots
+    # free mid-chunk. Refill admits the shorts into those freed slots
+    # immediately; boundary admission parks them until the long batch
+    # drains — that wait is exactly the TTFT gap this gate measures.
+    trace_rng = np.random.default_rng(7)
+    lens = [56 if j % 6 == 0 else 12 for j in range(24)]
+    trace_prompts = [trace_rng.integers(0, cfg.vocab_size, n)
+                     .astype(np.int32) for n in lens]
+    trace_arrivals = np.cumsum(trace_rng.exponential(1.5, size=len(lens)))
+    lat = {}
+    for mode, refill in (("refill", True), ("boundary", False)):
+        reqs, ms_per_step, eng = _openloop(
+            cfg, params, refill=refill, arrivals=trace_arrivals,
+            prompts=trace_prompts, max_new=4, mpps=2)
+        assert all(r.status == "done" for r in reqs)
+        ttft = np.array([r.t_first - r.t_submit for r in reqs])
+        itl = np.concatenate([np.diff(r.tok_times) for r in reqs
+                              if len(r.tok_times) > 1])
+        lat[mode] = {"ttft_steps": float(ttft.mean()),
+                     "ms_per_step": ms_per_step,
+                     "itl_steps": itl,
+                     "refills": eng.metrics["refill_admissions"]}
+    assert lat["refill"]["refills"] > 0, "trace never exercised refill"
+    assert lat["boundary"]["refills"] == 0
+    ms = lat["refill"]["ms_per_step"]
+    ttft_ms = lat["refill"]["ttft_steps"] * ms
+    itl_ms = lat["refill"]["itl_steps"] * ms
+    p50, p99 = np.percentile(itl_ms, [50, 99])
+    speedup = lat["boundary"]["ttft_steps"] / lat["refill"]["ttft_steps"]
+    lat_ok = speedup > 1.0
+    emit("serve_ttft_ms", ttft_ms * 1e3,
+         f"open-loop mean TTFT {ttft_ms:.1f} ms (refill; "
+         f"{lat['refill']['ttft_steps']:.2f} steps x {ms:.1f} ms/step)")
+    itl_max_steps = float(lat["refill"]["itl_steps"].max())
+    emit("serve_itl_p50_ms", p50 * 1e3, f"ITL p50 {p50:.1f} ms")
+    emit("serve_itl_p99_ms", p99 * 1e3,
+         f"ITL p99 {p99:.1f} ms (max {itl_max_steps:.0f} step(s)/token — "
+         f"1 means decode was NEVER starved by admission chunks)")
+    emit("serve_refill_ttft_speedup", 0.0,
+         f"refill vs boundary TTFT {speedup:.2f}x "
+         f"(gate > 1.0: {'PASS' if lat_ok else 'FAIL'})")
+    records.append({"name": "serve_ttft_ms", "value": round(ttft_ms, 2),
+                    "ttft_steps": round(lat["refill"]["ttft_steps"], 3),
+                    "ms_per_step": round(ms, 3),
+                    "refill_admissions": lat["refill"]["refills"]})
+    records.append({"name": "serve_itl_p50_ms", "value": round(p50, 2)})
+    records.append({"name": "serve_itl_p99_ms", "value": round(p99, 2),
+                    "itl_max_steps": itl_max_steps,
+                    "decode_starved": itl_max_steps > 1.0})
+    records.append({"name": "serve_refill_ttft_speedup",
+                    "value": round(speedup, 3),
+                    "boundary_ttft_steps":
+                        round(lat["boundary"]["ttft_steps"], 3),
+                    "gate": "> 1.0", "ok": lat_ok})
+    ok &= lat_ok
 
     path = pathlib.Path.cwd() / "BENCH_serve.json"
     path.write_text(json.dumps({

@@ -107,10 +107,11 @@ def ft_logits_prefill(
     Rows map round-robin to groups like decode (row -> group = row % M);
     an admission batch that does not divide into M groups is padded with
     zero rows inside :func:`repro.ft.protected_matmul` (exact: zeros
-    entangle to zeros and cannot perturb any other stream's accumulator,
-    nor the shared activation scale). The caller must zero any garbage rows
-    (empty admission slots) before calling, exactly like the decode path's
-    ``active`` masking, so they cannot poison the shared quantization scale.
+    entangle to zeros and cannot perturb any other stream's accumulator).
+    Activation quantization is PER ROW (:func:`repro.ft.quantize_acts`),
+    so garbage rows (empty admission slots) cannot move a live row's grid —
+    the caller still zeroes them, like the decode path's ``active``
+    masking, so their garbage logits are deterministic zeros.
     """
     return protected_matmul(
         h, (head_q, w_scale), plan=plan, failed_group=failed_group,

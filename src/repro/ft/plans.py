@@ -136,9 +136,29 @@ class CompiledPlans:
         # and run strictly linearly, so the fanout/chain executor covers
         # them with ONE quantize+entangle pass (see ft/protected.py)
         self._chains: frozenset = frozenset(tuple(c) for c in chains)
+        # observability: how many lookups fell through to the lazy-entry
+        # fallback. Steady-state serving must keep this at 0 — mid-flight
+        # slot refill reuses the census'd [Bp, bucket] chunk shapes, so a
+        # refill can never request a shape the startup census missed
+        # (tested; see ServeEngine and tests/test_serve_refill.py).
+        self.misses = 0
 
     def lookup(self, site: str, shape: tuple) -> Optional[ProtectionPlan]:
-        return self._plans.get((site, shape))
+        plan = self._plans.get((site, shape))
+        if plan is None:
+            self.misses += 1
+        return plan
+
+    def assert_covers(self, census: Mapping):
+        """Raise if any censused (site, shape) lacks a compiled plan — the
+        engine calls this right after :func:`compile_plans` so a census /
+        compile drift fails loudly at startup instead of degrading to lazy
+        per-trace entries mid-serve."""
+        missing = [k for k in census if k not in self._plans]
+        if missing:
+            raise AssertionError(
+                f"compiled plans miss {len(missing)} censused sites: "
+                f"{sorted(missing)[:4]}...")
 
     @property
     def chains(self) -> frozenset:

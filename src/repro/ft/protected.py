@@ -4,9 +4,10 @@ hot-path GEMM.
 :func:`protected_matmul` is the one code path every plain protected
 projection runs through: float activations of ANY leading shape are
 flattened to rows, quantized onto the plan's eq. (13) integer grid
-(:mod:`repro.ft.quantize`), padded with zero rows to a multiple of M
+(:mod:`repro.ft.quantize` — PER-ROW scales, so no row's grid depends on
+its batch neighbours), padded with zero rows to a multiple of M
 (exact — zeros entangle to zeros and cannot perturb any other stream's
-accumulator, nor the shared activation scale), mapped round-robin onto the
+accumulator), mapped round-robin onto the
 M entangled streams (row -> group = row % M, the serving engine's
 slot -> group contract), and pushed through the fused kernel behind
 :mod:`repro.kernels.ops` (backend-pluggable: Pallas TPU, interpret CPU,

@@ -9,13 +9,21 @@ head and the in-model QKV/MLP/router sites alike):
     GEMM shipped with (``repro.ft.heads.quantize_head`` re-exports
     :func:`quantize_weight`), applied per layer / per expert by the
     startup hoist via :func:`quantize_weight_stacked`.
-  * **activations** — symmetric per-call integer quantization into the
+  * **activations** — symmetric PER-ROW integer quantization into the
     plan's eq. (13) budget: a ``K``-deep integer dot of int8 weights
     satisfies ``K * |a|max * 127 <= plan.max_output_magnitude`` iff the
     activation grid is bounded by :func:`activation_budget`.  The budget
     therefore shrinks with the contraction depth — a d_ff-deep MLP down
     projection quantizes coarser than the d_model-deep QKV projections,
-    and both stay exactly recoverable.
+    and both stay exactly recoverable.  The scale is per ROW (one grid per
+    sample), not per tensor: a request's integer stream — and therefore
+    its tokens — is a function of its own activations only, never of
+    whichever other requests happen to be co-resident in the batch.  This
+    is what makes serving-side scheduling (continuous batching, mid-flight
+    slot refill, chunked admission) token-transparent: admitting, evicting
+    or refilling neighbours cannot move any other request's quantization
+    grid, so the entangled roll-forward stays bit-identical no matter WHEN
+    a slot was filled.
 
 Quantization trades output precision for protection like any int8 serving
 path; the *recovery* is bit-exact — a healthy protected run and a
@@ -104,11 +112,20 @@ def chain_budget(plan: EntanglePlan, depths: Sequence[int]) -> int:
 def quantize_acts(x: jax.Array, plan: EntanglePlan, depth: int, *,
                   budget: int = None) -> tuple[jax.Array, jax.Array]:
     """Quantize float activations ``x`` onto the eq. (13)-budgeted integer
-    grid for a ``depth``-deep contraction. Returns (int32 values, scale).
-    ``budget`` overrides the single-GEMM budget (the chain executor passes
-    :func:`chain_budget`'s tighter grid)."""
+    grid for a ``depth``-deep contraction. Returns (int32 values, scale),
+    where the scale is PER ROW — shaped like ``x`` with the contraction
+    axis reduced to 1, so it broadcasts against the row's outputs.
+
+    Per-row scales keep every sample's integer stream a function of its
+    own values: batch composition (which slots are live, what garbage an
+    inactive row holds, when admission refilled a slot) can never move
+    another row's grid. Each row's entries are bounded by ``budget``, so
+    the eq. (13) output bound holds row-wise exactly as it did for the
+    old shared per-tensor grid. ``budget`` overrides the single-GEMM
+    budget (the chain executor passes :func:`chain_budget`'s tighter
+    grid)."""
     if budget is None:
         budget = activation_budget(plan, depth)
-    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
+    amax = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True), 1e-9)
     a_scale = budget / amax
     return jnp.round(x * a_scale).astype(jnp.int32), a_scale

@@ -94,8 +94,17 @@ How to protect a new GEMM (the repro.ft subsystem, v2 plan-compile flow):
      new shape should cold-hit in CI.
 
 The quantization policy (int8 weights — hoisted to startup by
-``prepare_params`` — and eq.-13-budgeted activations) is shared — see
-repro/ft/quantize.py; exactness of the roll-forward does not depend on
-block sizes, plan choice or backend, only on both runs taking the same
-protected path.
+``prepare_params`` — and eq.-13-budgeted, PER-ROW-scaled activations) is
+shared — see repro/ft/quantize.py; exactness of the roll-forward does not
+depend on block sizes, plan choice or backend, only on both runs taking
+the same protected path.
+
+Steady-state serving note: mid-flight slot refill (repro.serve) never
+introduces new kernel shapes — a refilled admission batch replays one of
+the startup census'd [Bp, chunk] programs, so the compiled plans, block
+sizes and pretuned winners that served the first wave serve every refill
+(``CompiledPlans.misses`` stays 0, no mid-serve sweep). When adding chunk
+widths or prefill buckets that change the census, regenerate
+``pretuned/interpret_cpu.json`` so cold refill starts stay sweep-free
+(gated by tests/test_ft_subsystem.py::test_pretuned_seed_cache_cold_hit).
 """

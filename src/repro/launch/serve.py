@@ -18,9 +18,17 @@ Admission is the bucketed, chunked batched prefill pipeline:
 ``--prefill-buckets 8,16,32`` overrides the geometric default length
 buckets, ``--prefill-chunk C`` interleaves C-token prefill chunks with
 decode steps (0 = whole bucket per call).
+
+Steady-state flags: ``--arrival-rate r`` replays a seeded open-loop
+Poisson arrival trace (r requests/sec; 0 = submit the whole wave up
+front), ``--deadline-ms d`` attaches an SLA to every request (queued
+requests past it are shed loudly), ``--no-refill`` forces boundary
+admission — new batches plan only when no admission batch is in flight
+(the A/B baseline for mid-flight refill, which is the default).
 """
 import argparse
 import dataclasses
+import time
 
 import numpy as np
 import jax
@@ -34,15 +42,41 @@ from repro.train.checkpoint import CheckpointManager
 
 
 def _wave(eng: ServeEngine, n_requests: int, vocab: int, max_new: int,
-          failed_group):
+          failed_group, arrival_rate: float = 0.0, deadline_ms=None):
     rng = np.random.default_rng(0)
-    for r in range(n_requests):
-        eng.submit(Request(
-            rid=r,
-            prompt=rng.integers(0, vocab, size=8).astype(np.int32),
-            max_new=max_new))
-    done = eng.run_to_completion(max_steps=10_000, failed_group=failed_group)
-    return {r.rid: np.asarray(r.out) for r in done}
+    reqs = [Request(
+        rid=r,
+        prompt=rng.integers(0, vocab, size=8).astype(np.int32),
+        max_new=max_new, deadline_ms=deadline_ms)
+        for r in range(n_requests)]
+    if not arrival_rate:
+        for rq in reqs:
+            eng.submit(rq)
+        done = eng.run_to_completion(max_steps=10_000,
+                                     failed_group=failed_group)
+        return {r.rid: np.asarray(r.out) for r in done}
+    # open-loop: submit each request at its seeded Poisson arrival time
+    # (wall clock), stepping the engine in between — requests keep
+    # arriving whether or not earlier ones have drained
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate,
+                                         size=n_requests))
+    t0, i, steps = time.monotonic(), 0, 0
+    while i < n_requests or not eng.idle():
+        now = time.monotonic() - t0
+        if i < n_requests and eng.idle() and arrivals[i] > now:
+            time.sleep(arrivals[i] - now)  # nothing to serve yet
+            now = time.monotonic() - t0
+        while i < n_requests and arrivals[i] <= now:
+            eng.submit(reqs[i])
+            i += 1
+        eng.step(failed_group=failed_group)
+        steps += 1
+        assert steps < 10_000, "open-loop wave failed to drain"
+    if any(r.status == "shed" for r in reqs):
+        print(f"[launch.serve] shed "
+              f"{sum(r.status == 'shed' for r in reqs)} queued requests "
+              f"past --deadline-ms {deadline_ms}")
+    return {r.rid: np.asarray(r.out) for r in reqs if r.status == "done"}
 
 
 def _validate_args(ap: argparse.ArgumentParser, args) -> None:
@@ -83,6 +117,11 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
         if any(b < 1 or b > args.max_seq for b in buckets):
             ap.error(f"--prefill-buckets {list(buckets)} must lie in "
                      f"[1, max-seq={args.max_seq}]")
+    if args.arrival_rate < 0:
+        ap.error(f"--arrival-rate must be >= 0 (requests/sec; 0 = closed "
+                 f"wave), got {args.arrival_rate}")
+    if args.deadline_ms is not None and args.deadline_ms <= 0:
+        ap.error(f"--deadline-ms must be > 0, got {args.deadline_ms}")
     return buckets
 
 
@@ -118,6 +157,17 @@ def main():
                     help=">0: split bucketed prefill into chunks of this "
                          "many tokens, one chunk per engine step "
                          "(interleaved with decode)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help=">0: open-loop seeded Poisson arrivals at this "
+                         "many requests/sec (0 = submit the whole wave "
+                         "up front)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLA; queued requests past it are "
+                         "shed loudly instead of served late")
+    ap.add_argument("--no-refill", action="store_true",
+                    help="boundary admission: plan new batches only when "
+                         "no admission batch is in flight (disables "
+                         "mid-flight slot refill)")
     args = ap.parse_args()
     buckets = _validate_args(ap, args)
 
@@ -135,11 +185,14 @@ def main():
         max_batch=args.max_batch, max_seq=args.max_seq,
         ft_mode=args.ft_mode, ft_M=args.ft_M, ft_scope=args.ft_scope,
         blocks=(args.blocks or None),
-        prefill_buckets=buckets, prefill_chunk=args.prefill_chunk)
+        prefill_buckets=buckets, prefill_chunk=args.prefill_chunk,
+        refill=not args.no_refill)
     failed = args.failed_group if args.failed_group >= 0 else None
 
     eng = ServeEngine(cfg, scfg, params)
-    outs = _wave(eng, args.requests, cfg.vocab_size, args.max_new, failed)
+    outs = _wave(eng, args.requests, cfg.vocab_size, args.max_new, failed,
+                 arrival_rate=args.arrival_rate,
+                 deadline_ms=args.deadline_ms)
     first = list(outs[0][:8]) if 0 in outs else "<request 0 not completed>"
     print(f"[launch.serve] {len(outs)}/{args.requests} requests completed in "
           f"{eng.decode_calls} batched decode calls; first output: {first}")

@@ -42,18 +42,61 @@ call per request:
     kernel (and the same startup plan) as decode
     (:func:`repro.ft.heads.ft_logits_prefill`), so a fail-stop injected
     during admission rolls forward in-kernel, bit-identically.
+
+Steady-state pipeline (mid-flight refill + async frontend)
+----------------------------------------------------------
+Under sustained load the engine never quantizes admission to bucket-batch
+boundaries:
+
+  * **mid-flight refill** (``ServeConfig.refill``, default on) — the
+    moment a slot finishes (``max_new``, EOS, cancel) it is recycled into
+    the LIVE prefill chunk stream: new admission batches are planned over
+    freed slots while earlier batches are still mid-chunk, so slots never
+    idle waiting for a wave to drain. Time-to-first-token under an
+    open-loop arrival trace drops accordingly (gated in
+    ``benchmarks/serve_throughput.py`` / BENCH_serve.json).
+  * **async API** (:mod:`repro.serve.scheduler`) — ``submit()`` returns a
+    :class:`RequestHandle`: iterate it to stream tokens from a
+    per-request ring buffer as decode steps land (the iterator drives
+    ``engine.step()`` on demand), ``cancel()`` works queued, mid-prefill
+    and decoding, ``Request.deadline_ms`` sets an SLA. Admission batches
+    form and advance earliest-deadline-first (:class:`ChunkScheduler`;
+    decode is never starved more than ``max_prefill_per_step`` chunks per
+    step); ``max_queue`` bounds the wait queue with a typed
+    :class:`AdmissionRejected` at saturation, and lapsed-deadline queued
+    requests are shed loudly (:class:`DeadlineExceeded` on iteration).
+    ``ServeEngine.metrics`` exposes queue depth, sheds, rejections,
+    refills, landings and merged zero rows.
+  * **why refill never changes FT group assignment** — slot -> group is
+    POSITIONAL (``slot % M``) and plans are keyed by (site, shape): a
+    refilled batch replays one of the census'd ``[Bp, bucket]`` chunk
+    programs, so the same plans, block sizes and kernels serve it with no
+    retrace (``CompiledPlans.misses`` stays 0). Activation quantization
+    is per ROW (:mod:`repro.ft.quantize`), so WHICH requests are
+    co-resident — i.e. WHEN a slot was refilled — cannot move any other
+    request's integer grid: tokens and the entangled roll-forward are
+    bit-identical under refill and boundary admission (tested as a
+    refill x fail-stop matrix across dense/ssm/hybrid x scopes x groups).
 """
 from repro.ft.heads import (ft_logits, ft_logits_decode, ft_logits_prefill,
                             quantize_head)
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,
                                 geometric_buckets)
 from repro.serve.reference import PerSlotEngine
+from repro.serve.scheduler import (AdmissionRejected, ChunkScheduler,
+                                   DeadlineExceeded, RequestHandle,
+                                   TokenRing)
 
 __all__ = [
+    "AdmissionRejected",
+    "ChunkScheduler",
+    "DeadlineExceeded",
     "PerSlotEngine",
     "Request",
+    "RequestHandle",
     "ServeConfig",
     "ServeEngine",
+    "TokenRing",
     "ft_logits",
     "ft_logits_decode",
     "ft_logits_prefill",

@@ -32,6 +32,40 @@ call per request):
     slots in ONE jitted batched row scatter; the first generated tokens
     come from the gathered per-row last-prompt hidden states.
 
+Steady-state serving (mid-flight refill + async frontend + deadlines):
+
+  * **mid-flight refill** (``ServeConfig.refill``, default on): the moment
+    a slot finishes (``max_new`` reached, EOS, cancel) it is recycled into
+    the LIVE prefill chunk stream — the engine plans a new admission batch
+    over freed slots while other batches are still mid-chunk, instead of
+    waiting for the current wave to drain to a bucket boundary. Several
+    admission batches can be in flight at once (``_inflight``); each still
+    runs the census'd ``[Bp, bucket]`` chunk programs with the same static
+    shapes, so refill NEVER retraces and never creates a plan-registry
+    entry (asserted at runtime via ``CompiledPlans.misses``). Slot ->
+    group stays ``slot % M`` — group assignment is positional, plans are
+    keyed by (site, shape), and activation quantization is per row
+    (:mod:`repro.ft.quantize`), so WHEN a slot was refilled can never move
+    another request's integer grid: the entangled roll-forward is
+    bit-identical under refill and boundary admission alike (tested as a
+    refill x fail-stop matrix).
+  * **async frontend**: ``submit()`` returns a
+    :class:`~repro.serve.scheduler.RequestHandle` — iterate it to stream
+    tokens from a per-request ring buffer as decode steps land, call
+    ``cancel()`` in any state, set ``Request.deadline_ms`` for an SLA.
+  * **deadline-aware chunk scheduling**
+    (:class:`~repro.serve.scheduler.ChunkScheduler`): admission batches
+    form and advance earliest-deadline-first; decode is never starved more
+    than ``max_prefill_per_step`` chunks per step; ``max_queue`` bounds
+    the wait queue with a typed :class:`AdmissionRejected` at saturation,
+    and queued requests whose deadline lapses are shed loudly before any
+    prefill compute is spent on them (``metrics`` records all of it).
+  * recycled-row zeroing and admission inserts share ONE batched scatter:
+    a landing chunk's ``_scatter_rows`` call carries the pending zero rows
+    in its spare capacity (``zero`` mask), so a steady-state step costs a
+    single scatter — free rows are always zeroed again before the next
+    decode, exactly as under boundary admission.
+
 Fault tolerance (the paper's technique in the serving path): with
 ``ft_mode='entangle'`` the final logits projection of EVERY decode step —
 and of every admission batch's first token — runs as the fused entangled
@@ -70,7 +104,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from typing import Optional, Sequence
+import time
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -88,6 +123,7 @@ from repro.kernels.codec import pack_int8
 from repro.models.api import get_model
 from repro.models.layers import ACT_DTYPE
 from repro.models.transformer import readout_scale
+from repro.serve.scheduler import (ChunkScheduler, RequestHandle, TokenRing)
 
 
 def geometric_buckets(max_seq: int, base: int = 8) -> tuple:
@@ -128,6 +164,18 @@ class ServeConfig:
     prefill_buckets: Optional[Sequence[int]] = None  # None = geometric set
     prefill_chunk: int = 0  # >0: chunk prompts, one chunk per engine step
     prefill_batch: int = 0  # admission batch rows; 0 = max_batch
+    # -- steady-state scheduling (repro.serve.scheduler) ---------------------
+    # mid-flight refill: plan new admission batches over freed slots while
+    # earlier batches are still mid-chunk. False = boundary mode (one
+    # admission batch at a time — the legacy A/B baseline).
+    refill: bool = True
+    # chunked mode: prefill chunks advanced per step before the decode call
+    # (decode is never starved more); unchunked admission ignores it
+    max_prefill_per_step: int = 1
+    max_queue: int = 0  # wait-queue bound; submit raises past it. 0 = off
+    # injectable monotonic clock (seconds) for deadlines/latency metrics;
+    # None = time.monotonic. Tests pass a fake for determinism.
+    clock: Optional[Callable[[], float]] = None
 
 
 @dataclasses.dataclass
@@ -136,6 +184,18 @@ class Request:
     prompt: np.ndarray  # [T] int32
     max_new: int = 16
     out: Optional[np.ndarray] = None
+    # SLA: shed from the wait queue (loudly — iterating the handle raises
+    # DeadlineExceeded) if not admitted within deadline_ms of submit.
+    # None = no deadline (ranks last in the EDF chunk schedule, FIFO).
+    deadline_ms: Optional[float] = None
+    eos_token: Optional[int] = None  # greedy-decoded EOS ends the request
+    # -- engine-owned runtime state (set by submit/step, not the caller) ----
+    # queued | prefill | decoding | done | cancelled | shed
+    status: str = "new"
+    t_submit: float = 0.0
+    t_first: Optional[float] = None  # first-token wall time (TTFT source)
+    t_done: Optional[float] = None
+    tok_times: list = dataclasses.field(default_factory=list)
 
 
 class ServeEngine:
@@ -176,10 +236,22 @@ class ServeEngine:
             raise ValueError(
                 f"prefill_batch={self.Bp} must be in [1, max_batch={B}]")
         # zero admission-batch template: prefill start state AND the zeros
-        # source for batched slot recycling (invariant: free slot = zeros)
+        # source for batched slot recycling (invariant: every free slot's
+        # row is zeroed again before the next decode call)
         self._fresh_prefill = self.model.init_cache(cfg, self.Bp, S)
-        self._pending: Optional[dict] = None  # in-flight admission batch
+        self._inflight: list[dict] = []  # in-flight admission batches
+        self._reserved: set[int] = set()  # slots claimed by in-flight rows
         self._dirty: list[int] = []  # freed slots awaiting batched zeroing
+        self._rings: dict[int, TokenRing] = {}  # id(req) -> token ring
+        self.scatter_calls = 0  # jitted _scatter_rows invocations
+        self.sched = ChunkScheduler(
+            max_prefill_per_step=scfg.max_prefill_per_step,
+            max_queue=scfg.max_queue,
+            clock=scfg.clock or time.monotonic)
+        self._clock = self.sched.clock
+        self.metrics = {"queue_depth_peak": 0, "rejected": 0, "shed": 0,
+                        "refill_admissions": 0, "landings": 0,
+                        "merged_zero_rows": 0, "cancelled": 0}
 
         if scfg.ft_mode == "entangle":
             if B % scfg.ft_M:
@@ -254,17 +326,29 @@ class ServeEngine:
         # step contains ZERO weight-quantization ops (tested via the
         # quantize.TRACE_STATS trace counter)
         self.protected_census = self._protected_shape_census()
+        # every chunk width any admission — boundary or refill — can run:
+        # refill-time plan reuse is checked against this set, because a
+        # refilled batch replays one of exactly these census'd programs
+        self._chunk_widths = self._all_chunk_widths()
         self.plans = None
         self.ft_params = params
         if scfg.ft_mode == "entangle" and scfg.ft_scope != "head":
             self.plans = compile_plans(self.registry, self.protected_census)
+            # census / compile drift fails loudly at startup — a lazy
+            # mid-serve plan entry would mean refill retraced a shape the
+            # startup census missed
+            self.plans.assert_covers(self.protected_census)
             self.ftx = self.ftx.with_plans(self.plans)
             self.ft_params = prepare_params(params, scope=scfg.ft_scope,
                                             packed=scfg.ft_packed)
         if scfg.blocks == "auto":
             self.warm_autotune()
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> RequestHandle:
+        """Enqueue a request and return its async handle (iterate for the
+        token stream; ``cancel()``; ``result()``). Raises
+        :class:`~repro.serve.scheduler.AdmissionRejected` at saturation
+        (``max_queue``) — a typed rejection, never a silent drop."""
         # loud capacity checks: past max_seq the vector cache scatter would
         # silently DROP K/V writes, and a prompt longer than the largest
         # bucket would either retrace per length or OOM the bucket planner —
@@ -280,7 +364,19 @@ class ServeEngine:
                 f"request rid={req.rid} needs {need} positions "
                 f"(prompt {len(req.prompt)} + max_new {req.max_new}) "
                 f"> max_seq={self.scfg.max_seq}")
+        try:
+            self.sched.check_admission(req.rid, len(self.queue))
+        except Exception:
+            self.metrics["rejected"] += 1
+            raise
+        req.status = "queued"
+        req.t_submit = self._clock()
+        ring = TokenRing(req.max_new)
+        self._rings[id(req)] = ring
         self.queue.append(req)
+        self.metrics["queue_depth_peak"] = max(
+            self.metrics["queue_depth_peak"], len(self.queue))
+        return RequestHandle(self, req, ring)
 
     def _bucket_for(self, req: Request) -> int:
         """Smallest configured bucket covering the prompt."""
@@ -317,18 +413,31 @@ class ServeEngine:
         valid = np.arange(self.Bp) < len(taken)
         return jnp.asarray(sids), jnp.asarray(valid)
 
-    def _scatter_rows_impl(self, cache, pcache, sids, valid):
+    def _scatter_rows_impl(self, cache, pcache, sids, valid, zero):
         """Scatter ALL rows of an admission-batch (or zeros-template)
         pytree into the batched cache in ONE call: row j lands in slot
         ``sids[j]``; rows with ``valid[j] == False`` write the slot's own
-        gathered content back (a no-op), so one trace serves every
-        admission size and every recycle flush. ``sids``/``valid`` are
-        traced; the caller guarantees sids are DISTINCT slots."""
+        gathered content back (a no-op), and rows with ``zero[j] == True``
+        write ZEROS instead of their pcache content — recycled-slot
+        zeroing rides in the SAME scatter as the admission insert, so one
+        trace (and one dispatch) serves any mix of admission rows, recycle
+        rows and padding. ``sids``/``valid``/``zero`` are traced; the
+        caller guarantees sids are DISTINCT slots."""
         def ins(big, small):
             cur = jnp.take(big, sids, axis=1)
             v = valid.reshape((1, -1) + (1,) * (big.ndim - 2))
-            return big.at[:, sids].set(jnp.where(v, small, cur))
+            z = zero.reshape((1, -1) + (1,) * (big.ndim - 2))
+            src = jnp.where(z, jnp.zeros_like(small), small)
+            return big.at[:, sids].set(jnp.where(v, src, cur))
         return jax.tree.map(ins, cache, pcache)
+
+    def _scatter(self, pcache, sids, valid, zero):
+        """Host wrapper over the jitted batched scatter: one call = one
+        dispatch (``scatter_calls`` is the trace-count evidence that
+        recycling and insert really share a scatter per step)."""
+        self.cache = self._scatter_rows(
+            self.cache, pcache, sids, jnp.asarray(valid), jnp.asarray(zero))
+        self.scatter_calls += 1
 
     def _model_ft(self, failed_group: Optional[int]):
         """The FT context threaded INTO the model forward pass, or None
@@ -363,8 +472,9 @@ class ServeEngine:
 
     def _head_logits(self, params, h, mask, head, failed_group, ft_fn):
         """Shared head epilogue of decode steps and admission batches:
-        rows where ``mask`` is False are zeroed so their garbage cannot
-        poison the shared activation quantization scale; with ft on,
+        rows where ``mask`` is False are zeroed so their garbage logits
+        are deterministic (activation quantization is PER ROW, so masked
+        rows could not move a live row's grid either way); with ft on,
         ``ft_fn`` (ft_logits_decode / ft_logits_prefill) runs the fused
         entangled int8 GEMM with the startup plan, scaled back to
         head_project's muP readout temperature (argmax-neutral; keeps ft
@@ -416,44 +526,68 @@ class ServeEngine:
     def _census_bump(self, kind: str, sig: tuple):
         self.census[kind][sig] = self.census[kind].get(sig, 0) + 1
 
-    def _plan_admission(self):
-        """Form the next admission batch: pick the first queued request's
-        bucket, then batch every same-bucket queued request (FIFO within
-        the bucket) up to the free-slot / admission-row budget."""
-        if self._pending is not None or not self.queue:
-            return
-        free = [i for i, s in enumerate(self.slots) if s is None]
+    def _plan_admission(self) -> bool:
+        """Form the next admission batch: order the wait queue
+        earliest-deadline-first (FIFO among deadline-less requests — the
+        legacy order when nobody sets deadlines), pick the most urgent
+        request's bucket, then batch every same-bucket queued request (EDF
+        within the bucket) up to the free-slot / admission-row budget.
+
+        With ``refill`` on this runs while other batches are still
+        mid-chunk — freed slots re-enter the live prefill stream
+        immediately; boundary mode admits one batch at a time (legacy).
+        Planned rows RESERVE their slots so concurrent batches never claim
+        the same row. Returns True if a batch was formed."""
+        if not self.queue:
+            return False
+        if self._inflight and not self.scfg.refill:
+            return False  # boundary mode: wait for the in-flight batch
+        free = [i for i, s in enumerate(self.slots)
+                if s is None and i not in self._reserved]
         if not free:
-            return
-        b0 = self._bucket_for(self.queue[0])
+            return False
+        ordered = self.sched.order_queue(self.queue)
+        b0 = self._bucket_for(ordered[0])
+        # refill-time plan reuse: the batch replays a census'd [Bp, bucket]
+        # chunk program — a bucket outside the startup census would retrace
+        assert b0 in self.buckets
         budget = min(len(free), self.Bp)
         take, rest = [], []
-        for req in self.queue:
+        for req in ordered:
             if len(take) < budget and self._bucket_for(req) == b0:
                 take.append(req)
             else:
                 rest.append(req)
         self.queue = rest
+        if self._inflight:
+            # a MID-FLIGHT refill: a new batch enters the live prefill
+            # chunk stream while earlier batches are still mid-chunk —
+            # exactly what boundary mode forbids (its engines report 0)
+            self.metrics["refill_admissions"] += 1
         tokens = np.zeros((self.Bp, b0), np.int32)
         lengths = np.zeros(self.Bp, np.int32)
         for j, req in enumerate(take):
             tokens[j, : len(req.prompt)] = req.prompt
             lengths[j] = len(req.prompt)
-        self._pending = {
-            "reqs": list(zip(free[: len(take)], take)),
+            req.status = "prefill"
+        slots = free[: len(take)]
+        self._reserved.update(slots)
+        self._inflight.append({
+            "reqs": list(zip(slots, take)),
             "tokens": jnp.asarray(tokens),
             "lengths": jnp.asarray(lengths),
             "cache": self._fresh_prefill,
             "h_last": jnp.zeros((self.Bp, self.cfg.d_model), ACT_DTYPE),
             "pos0": 0,
             "bucket": b0,
-        }
+        })
+        return True
 
-    def _advance_prefill(self, failed_group: Optional[int]):
-        """Run ONE chunk of the pending admission batch; on the last chunk,
-        project first tokens and scatter each row's cache into its slot."""
-        p = self._pending
-        assert p is not None
+    def _advance_prefill(self, p: dict, failed_group: Optional[int]):
+        """Run ONE chunk of admission batch ``p``; on the last chunk,
+        project first tokens and scatter the batch's cache rows — plus any
+        deferred recycle-zero rows that fit the spare capacity — into the
+        slot pool in ONE batched scatter."""
         Tb = p["bucket"]
         C = self.scfg.prefill_chunk or Tb
         pos0 = p["pos0"]
@@ -473,33 +607,103 @@ class ServeEngine:
         p["pos0"] = pos0 + sz
         if p["pos0"] < Tb:
             return
-        # admission batch complete: first tokens + ONE batched cache scatter
-        valid = np.zeros(self.Bp, bool)
-        valid[: len(p["reqs"])] = True
+        # admission batch complete: first tokens + ONE batched cache
+        # scatter. Rows whose request was cancelled mid-prefill are masked
+        # invalid (they computed garbage under static shapes but never
+        # land); spare scatter capacity absorbs pending recycle-zero rows
+        # so recycling costs no extra dispatch in steady state.
+        valid = [req is not None for _, req in p["reqs"]]
+        vfull = np.zeros(self.Bp, bool)
+        vfull[: len(valid)] = valid
         head = (None if self.scfg.ft_mode != "entangle"
                 else (self.head_q, self.w_scale))
         first = np.asarray(self._prefill_head(
-            self.ft_params, p["h_last"], jnp.asarray(valid), head,
+            self.ft_params, p["h_last"], jnp.asarray(vfull), head,
             failed_group=failed_group))
-        sids, vmask = self._pad_sids([i for i, _ in p["reqs"]])
-        self.cache = self._scatter_rows(self.cache, p["cache"], sids, vmask)
+        sids = [i for i, _ in p["reqs"]]
+        vrows, zero = list(valid), [False] * len(sids)
+        merge = [i for i in self._dirty
+                 if self.slots[i] is None and i not in self._reserved
+                 and i not in sids][: self.Bp - len(sids)]
+        for i in merge:
+            sids.append(i)
+            vrows.append(True)
+            zero.append(True)
+            self._dirty.remove(i)
+        self.metrics["merged_zero_rows"] += len(merge)
+        spare = [s for s in range(self.scfg.max_batch) if s not in sids]
+        sids = np.asarray(sids + spare[: self.Bp - len(sids)], np.int32)
+        vmask = np.zeros(self.Bp, bool)
+        vmask[: len(vrows)] = vrows
+        zmask = np.zeros(self.Bp, bool)
+        zmask[: len(zero)] = zero
+        self._scatter(p["cache"], jnp.asarray(sids), vmask, zmask)
+        now = self._clock()
         for j, (i, req) in enumerate(p["reqs"]):
+            self._reserved.discard(i)
+            if req is None:  # cancelled mid-prefill: row never lands
+                continue
             self.slots[i] = {"req": req, "toks": [int(first[j])]}
             self.pos[i] = len(req.prompt)
             self.last_tok[i] = first[j]
-            if req.max_new <= 1:
+            req.status = "decoding"
+            self._emit(req, int(first[j]), now)
+            if req.max_new <= 1 or (req.eos_token is not None
+                                    and int(first[j]) == req.eos_token):
                 self._finish(i)
+        self.metrics["landings"] += 1
         # census records BUCKET shapes (admission rows, padded length) —
         # the traced call signature — never raw prompt lengths
         self._census_bump("prefill", (self.Bp, Tb))
-        self._pending = None
+        self._inflight.remove(p)
+
+    def _emit(self, req: Request, tok: int, now: float):
+        """Push a generated token into the request's streaming ring and
+        stamp the latency bookkeeping (TTFT, per-token times)."""
+        if req.t_first is None:
+            req.t_first = now
+        req.tok_times.append(now)
+        ring = self._rings.get(id(req))
+        if ring is not None:
+            ring.push(tok)
 
     def _finish(self, i: int):
         s = self.slots[i]
         req = s["req"]
         req.out = np.asarray(s["toks"][: req.max_new], np.int32)
+        req.status = "done"
+        req.t_done = self._clock()
+        self._rings.pop(id(req), None)  # handle keeps its own ring ref
         self.done.append(req)
         self._recycle(i)
+
+    def cancel(self, req: Request):
+        """Abandon a request in whatever state it is in: queued requests
+        leave the queue; mid-prefill rows are voided (their chunk keeps
+        computing under static shapes but never claims a slot, and the
+        reserved slot frees immediately); decoding slots finalize their
+        partial output and recycle. Finished requests are a no-op."""
+        if req.status in ("done", "cancelled", "shed"):
+            return
+        if req.status == "queued":
+            self.queue = [r for r in self.queue if r is not req]
+        elif req.status == "prefill":
+            for p in self._inflight:
+                for j, (slot, r) in enumerate(p["reqs"]):
+                    if r is req:
+                        p["reqs"][j] = (slot, None)
+                        self._reserved.discard(slot)
+        else:  # decoding
+            for i, s in enumerate(self.slots):
+                if s is not None and s["req"] is req:
+                    req.out = np.asarray(s["toks"], np.int32)
+                    self._recycle(i)
+        req.status = "cancelled"
+        if req.out is None:
+            req.out = np.zeros(0, np.int32)
+        req.t_done = self._clock()
+        self._rings.pop(id(req), None)
+        self.metrics["cancelled"] += 1
 
     def _recycle(self, i: int):
         """Explicit slot recycling: mark the slot free and queue its cache
@@ -507,26 +711,34 @@ class ServeEngine:
         see the old request's state.
 
         Admission would overwrite the row anyway, so this buys the
-        invariant "a free slot holds zeros between engine steps" — the
-        zeroing itself is DEFERRED and flushed once per step in one batched
-        scatter (``_flush_recycled``), never one jitted insert per finished
-        request."""
+        invariant "a free slot's row is zeroed again before the next
+        decode" — the zeroing itself is DEFERRED: it rides in the next
+        landing scatter's spare capacity (``_advance_prefill``) or, when
+        no landing absorbs it, one batched ``_flush_recycled`` scatter
+        before decode — never one jitted insert per finished request."""
         self.slots[i] = None
         self.pos[i] = 0
         self.last_tok[i] = 0
         self._dirty.append(i)
 
     def _flush_recycled(self):
-        """Zero every freed slot's cache row in one batched scatter per Bp
-        slots. Slots re-admitted later in the same step are skipped (their
-        row now belongs to a new tenant)."""
-        dirty = sorted({i for i in self._dirty if self.slots[i] is None})
-        self._dirty = []
-        while dirty:
-            batch, dirty = dirty[: self.Bp], dirty[self.Bp :]
+        """Zero freed slot rows that no landing scatter absorbed, one
+        batched scatter per Bp slots. Re-occupied slots are skipped (their
+        row was fully overwritten at landing); slots reserved by an
+        in-flight batch stay queued for later (landing overwrites them —
+        unless the row gets cancelled, in which case a later flush zeroes
+        them)."""
+        keep, flush = [], []
+        for i in sorted(set(self._dirty)):
+            if self.slots[i] is not None:
+                continue
+            (keep if i in self._reserved else flush).append(i)
+        self._dirty = keep
+        while flush:
+            batch, flush = flush[: self.Bp], flush[self.Bp :]
             sids, vmask = self._pad_sids(batch)
-            self.cache = self._scatter_rows(
-                self.cache, self._fresh_prefill, sids, vmask)
+            self._scatter(self._fresh_prefill, sids,
+                          np.asarray(vmask), np.asarray(vmask))
 
     def step(self, failed_group: Optional[int] = None) -> int:
         """One engine step: advance the bucketed admission pipeline, then
@@ -535,9 +747,13 @@ class ServeEngine:
 
         Unchunked (``prefill_chunk=0``): every bucket batch completes in a
         single call, and the step keeps admitting further batches while
-        free slots and queued requests remain. Chunked: at most ONE prefill
-        chunk runs per step before the decode call, so a long prompt batch
-        being admitted never stalls the decode latency of active slots.
+        free slots and queued requests remain. Chunked: at most
+        ``max_prefill_per_step`` prefill chunks (default 1, EDF-ordered
+        across the in-flight batches) run per step before the decode call,
+        so a long prompt batch being admitted never stalls the decode
+        latency of active slots — and with ``refill`` on, slots freed by
+        finishing requests are planned straight back into the live chunk
+        stream instead of waiting for the wave to drain.
 
         ``failed_group`` injects a fail-stop into that entangled group's
         head-GEMM compute for this step — decode and admission projections
@@ -551,14 +767,35 @@ class ServeEngine:
                 raise ValueError(
                     f"failed_group={failed_group} out of range for "
                     f"ft_M={self.scfg.ft_M}")
-        while True:
-            if self._pending is None:
-                self._plan_admission()
-            if self._pending is None:
+        # shed lapsed deadlines BEFORE spending any prefill compute on
+        # them — they would miss their SLA anyway, and the refunded chunk
+        # budget goes to requests that can still make it
+        if any(r.deadline_ms is not None for r in self.queue):
+            kept, shed = self.sched.shed_expired(self.queue)
+            self.queue = kept
+            for req in shed:
+                req.status = "shed"
+                req.out = np.zeros(0, np.int32)
+                req.t_done = self._clock()
+                self._rings.pop(id(req), None)
+                self.metrics["shed"] += 1
+        # admission: plan (EDF over the wait queue; with refill, freed
+        # slots re-enter the stream mid-flight) and advance up to the
+        # chunk budget. Unchunked admission completes a batch per call, so
+        # the budget is infinite and the loop drains queue + free slots
+        # within the step exactly like boundary admission always did.
+        budget = (self.scfg.max_prefill_per_step if self.scfg.prefill_chunk
+                  else float("inf"))
+        while budget > 0:
+            self._plan_admission()
+            p = self.sched.pick_batch(self._inflight)
+            if p is None:
                 break
-            self._advance_prefill(failed_group)
-            if self.scfg.prefill_chunk:
-                break  # one chunk per step: decode latency stays flat
+            self._advance_prefill(p, failed_group)
+            budget -= 1
+        # zero any freed rows no landing scatter absorbed: decode below
+        # sees exactly the state boundary admission would have produced
+        self._flush_recycled()
         active_idx = [i for i, s in enumerate(self.slots) if s is not None]
         if active_idx:
             B = self.scfg.max_batch
@@ -573,15 +810,27 @@ class ServeEngine:
             self.decode_calls += 1
             self._census_bump("decode", (len(active_idx), B))
             nxt = np.asarray(nxt)
+            now = self._clock()
             for i in active_idx:
                 s = self.slots[i]
+                req = s["req"]
                 self.pos[i] += 1
-                s["toks"].append(int(nxt[i]))
+                tok = int(nxt[i])
+                s["toks"].append(tok)
                 self.last_tok[i] = nxt[i]
-                if len(s["toks"]) >= s["req"].max_new:
+                self._emit(req, tok, now)
+                if (len(s["toks"]) >= req.max_new
+                        or (req.eos_token is not None
+                            and tok == req.eos_token)):
                     self._finish(i)
-        self._flush_recycled()
         return sum(s is not None for s in self.slots)
+
+    def idle(self) -> bool:
+        """True when the engine has nothing to serve: empty wait queue, no
+        admission batch mid-chunk, every slot free. Open-loop drivers poll
+        this to decide between stepping and waiting for the next arrival."""
+        return (not self.queue and not self._inflight
+                and all(s is None for s in self.slots))
 
     def run_to_completion(self, max_steps: int = 1000,
                           failed_group: Optional[int] = None) -> list[Request]:
@@ -589,9 +838,7 @@ class ServeEngine:
         decode step and admission projection — the strongest roll-forward
         drill."""
         steps = 0
-        while (self.queue or self._pending is not None
-               or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
+        while not self.idle() and steps < max_steps:
             self.step(failed_group=failed_group)
             steps += 1
         return self.done
@@ -629,6 +876,22 @@ class ServeEngine:
             won[(site, shape)] = w
         return won
 
+    def _all_chunk_widths(self) -> frozenset:
+        """Every prefill-chunk width any admission can run, derived from
+        the bucket set and chunk size alone. Mid-flight refill replays
+        these SAME widths — a refilled batch is just another [Bp, bucket]
+        program — which is why refill can never retrace or miss a compiled
+        plan (``CompiledPlans.misses`` stays 0; tested)."""
+        widths = set()
+        for Tb in self.buckets:
+            step = self.scfg.prefill_chunk or Tb
+            pos0 = 0
+            while pos0 < Tb:
+                sz = min(step, Tb - pos0)
+                widths.add(sz)
+                pos0 += sz
+        return frozenset(widths)
+
     def _protected_shape_census(self) -> dict:
         """{(site, (M, Bg, K, N)): blocks} for every in-model protected
         GEMM the engine can trace, enumerated by abstract-evaluating the
@@ -645,15 +908,7 @@ class ServeEngine:
                 p, jnp.zeros((B, 1), jnp.int32), c,
                 jnp.zeros((B,), jnp.int32), self.cfg, ft=ctx),
             self.params, self.cache)
-        widths = set()
-        for Tb in self.buckets:
-            step = self.scfg.prefill_chunk or Tb
-            pos0 = 0
-            while pos0 < Tb:
-                sz = min(step, Tb - pos0)
-                widths.add(sz)
-                pos0 += sz
-        for C in sorted(widths):
+        for C in sorted(self._all_chunk_widths()):
             jax.eval_shape(
                 lambda p, c, _C=C: self.model.prefill_chunk(
                     p, jnp.zeros((self.Bp, _C), jnp.int32), self.cfg, c,

@@ -1,0 +1,238 @@
+"""Steady-state scheduling layer of the serving engine: deadline-aware
+chunk scheduling, loud admission control, and the async per-request
+frontend (token iterator / cancel / deadline).
+
+The engine itself stays a synchronous step machine — one jitted decode per
+:meth:`~repro.serve.ServeEngine.step`, static shapes everywhere. This
+module adds the POLICY around it:
+
+  * :class:`ChunkScheduler` — picks WHICH queued requests form the next
+    admission batch and WHICH in-flight admission batch advances its next
+    prefill chunk, earliest-deadline-first (EDF; deadline-less requests
+    rank last, FIFO among themselves). Decode is never starved: at most
+    ``max_prefill_per_step`` chunks run per engine step before the decode
+    call, whatever the queue depth.
+  * admission control — ``max_queue > 0`` bounds the wait queue; past it
+    :meth:`ChunkScheduler.check_admission` raises :class:`AdmissionRejected`
+    (a TYPED rejection, never a silent drop), and the engine's
+    ``metrics["rejected"]`` / ``metrics["queue_depth_peak"]`` expose the
+    shed load. Queued requests whose deadline expires before admission are
+    shed loudly too (:meth:`shed_expired`; iterating their handle raises
+    :class:`DeadlineExceeded`).
+  * :class:`RequestHandle` — what ``submit()`` returns: a per-request
+    token ITERATOR draining a fixed-capacity ring buffer
+    (:class:`TokenRing`) the engine pushes into as each decode step lands.
+    Iterating drives ``engine.step()`` on demand when the ring is empty, so
+    a plain ``for tok in handle:`` loop streams tokens while the engine
+    keeps serving every other slot; ``cancel()`` works in all three request
+    states (queued / mid-prefill / decoding).
+
+Nothing here touches jitted code: scheduling decisions only reorder host
+lists and flip mask values, so program shapes — and therefore the FT
+plans and the entangled roll-forward — are identical under every policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator, List, Optional
+
+
+class AdmissionRejected(RuntimeError):
+    """Typed rejection raised by ``submit()`` at saturation (wait queue at
+    ``max_queue``). Carries the observed queue depth so callers can
+    backpressure instead of retry-storming."""
+
+    def __init__(self, rid, depth: int, max_queue: int):
+        self.rid, self.depth, self.max_queue = rid, depth, max_queue
+        super().__init__(
+            f"request rid={rid} rejected: wait queue at max_queue="
+            f"{max_queue} (depth {depth})")
+
+
+class DeadlineExceeded(RuntimeError):
+    """Raised when iterating a handle whose request was shed because its
+    ``deadline_ms`` expired before service completed admission."""
+
+    def __init__(self, rid, deadline_ms: float):
+        self.rid, self.deadline_ms = rid, deadline_ms
+        super().__init__(
+            f"request rid={rid} shed: deadline_ms={deadline_ms} expired "
+            f"before admission")
+
+
+class TokenRing:
+    """Fixed-capacity int token ring buffer — the per-request streaming
+    channel between the engine's decode loop (producer) and the request
+    handle's iterator (consumer). Capacity is ``max_new`` so the producer
+    can never overrun: the engine emits at most one token per request per
+    step and stops at ``max_new``."""
+
+    __slots__ = ("_buf", "_head", "_size")
+
+    def __init__(self, capacity: int):
+        self._buf: List[int] = [0] * max(int(capacity), 1)
+        self._head = 0  # next pop index
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    def push(self, tok: int):
+        if self._size >= len(self._buf):
+            raise OverflowError("token ring full — engine emitted past "
+                                "max_new, which step() must prevent")
+        self._buf[(self._head + self._size) % len(self._buf)] = int(tok)
+        self._size += 1
+
+    def pop(self) -> int:
+        if not self._size:
+            raise IndexError("pop from empty token ring")
+        tok = self._buf[self._head]
+        self._head = (self._head + 1) % len(self._buf)
+        self._size -= 1
+        return tok
+
+
+@dataclasses.dataclass
+class ChunkScheduler:
+    """Earliest-deadline-first chunk scheduling + loud admission control.
+
+    Pure host-side policy over the engine's queues: no jax, no shapes.
+    ``clock`` is injectable (tests pass a fake monotonic clock) and
+    defaults to :func:`time.monotonic`.
+    """
+
+    max_prefill_per_step: int = 1  # chunk budget before each decode call
+    max_queue: int = 0  # wait-queue bound; 0 = unbounded
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        if self.max_prefill_per_step < 1:
+            raise ValueError(
+                f"max_prefill_per_step must be >= 1, got "
+                f"{self.max_prefill_per_step}")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+
+    def check_admission(self, rid, queue_depth: int):
+        """Raise :class:`AdmissionRejected` when the wait queue is full."""
+        if self.max_queue and queue_depth >= self.max_queue:
+            raise AdmissionRejected(rid, queue_depth, self.max_queue)
+
+    @staticmethod
+    def _key(req, j: int):
+        """EDF sort key: absolute deadline (submit time + deadline_ms),
+        +inf for deadline-less requests; position breaks ties FIFO."""
+        dl = getattr(req, "deadline_ms", None)
+        if dl is None:
+            return (float("inf"), j)
+        return (req.t_submit + dl / 1e3, j)
+
+    def order_queue(self, queue: list) -> list:
+        """Queued requests in EDF order (stable: FIFO among equal/absent
+        deadlines). Returns a NEW list; the caller owns the queue."""
+        return [req for _, req in
+                sorted(((self._key(r, j), r) for j, r in enumerate(queue)),
+                       key=lambda kr: kr[0])]
+
+    def pick_batch(self, batches: list) -> Optional[dict]:
+        """Which in-flight admission batch advances its next chunk:
+        earliest deadline first; among equal (or absent) deadlines,
+        SHORTEST REMAINING PREFILL first, then FIFO. The SRJF tie-break is
+        what turns mid-flight refill into a TTFT win: a short batch
+        admitted into freed slots lands — i.e. emits its first tokens —
+        after a couple of chunks while a long batch keeps streaming,
+        instead of queuing behind the long batch's whole chunk tail."""
+        if not batches:
+            return None
+        def batch_key(jp):
+            j, p = jp
+            reqs = [r for _, r in p["reqs"] if r is not None]
+            if not reqs:
+                return (float("-inf"), 0, j)  # all-cancelled: drain first
+            dl = min(self._key(r, j)[0] for r in reqs)
+            return (dl, p["bucket"] - p["pos0"], j)
+        return min(enumerate(batches), key=batch_key)[1]
+
+    def shed_expired(self, queue: list, now: Optional[float] = None) -> tuple:
+        """Split the wait queue into (kept, shed): queued requests whose
+        absolute deadline has passed are shed — they would miss their SLA
+        anyway, and shedding them BEFORE prefill refunds the chunk budget
+        to requests that can still make it. Requests already admitted
+        (mid-prefill or decoding) are never shed: their compute is sunk and
+        their slots free up in bounded time."""
+        now = self.clock() if now is None else now
+        kept, shed = [], []
+        for req in queue:
+            dl = getattr(req, "deadline_ms", None)
+            if dl is not None and now > req.t_submit + dl / 1e3:
+                shed.append(req)
+            else:
+                kept.append(req)
+        return kept, shed
+
+
+class RequestHandle:
+    """Async frontend of one submitted request: iterate to stream tokens,
+    ``cancel()`` to abandon it, ``result()`` to drain to completion.
+
+    The iterator pops the per-request :class:`TokenRing`; when the ring is
+    empty and the request unfinished, it drives ``engine.step()`` — each
+    step advances EVERY active slot, so interleaved consumption of many
+    handles costs the same total steps as ``run_to_completion``.
+    """
+
+    __slots__ = ("engine", "req", "ring", "_emitted")
+
+    def __init__(self, engine, req, ring: TokenRing):
+        self.engine, self.req, self.ring = engine, req, ring
+        self._emitted = 0
+
+    # -- state ----------------------------------------------------------------
+
+    @property
+    def rid(self):
+        return self.req.rid
+
+    @property
+    def status(self) -> str:
+        """queued | prefill | decoding | done | cancelled | shed"""
+        return self.req.status
+
+    @property
+    def done(self) -> bool:
+        return self.req.status in ("done", "cancelled", "shed")
+
+    # -- streaming ------------------------------------------------------------
+
+    def tokens(self) -> Iterator[int]:
+        """Stream this request's generated tokens as they land. Raises
+        :class:`DeadlineExceeded` if the request was (or gets) shed."""
+        while True:
+            if self.ring and len(self.ring):
+                self._emitted += 1
+                yield self.ring.pop()
+                continue
+            if self.req.status == "shed":
+                raise DeadlineExceeded(self.req.rid, self.req.deadline_ms)
+            if self.done:
+                return
+            self.engine.step()
+
+    def __iter__(self) -> Iterator[int]:
+        return self.tokens()
+
+    def result(self) -> "object":
+        """Drain to completion; returns the finished Request (``.out`` holds
+        every generated token, including any already streamed)."""
+        for _ in self.tokens():
+            pass
+        return self.req
+
+    def cancel(self):
+        """Abandon the request in whatever state it is in: queued requests
+        leave the queue, mid-prefill rows are voided (their chunk rows keep
+        computing garbage — static shapes — but never claim a slot),
+        decoding slots finalize their partial output and recycle."""
+        self.engine.cancel(self.req)

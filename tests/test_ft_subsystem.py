@@ -61,11 +61,13 @@ def test_protected_matmul_faithful_and_grouping_invariant():
     _, w_scale = quantize_weight(w)
     _, a_scale = quantize_acts(x, plan, x.shape[1])
     # worst-case rounding: K terms, each off by <= half a grid step per
-    # operand (cross term negligible and covered by the 0.25 slack)
+    # operand (cross term negligible and covered by the 0.25 slack).
+    # a_scale is PER ROW ([R, 1]); the coarsest row's grid bounds them all.
     K = x.shape[1]
-    bound = K * (0.5 * np.max(np.abs(w)) / float(a_scale)
+    a_min = float(np.min(np.asarray(a_scale)))
+    bound = K * (0.5 * np.max(np.abs(w)) / a_min
                  + 0.5 * np.max(np.abs(x)) / float(w_scale)
-                 + 0.25 / float(a_scale * w_scale))
+                 + 0.25 / (a_min * float(w_scale)))
     assert np.max(np.abs(got - ref)) <= bound
     rr = np.asarray(protected_matmul(x, w, plan=plan, contiguous=False))
     cont = np.asarray(protected_matmul(x, w, plan=plan, contiguous=True))
@@ -146,5 +148,15 @@ def test_pretuned_seed_cache_cold_hit(tmp_path, monkeypatch):
         sites = {s for s, _ in eng.census["protected"]}
         assert {"qkv.q", "qkv.k", "qkv.v",
                 "mlp.gate", "mlp.up", "mlp.down", "out.o"} <= sites
+        # steady-state refill path: a chunked refill engine only ever
+        # replays census'd [Bp, chunk] shapes, so its cold start must be
+        # sweep-free off the same shipped cache too
+        eng2 = ServeEngine(
+            cfg, ServeConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                             refill=True, ft_mode="entangle", ft_M=4,
+                             ft_scope="all", blocks="auto"), params)
+        assert cache.sweeps == 0, \
+            "refill-path chunk shapes missing from pretuned seed cache"
+        assert eng2.plans.misses == 0
     finally:
         autotune.reset_cache(None)

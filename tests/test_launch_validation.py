@@ -23,6 +23,9 @@ def _argv(*extra):
     (["--prefill-chunk", "-3"], "prefill-chunk"),
     (["--prefill-buckets", "8,banana"], "comma-separated"),
     (["--prefill-buckets", "8,512", "--max-seq", "64"], "max-seq"),
+    (["--arrival-rate", "-1.5"], "--arrival-rate"),
+    (["--deadline-ms", "0"], "--deadline-ms"),
+    (["--deadline-ms", "-250"], "--deadline-ms"),
 ])
 def test_bad_args_fail_at_parse_time(monkeypatch, capsys, extra, msg):
     monkeypatch.setattr(sys, "argv", _argv(*extra))
@@ -30,6 +33,19 @@ def test_bad_args_fail_at_parse_time(monkeypatch, capsys, extra, msg):
         launch_serve.main()
     assert e.value.code == 2, "argparse .error exits with code 2"
     assert msg in capsys.readouterr().err
+
+
+def test_steady_state_flags_accepted_at_parse_time(monkeypatch, capsys):
+    """Valid --arrival-rate / --deadline-ms / --no-refill combinations
+    parse cleanly: the parser takes them and dies on the NEXT invalid
+    flag, proving their validation passed."""
+    monkeypatch.setattr(sys, "argv", _argv(
+        "--arrival-rate", "4.0", "--deadline-ms", "500", "--no-refill",
+        "--prefill-chunk", "-1"))
+    with pytest.raises(SystemExit) as e:
+        launch_serve.main()
+    assert e.value.code == 2
+    assert "prefill-chunk" in capsys.readouterr().err
 
 
 def test_new_scopes_accepted_at_parse_time(monkeypatch, capsys):
