@@ -25,8 +25,9 @@ v2 architecture — compiled at the top, pluggable at the bottom:
                 and FTContext, the scope-aware object threaded through
                 models/api -> transformer.apply_stack -> layers
   heads.py      the serving head entries (ft_logits / _decode / _prefill,
-                quantize_head); ``repro.serve.ft_logits`` is a deprecated
-                shim over this module
+                quantize_head) — the ONLY surface for the protected head
+                (the old ``repro.serve.ft_logits`` shim is removed;
+                ``repro.serve`` re-exports these names directly)
 
 Scope model (``ServeConfig.ft_scope``): ``"head"`` protects the vocab
 projection, ``"qkv"`` adds the mixer input projections (attention Q/K/V,

@@ -1,6 +1,7 @@
 """Entangled int8 logits projection — the head-GEMM entries of the
-protected subsystem (formerly ``repro.serve.ft_logits``, now a deprecated
-shim over this module).
+protected subsystem (formerly ``repro.serve.ft_logits``; that shim is
+REMOVED — this module is the only surface, with :mod:`repro.serve`
+re-exporting the names for convenience).
 
 The head GEMM (hidden [B, D] x head [D, V]) is sesquilinear, so it runs
 directly on entangled inputs through :func:`repro.ft.protected_matmul`:

@@ -107,4 +107,21 @@ sizes and pretuned winners that served the first wave serve every refill
 widths or prefill buckets that change the census, regenerate
 ``pretuned/interpret_cpu.json`` so cold refill starts stay sweep-free
 (gated by tests/test_ft_subsystem.py::test_pretuned_seed_cache_cold_hit).
+
+Token-packed serving note (``ServeConfig.token_budget > 0``): the packed
+step gathers up to token_budget TRUE prompt tokens from every in-flight
+admission batch into ONE [Rp, Cp] program (Rp = token_budget //
+prefill_chunk rows, Cp = prefill_chunk columns), so the whole admission
+pipeline compiles to a single prefill shape — the census holds exactly
+one entry and the protected-GEMM registry one row-count (token_budget)
+per site. That density is also why the FT overhead per USEFUL token
+drops: the entangled codec (quantize + entangle + disentangle) costs
+linearly in program rows, and packed rows carry no bucket padding, so
+every codec row is a real token instead of pad. Tune token_budget as the
+largest multiple of prefill_chunk the accelerator keeps dense (it must
+not exceed max_batch * prefill_chunk — each row needs a staging slot);
+raising it amortizes per-call overhead, lowering it bounds the
+admission work per step and keeps decode ITL flat. Packed shapes (rows
+= token_budget) are seeded in ``pretuned/interpret_cpu.json`` alongside
+the chunked ones — regenerate when changing token_budget geometry.
 """

@@ -17,7 +17,11 @@ engine's prefill/decode shape census and the autotune warmup counters.
 Admission is the bucketed, chunked batched prefill pipeline:
 ``--prefill-buckets 8,16,32`` overrides the geometric default length
 buckets, ``--prefill-chunk C`` interleaves C-token prefill chunks with
-decode steps (0 = whole bucket per call).
+decode steps (0 = whole bucket per call), and ``--token-budget N`` turns
+on token-packed admission — up to N prompt tokens per step, drawn from
+ALL in-flight admission batches into ONE fixed-shape token-parallel
+program (requires ``--prefill-chunk > 0``, N a multiple of it, and
+``N / prefill-chunk <= max-batch`` rows; all checked at parse time).
 
 Steady-state flags: ``--arrival-rate r`` replays a seeded open-loop
 Poisson arrival trace (r requests/sec; 0 = submit the whole wave up
@@ -107,6 +111,26 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
                      f"would drill a different group than requested")
     if args.prefill_chunk < 0:
         ap.error(f"--prefill-chunk must be >= 0, got {args.prefill_chunk}")
+    if args.token_budget < 0:
+        ap.error(f"--token-budget must be >= 0, got {args.token_budget}")
+    if args.token_budget:
+        # the packed program is [token_budget / prefill_chunk rows x
+        # prefill_chunk tokens] — the budget must tile exactly into
+        # chunk-wide rows, and every row stages in a distinct slot
+        if args.prefill_chunk <= 0:
+            ap.error(f"--token-budget ({args.token_budget}) requires "
+                     f"--prefill-chunk > 0: packed rows are prefill-chunk "
+                     f"tokens wide")
+        if args.token_budget % args.prefill_chunk:
+            ap.error(f"--token-budget ({args.token_budget}) must be a "
+                     f"multiple of --prefill-chunk ({args.prefill_chunk}) "
+                     f"— the packed program has ONE compiled shape, so "
+                     f"the budget must tile exactly into chunk-wide rows")
+        if args.token_budget // args.prefill_chunk > args.max_batch:
+            ap.error(f"--token-budget/--prefill-chunk = "
+                     f"{args.token_budget // args.prefill_chunk} packed "
+                     f"rows > --max-batch ({args.max_batch}): every packed "
+                     f"row stages in a distinct slot")
     buckets = None
     if args.prefill_buckets:
         try:
@@ -157,6 +181,12 @@ def main():
                     help=">0: split bucketed prefill into chunks of this "
                          "many tokens, one chunk per engine step "
                          "(interleaved with decode)")
+    ap.add_argument("--token-budget", type=int, default=0,
+                    help=">0: token-packed admission — pack up to this "
+                         "many prompt tokens per step from ALL in-flight "
+                         "admission batches into one fixed-shape program "
+                         "(requires --prefill-chunk > 0; must be a "
+                         "multiple of it; budget/chunk rows <= max-batch)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help=">0: open-loop seeded Poisson arrivals at this "
                          "many requests/sec (0 = submit the whole wave "
@@ -186,7 +216,7 @@ def main():
         ft_mode=args.ft_mode, ft_M=args.ft_M, ft_scope=args.ft_scope,
         blocks=(args.blocks or None),
         prefill_buckets=buckets, prefill_chunk=args.prefill_chunk,
-        refill=not args.no_refill)
+        token_budget=args.token_budget, refill=not args.no_refill)
     failed = args.failed_group if args.failed_group >= 0 else None
 
     eng = ServeEngine(cfg, scfg, params)

@@ -40,6 +40,13 @@ into its cache. Returns the final-norm'd hidden states [B, C, D] (the
 serving engine gathers each row's ``lengths-1`` column and projects it via
 head_project or the entangled FT head) and the filled cache.
 
+``prefill_packed`` is the token-packed variant (decoder-only): every row of
+``tokens`` [R, C] is one chunk of a DIFFERENT request and ``pos0`` is a
+TRACED int32 vector [R] of per-row offsets, so one compiled [R, C] shape
+serves every packing mix — the serving engine's fixed-budget token packer
+(``ServeConfig.token_budget``) gathers rows from all in-flight admission
+batches into this single program per step.
+
 batch dicts:
   dense/moe/ssm/hybrid: {tokens [B,T]}
   vlm:    {tokens [B,T], patch_embeds [B,P,D]}   (frontend stub)
@@ -65,6 +72,7 @@ class Model(NamedTuple):
     forward_train: Callable
     prefill: Callable
     prefill_chunk: Callable  # bucketed/chunked batched prefill (serving)
+    prefill_packed: Callable  # token-packed prefill (per-row traced offsets)
     decode_step: Callable
     decode_hidden: Callable  # pre-head hidden states for the FT serving path
     head_project: Callable  # (params, h [B, D], cfg) -> logits [B, V]
@@ -159,6 +167,34 @@ def _dec_prefill_chunk(p, tokens, cfg: ModelConfig, cache, *, pos0: int = 0,
     return T.final_hidden(p["embed"], h, cfg), new_cache
 
 
+def _dec_prefill_packed(p, tokens, cfg: ModelConfig, cache, *, pos0,
+                        lengths=None, ft=None):
+    """Token-packed prefill: tokens [R, C] where every ROW is one chunk of a
+    DIFFERENT request, row r at absolute positions pos0[r]..pos0[r]+C-1.
+    ``pos0`` is a TRACED int32 vector [R] (not static like prefill_chunk's
+    offset), so ONE compiled [R, C] shape serves every mix of co-packed
+    requests/offsets; ``lengths`` [R] are the rows' true prompt lengths.
+
+    ``cache`` holds the R rows' per-request state (the engine gathers them
+    from its slot-indexed staging cache by token metadata and zeroes rows
+    starting at offset 0). Linear KV/latent caches are written by per-row
+    scatter and attended over their full extent under a per-row causal
+    mask; rolling-window buffers and the Mamba/RG-LRU conv tails + carried
+    states use the same length-masked machinery as prefill_chunk with the
+    offset broadcast per row — all bitwise identical to per-batch chunking
+    (masked attention terms are exact zeros; recurrences are gated
+    identities on pad steps). Returns final-norm'd hidden states [R, C, D]
+    + the filled row cache."""
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    grid = pos0[:, None] + jnp.arange(tokens.shape[1])[None]
+    x = T.embed_tokens(p["embed"], tokens, cfg,
+                       pos=(grid if "pos" in p["embed"] else None))
+    h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache,
+                                 pos=pos0, mode="prefill", lengths=lengths,
+                                 ft=ft)
+    return T.final_hidden(p["embed"], h, cfg), new_cache
+
+
 def _dec_decode_hidden(p, tok, cache, pos, cfg: ModelConfig, ft=None):
     x = T.embed_tokens(p["embed"], tok, cfg, pos=pos)
     h, new_cache = T.apply_stack(p["stack"], x, cfg=cfg, caches=cache,
@@ -189,6 +225,7 @@ DECODER_MODEL = Model(
     forward_train=_dec_forward_train,
     prefill=_dec_prefill,
     prefill_chunk=_dec_prefill_chunk,
+    prefill_packed=_dec_prefill_packed,
     decode_step=_dec_decode,
     decode_hidden=_dec_decode_hidden,
     head_project=_head_project,
@@ -365,11 +402,19 @@ def _ed_prefill_chunk(p, tokens, cfg: ModelConfig, cache, *, pos0: int = 0,
         "frames and runs whole-prompt (_ed_prefill)")
 
 
+def _ed_prefill_packed(p, tokens, cfg: ModelConfig, cache, *, pos0,
+                       lengths=None, ft=None):
+    raise NotImplementedError(
+        "token-packed prefill is decoder-only; enc-dec prefill needs "
+        "frames and runs whole-prompt (_ed_prefill)")
+
+
 ENCDEC_MODEL = Model(
     init=_ed_init,
     forward_train=_ed_forward_train,
     prefill=_ed_prefill,
     prefill_chunk=_ed_prefill_chunk,
+    prefill_packed=_ed_prefill_packed,
     decode_step=_ed_decode,
     decode_hidden=_ed_decode_hidden,
     head_project=_head_project,

@@ -267,12 +267,22 @@ def attend(q, k, v, *, kind: str, window: int = 0, kv_len: int = 0,
 
 
 def _prefill_window_inner(q, k, v, qpos, kabs, window, scale):
-    """Materialized abs-position-masked attention (one query band)."""
+    """Materialized abs-position-masked attention (one query band).
+
+    ``qpos`` is [T] (one shared query offset — the bucketed chunk path) or
+    [B, T] (per-row offsets — the token-packed path, where every row of
+    the program is a DIFFERENT request at its own prefill offset).
+    ``window == 0`` means plain causal (no lower bound)."""
     s = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     ka = kabs[:, None, None, None, :]  # [B, 1, 1, 1, S]
-    qp = qpos[None, None, None, :, None]  # [1, 1, 1, T, 1]
-    ok = (ka >= 0) & (ka <= qp) & (ka > qp - window)
+    if qpos.ndim == 2:  # [B, T] per-row query positions
+        qp = qpos[:, None, None, :, None]
+    else:
+        qp = qpos[None, None, None, :, None]  # [1, 1, 1, T, 1]
+    ok = (ka >= 0) & (ka <= qp)
+    if window:
+        ok = ok & (ka > qp - window)
     s = jnp.where(ok, s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
@@ -311,7 +321,44 @@ def attend_prefill_window(q, k, v, *, qpos, kabs, window: int,
         vs = jnp.concatenate([v[:, :, :S_c], v[:, :, lo : S_c + i1]], axis=2)
         kab = jnp.concatenate([kabs[:, :S_c], kabs[:, lo : S_c + i1]], axis=1)
         outs.append(_prefill_window_inner(
-            q[:, :, :, i0:i1], ks, vs, qpos[i0:i1], kab, window, scale))
+            q[:, :, :, i0:i1], ks, vs, qpos[..., i0:i1], kab, window, scale))
+    return jnp.concatenate(outs, axis=3)
+
+
+def attend_prefill_packed(q, k, v, *, qpos, kabs=None,
+                          scale: float | None = None, qb: int = DEFAULT_QB):
+    """Per-row-offset causal prefill attention (token-packed serving).
+
+    q [B,Hkv,G,T,dk] holds one chunk per row where every row belongs to a
+    DIFFERENT request at its own prefill offset: row b's queries sit at
+    absolute positions ``qpos[b]`` ([B, T], ``qpos[b, t] = off_b + t``).
+    k/v [B,Hkv,S,*] are the row's FULL linear cache (all S slots, slot s
+    holding absolute position s) with the chunk's keys already scattered in
+    at ``qpos`` — so one fixed [B, T] program shape serves every mix of
+    per-row offsets. ``kabs`` [B, S] overrides the slot->position map
+    (default arange: the linear cache).
+
+    Masking is per-row causal (kpos <= qpos). Keys past a row's written
+    prefix are excluded by causality alone, and because masked scores
+    underflow to exact 0.0 after softmax, attending over the full S slots
+    is BITWISE identical to the per-batch chunked path's ``[:off+T]``
+    slice (the PR 3 invariant that makes packed == chunked bit-identical).
+
+    Large T is processed in query bands of ``qb`` (causal needs every
+    earlier key, so only queries band — live scores stay O(qb * S))."""
+    scale = scale or (1.0 / math.sqrt(q.shape[-1]))
+    B = q.shape[0]
+    T = q.shape[3]
+    S = k.shape[2]
+    if kabs is None:
+        kabs = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    if T * S <= FLASH_THRESHOLD * FLASH_THRESHOLD // 4:
+        return _prefill_window_inner(q, k, v, qpos, kabs, 0, scale)
+    outs = []
+    for i0 in range(0, T, qb):
+        i1 = min(i0 + qb, T)
+        outs.append(_prefill_window_inner(
+            q[:, :, :, i0:i1], k, v, qpos[..., i0:i1], kabs, 0, scale))
     return jnp.concatenate(outs, axis=3)
 
 

@@ -189,15 +189,33 @@ def _cache_write(buf: jax.Array, new: jax.Array, write):
     return lax.dynamic_update_slice(buf, new, idx)
 
 
-def _prefill_off(pos, mode: str) -> int:
-    """Static chunk offset of a prefill call: the engine's chunked prefill
-    processes tokens [B, C] at absolute positions off..off+C-1 (``pos`` is a
-    Python int, so each (bucket, chunk) shape traces once); classic
-    whole-prompt prefill passes pos=None -> offset 0."""
-    return int(pos) if (mode == "prefill" and pos is not None) else 0
+def _prefill_off(pos, mode: str):
+    """Chunk offset of a prefill call: the engine's chunked prefill processes
+    tokens [B, C] at absolute positions off..off+C-1. Two forms:
+
+      * a Python int (bucketed per-batch chunking — every row of the batch
+        shares one offset, each (bucket, chunk) shape traces once),
+      * a TRACED int32 vector [B] (token-packed prefill — every row is a
+        DIFFERENT request at its own offset, so ONE compiled shape serves
+        every packing mix).
+
+    Classic whole-prompt prefill passes pos=None -> offset 0."""
+    if mode != "prefill" or pos is None:
+        return 0
+    if _is_pos_vector(pos):
+        return jnp.asarray(pos, jnp.int32)
+    return int(pos)
 
 
-def _conv_tail_state(xp: jax.Array, off: int, T: int, lengths,
+def _off_any(off) -> bool:
+    """True when any row of this prefill call may start past position 0
+    (an earlier chunk's cache/conv tail can exist). Always True for a
+    per-row offset vector — rows at offset 0 read a zeroed cache row, which
+    is bitwise identical to the fresh-state branch."""
+    return _is_pos_vector(off) or bool(off)
+
+
+def _conv_tail_state(xp: jax.Array, off, T: int, lengths,
                      d_conv: int) -> jax.Array:
     """Per-row depthwise-conv tail state of a bucketed prefill chunk:
     the last ``d_conv - 1`` REAL inputs per row, gathered from
@@ -212,22 +230,27 @@ def _conv_tail_state(xp: jax.Array, off: int, T: int, lengths,
     return jnp.take_along_axis(xp, gidx[..., None], axis=1).astype(ACT_DTYPE)
 
 
-def _prefill_valid(off: int, T: int, lengths, *, time_major: bool = False):
+def _prefill_valid(off, T: int, lengths, *, time_major: bool = False):
     """[B, T] (or [T, B]) mask of REAL positions in a bucketed prefill
     chunk: global position off+t belongs to row b iff off+t < lengths_b.
+    ``off`` is a shared int or a per-row vector [B] (token-packed prefill).
     None when lengths is None (whole batch real) — the single source of
     the bucket-padding validity invariant for every block type."""
     if lengths is None:
         return None
-    g = off + jnp.arange(T)
     L = jnp.asarray(lengths, jnp.int32)
+    if _is_pos_vector(off):
+        g = jnp.asarray(off, jnp.int32)[:, None] + jnp.arange(T)[None]
+        m = g < L[:, None]  # [B, T]
+        return m.T if time_major else m
+    g = off + jnp.arange(T)
     if time_major:
         return g[:, None] < L[None, :]
     return g[None, :] < L[:, None]
 
 
 def _window_prefill_write(cache: dict, k: jax.Array, v: jax.Array, *,
-                          off: int, lengths, window: int):
+                          off, lengths, window: int):
     """Masked rolling-buffer write for a bucketed/chunked prefill step.
 
     Writes, per row, the last ``min(T, window)`` REAL positions before
@@ -235,16 +258,19 @@ def _window_prefill_write(cache: dict, k: jax.Array, v: jax.Array, *,
     (>= lengths_b) and positions from earlier chunks (< off) leave the
     buffer untouched, so padding a prompt to its bucket can never clobber a
     previously written real key. Slot indices within a row are a contiguous
-    position range of length <= window, hence collision-free."""
+    position range of length <= window, hence collision-free. ``off`` is a
+    shared int or a per-row offset vector [B] (token-packed prefill)."""
     B, T = k.shape[0], k.shape[1]
+    off_b = jnp.asarray(off, jnp.int32) if _is_pos_vector(off) else off
+    off_col = off_b[:, None] if _is_pos_vector(off) else off_b
     if lengths is None:
-        end = jnp.full((B,), off + T, jnp.int32)
+        end = jnp.full((B,), T, jnp.int32) + off_b
     else:
-        end = jnp.clip(jnp.asarray(lengths, jnp.int32), off, off + T)
+        end = jnp.clip(jnp.asarray(lengths, jnp.int32), off_b, off_b + T)
     keep = min(T, window)
     idx = end[:, None] - keep + jnp.arange(keep)[None]  # [B, keep] abs pos
-    valid = idx >= off
-    local = jnp.clip(idx - off, 0, T - 1)
+    valid = idx >= off_col
+    local = jnp.clip(idx - off_col, 0, T - 1)
     slots = idx % window
     bidx = jnp.arange(B)[:, None]
 
@@ -304,14 +330,23 @@ def apply_attention(
     ``lengths`` [B] the per-row true prompt lengths of a bucket-padded
     batch — cache writes are offset (linear) or length-masked (rolling
     window), and chunk queries attend to all earlier cached positions.
+
+    Token-packed prefill: ``pos`` is a TRACED int32 vector [B] of per-row
+    chunk offsets (each row a different request). Linear cache writes become
+    per-row scatters and queries attend over the FULL cache with a per-row
+    causal mask — masked tail keys contribute exact 0.0 to the softmax
+    reductions, so packed output is bitwise identical to per-batch chunking.
     """
     B, T, D = x.shape
     hd = cfg.resolved_head_dim
     H, Hkv = cfg.n_heads, cfg.n_kv_heads
     off = _prefill_off(pos, mode)
+    vec_off = _is_pos_vector(off)
     h = apply_norm(p["norm"], x, cfg)
 
     win_kabs = None  # set on the bucketed/chunked rolling-window path
+    win_qpos = None
+    packed_qpos = None  # set on the token-packed linear-cache path
     if cross_kv is None:
         # Q/K/V consume the same normed activations: one fanout group
         # (a protected run shares a single quantize+group codec pass)
@@ -323,6 +358,8 @@ def apply_attention(
         if rope_theta:
             if mode == "decode":
                 positions = _decode_positions(pos, B, T)
+            elif vec_off:
+                positions = off[:, None] + jnp.arange(T)[None]
             else:
                 positions = jnp.broadcast_to(jnp.arange(T) + off, (B, T))
             q = rope(q, positions, rope_theta)
@@ -342,7 +379,7 @@ def apply_attention(
             Tk = S
         elif mode == "prefill":
             assert cache is not None
-            batched = lengths is not None or off > 0
+            batched = lengths is not None or vec_off or off > 0
             if window:
                 if batched:
                     new_cache = _window_prefill_write(
@@ -356,12 +393,15 @@ def apply_attention(
                                 if lengths is not None
                                 else jnp.full((B,), off, jnp.int32))
                     kabs_cache = _cache_abs_pos(S_c, prev_end - 1, window)
-                    g = off + jnp.arange(T)
+                    g = (off[:, None] + jnp.arange(T)[None] if vec_off
+                         else off + jnp.arange(T))
                     valid_new = _prefill_valid(off, T, lengths)
                     if valid_new is None:
                         valid_new = jnp.ones((B, T), bool)
-                    kabs_new = jnp.where(valid_new, g[None, :], -1)
+                    kabs_new = jnp.where(valid_new,
+                                         g if vec_off else g[None, :], -1)
                     win_kabs = jnp.concatenate([kabs_cache, kabs_new], axis=1)
+                    win_qpos = g
                     k = jnp.concatenate([cache["k"], k], axis=1)
                     v = jnp.concatenate([cache["v"], v], axis=1)
                     Tk = S_c + T
@@ -374,6 +414,19 @@ def apply_attention(
                         "v": cache["v"].at[:, slots].set(v[:, T - keep :]),
                     }
                     Tk = T
+            elif vec_off:
+                # token-packed: per-row scatter write, then attend over the
+                # FULL cache with a per-row causal mask (masked tail keys
+                # contribute exact zeros — bitwise-equal to the slice path)
+                bidx = jnp.arange(B)[:, None]
+                idx = off[:, None] + jnp.arange(T)[None]  # [B, T] abs pos
+                new_cache = {
+                    "k": cache["k"].at[bidx, idx].set(k),
+                    "v": cache["v"].at[bidx, idx].set(v),
+                }
+                k, v = new_cache["k"], new_cache["v"]
+                Tk = cache["k"].shape[1]
+                packed_qpos = idx
             else:
                 new_cache = {
                     "k": lax.dynamic_update_slice(cache["k"], k,
@@ -398,7 +451,7 @@ def apply_attention(
 
     # grouped heads: q [B, Hkv, G, T, hd]; k/v [B, Hkv, S, hd]
     from repro.models.attention_core import (
-        attend, attend_decode, attend_prefill_window)
+        attend, attend_decode, attend_prefill_packed, attend_prefill_window)
 
     G = H // Hkv
     qg = q.reshape(B, T, Hkv, G, hd).transpose(0, 2, 3, 1, 4)
@@ -412,8 +465,10 @@ def apply_attention(
     elif mode == "encode":
         o = attend(qg, kt, vt, kind="full")
     elif win_kabs is not None:
-        o = attend_prefill_window(qg, kt, vt, qpos=off + jnp.arange(T),
+        o = attend_prefill_window(qg, kt, vt, qpos=win_qpos,
                                   kabs=win_kabs, window=window)
+    elif packed_qpos is not None:
+        o = attend_prefill_packed(qg, kt, vt, qpos=packed_qpos)
     else:
         o = attend(qg, kt, vt, kind="window" if window else "causal",
                    window=window, q_off=off)
@@ -465,12 +520,17 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     latent-cache write; chunk queries attend over all cached latents so
     far. Bucket padding needs no masking here (linear cache + causal mask:
     garbage latents past a row's length are never read by real queries and
-    are decode-overwritten before they become visible)."""
+    are decode-overwritten before they become visible).
+
+    Token-packed prefill: ``pos`` is a traced per-row offset vector [B];
+    cache writes become per-row scatters and queries attend over the full
+    latent cache under a per-row causal mask (exact-zero masked terms)."""
     m = cfg.mla
     B, T, D = x.shape
     H = cfg.n_heads
     dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
     off = _prefill_off(pos, mode)
+    vec_off = _is_pos_vector(off)
     h = apply_norm(p["norm"], x, cfg)
 
     # wq_a (or wq) and wkv_a both project the normed residual stream:
@@ -491,12 +551,15 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
 
     if mode == "decode":
         positions = _decode_positions(pos, B, T)
+    elif vec_off:
+        positions = off[:, None] + jnp.arange(T)[None]
     else:
         positions = jnp.broadcast_to(jnp.arange(T) + off, (B, T))
     q_rope = rope(q_rope, positions, cfg.rope_theta)
     k_rope_new = rope(k_rope_new[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
 
     new_cache = cache
+    packed_qpos = None  # set on the token-packed path
     if mode == "decode":
         assert cache is not None
         ckv_all = _cache_write(cache["ckv"], ckv, pos)
@@ -504,6 +567,17 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
         new_cache = {"ckv": ckv_all, "krope": kr_all}
         ckv_s, kr_s = ckv_all, kr_all
         Tk = ckv_all.shape[1]
+    elif mode == "prefill" and vec_off:
+        assert cache is not None
+        bidx = jnp.arange(B)[:, None]
+        idx = off[:, None] + jnp.arange(T)[None]
+        new_cache = {
+            "ckv": cache["ckv"].at[bidx, idx].set(ckv),
+            "krope": cache["krope"].at[bidx, idx].set(k_rope_new),
+        }
+        ckv_s, kr_s = new_cache["ckv"], new_cache["krope"]
+        Tk = cache["ckv"].shape[1]
+        packed_qpos = idx
     else:
         if mode == "prefill":
             assert cache is not None
@@ -521,7 +595,8 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
             ckv_s, kr_s = ckv, k_rope_new
             Tk = T
 
-    from repro.models.attention_core import attend, attend_decode
+    from repro.models.attention_core import (attend, attend_decode,
+                                             attend_prefill_packed)
 
     if mode == "decode" and cfg.mla_absorb:
         # absorbed projections: fold W_uk into q and W_uv out of the value
@@ -566,6 +641,8 @@ def apply_mla(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
     if mode == "decode":
         o = attend_decode(qg, kt, vt, abs_pos=_cache_abs_pos(Tk, pos, 0),
                           scale=scale)
+    elif packed_qpos is not None:
+        o = attend_prefill_packed(qg, kt, vt, qpos=packed_qpos, scale=scale)
     else:
         o = attend(qg, kt, vt, kind="causal", scale=scale, q_off=off)
     out = o[:, :, 0].transpose(0, 2, 1, 3).reshape(B, T, H * dv)
@@ -848,7 +925,9 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
                           p["conv_w"].astype(jnp.float32))[:, None]
     else:
         # chunk > 0: the conv context is the previous chunk's cached tail
-        pad = (cache["conv"].astype(xs.dtype) if off
+        # (token-packed rows at offset 0 read a zeroed cache row — bitwise
+        # identical to the fresh-state branch)
+        pad = (cache["conv"].astype(xs.dtype) if _off_any(off)
                else jnp.zeros((B, sc.d_conv - 1, di), xs.dtype))
         xp = jnp.concatenate([pad, xs], axis=1)
         conv = sum(
@@ -857,7 +936,7 @@ def apply_mamba(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
             for j in range(sc.d_conv)
         )
         if mode == "prefill":
-            if lengths is not None or off:
+            if lengths is not None or _off_any(off):
                 new_conv_state = _conv_tail_state(xp, off, T, lengths,
                                                   sc.d_conv)
             else:
@@ -979,11 +1058,11 @@ def apply_rglru(p, x, *, cfg: ModelConfig, cache=None, pos=None, mode="train",
             "bkd,dk->bd", windowv.astype(jnp.float32), p["conv_w"].astype(jnp.float32)
         )[:, None] + p["conv_b"].astype(jnp.float32)
     else:
-        pad = (cache["conv"].astype(u.dtype) if off
+        pad = (cache["conv"].astype(u.dtype) if _off_any(off)
                else jnp.zeros((B, rc.d_conv - 1, w), u.dtype))
         up = jnp.concatenate([pad, u], axis=1)
         if mode == "prefill":
-            if lengths is not None or off:
+            if lengths is not None or _off_any(off):
                 new_conv_state = _conv_tail_state(up, off, T, lengths,
                                                   rc.d_conv)
             else:

@@ -190,7 +190,9 @@ def apply_stack(units_params, x, *, cfg: ModelConfig, caches=None, pos=None,
     ``lengths`` [B] (bucketed batched prefill) carries per-row true prompt
     lengths down to every block so cache writes and recurrent state updates
     stay exact under bucket padding; ``pos`` in prefill mode is the static
-    chunk offset. ``ft`` (serving) is the :class:`repro.ft.FTContext`
+    chunk offset, or a TRACED per-row int32 offset vector [B] on the
+    token-packed path (every row a different request — one compiled shape
+    for every packing mix). ``ft`` (serving) is the :class:`repro.ft.FTContext`
     protection context — the scan body traces each unit ONCE, so every
     repeat of a protected projection shares one compiled ProtectionPlan
     and one in-kernel roll-forward schedule; startup-quantized ``q8``
@@ -253,6 +255,8 @@ def embed_tokens(p, tokens, cfg: ModelConfig, pos=None):
             x = x + p["pos"][:T][None].astype(L.ACT_DTYPE)
         elif jnp.ndim(pos) == 1:  # per-row positions, batched decode (T == 1)
             x = x + jnp.take(p["pos"], pos, axis=0)[:, None].astype(L.ACT_DTYPE)
+        elif jnp.ndim(pos) == 2:  # [B, T] grid — token-packed prefill
+            x = x + jnp.take(p["pos"], pos, axis=0).astype(L.ACT_DTYPE)
         else:
             x = x + lax.dynamic_slice_in_dim(p["pos"], pos, T, 0)[None].astype(L.ACT_DTYPE)
     return constrain(x, "batch", "seq", "embed")

@@ -11,10 +11,11 @@
                          shape census
   reference.PerSlotEngine  the pre-batching per-slot baseline (A/B tests,
                          throughput benchmarks)
-  ft_logits              DEPRECATED shim (warns on import) — the entangled
-                         int8 logits projection lives in repro.ft.heads
-                         (ft_logits_decode, ft_logits_prefill,
-                         quantize_head), re-exported here for compat
+
+The entangled int8 logits projection lives in :mod:`repro.ft.heads`
+(ft_logits / ft_logits_decode / ft_logits_prefill / quantize_head) — the
+only surface; this package re-exports those names directly (the old
+``repro.serve.ft_logits`` deprecation shim is removed).
 
 Prefill pipeline (admission hot path)
 -------------------------------------
@@ -42,6 +43,36 @@ call per request:
     kernel (and the same startup plan) as decode
     (:func:`repro.ft.heads.ft_logits_prefill`), so a fail-stop injected
     during admission rolls forward in-kernel, bit-identically.
+
+Token-packed admission (``ServeConfig.token_budget``)
+-----------------------------------------------------
+``token_budget > 0`` replaces the per-batch ``[Bp, bucket]`` chunk
+programs with ONE fixed-shape token-parallel program per step:
+
+  * **packing** — each step draws up to
+    ``token_budget // prefill_chunk`` rows (EDF + shortest-remaining-
+    prefill, token-granular: :meth:`ChunkScheduler.pack_rows`) from ALL
+    in-flight admission batches; each row is one request's next
+    ``prefill_chunk`` tokens with (slot, pos0, length) metadata, and rows
+    advance to the request's TRUE prompt length — bucket padding is never
+    packed, which is where the density (and the FT-overhead-per-token)
+    win comes from: the entangled codec cost is linear in the rows a
+    program runs, so packing true tokens where bucket padding used to sit
+    amortizes the same codec over more useful work.
+  * **one shape** — the program is padded to the budget, so exactly ONE
+    compiled ``[Rp, Cp]`` shape (and one census entry set) serves every
+    packing mix — mixed buckets, ragged tails, single-token remainders,
+    mid-pack cancels; ``CompiledPlans.misses`` stays 0 for any traffic.
+  * **tuning token_budget** — larger budgets pack more co-resident rows
+    per program (denser steps, fewer dispatches; bounded by
+    rows <= max_batch since every row stages in a distinct slot); the
+    budget must be a multiple of ``prefill_chunk``. A budget smaller than
+    a bucket still works — rows just take more steps to finish.
+  * **bit-identity** — slot -> group stays ``slot % M``, activation
+    quantization is per row, and the entangled recovery is exact, so
+    packed admission produces tokens bit-identical to per-batch chunking
+    under fail-stop injection in every group (tested as a packed x arch x
+    scope x failed-group matrix).
 
 Steady-state pipeline (mid-flight refill + async frontend)
 ----------------------------------------------------------

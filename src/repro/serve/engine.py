@@ -66,6 +66,34 @@ Steady-state serving (mid-flight refill + async frontend + deadlines):
     single scatter — free rows are always zeroed again before the next
     decode, exactly as under boundary admission.
 
+Token-packed admission (``ServeConfig.token_budget > 0``): the per-batch
+``[Bp, bucket]`` chunk programs are replaced by ONE fixed-shape
+token-parallel program per step — each step gathers up to ``token_budget``
+prompt tokens from ALL in-flight admission batches (scheduler-ordered:
+EDF + shortest-remaining-prefill, :meth:`ChunkScheduler.pack_rows`) as
+``token_budget / prefill_chunk`` rows of ``prefill_chunk`` tokens, each
+row one request's next chunk with per-row (slot, pos0, length) metadata:
+
+  * rows advance to the request's TRUE prompt length — bucket padding is
+    never packed, so the packed program runs denser than the bucketed
+    chunk pipeline it replaces (the FT codec cost per true token drops
+    with packing density);
+  * per-slot cache state is gathered/scattered by the row metadata from a
+    slot-indexed STAGING cache; ragged co-resident rows attend through
+    per-row absolute-position masks (``attend_prefill_packed``) and the
+    rolling-window / Mamba / RG-LRU recurrences carry per-slot state the
+    same way, so a fresh row at offset 0 co-packs with a mid-prompt row
+    bit-exactly;
+  * the program is padded to the budget — exactly ONE compiled
+    ``[Rp, Cp]`` shape regardless of the packing mix (mixed buckets,
+    ragged tails, cancels), so ``CompiledPlans.misses`` stays 0 for any
+    traffic, same as refill;
+  * FT transparency is structural: slot -> group stays ``slot % M``,
+    activation quantization is per row, and the entangled roll-forward is
+    exact — packed admission is bit-identical to per-batch chunking under
+    fail-stop injection in every group (tested as a packed x arch x scope
+    x failed-group matrix).
+
 Fault tolerance (the paper's technique in the serving path): with
 ``ft_mode='entangle'`` the final logits projection of EVERY decode step —
 and of every admission batch's first token — runs as the fused entangled
@@ -164,6 +192,12 @@ class ServeConfig:
     prefill_buckets: Optional[Sequence[int]] = None  # None = geometric set
     prefill_chunk: int = 0  # >0: chunk prompts, one chunk per engine step
     prefill_batch: int = 0  # admission batch rows; 0 = max_batch
+    # token-packed admission: > 0 packs up to token_budget prompt tokens
+    # per step from ALL in-flight admission batches into ONE fixed-shape
+    # [token_budget // prefill_chunk, prefill_chunk] token-parallel
+    # program (requires prefill_chunk > 0, token_budget a multiple of it,
+    # and rows <= max_batch). 0 = legacy per-batch [Bp, bucket] chunking.
+    token_budget: int = 0
     # -- steady-state scheduling (repro.serve.scheduler) ---------------------
     # mid-flight refill: plan new admission batches over freed slots while
     # earlier batches are still mid-chunk. False = boundary mode (one
@@ -214,7 +248,7 @@ class ServeEngine:
         self.last_tok = np.zeros(B, np.int32)
         self.census: dict[str, dict] = {"prefill": {}, "decode": {}}
         self.decode_calls = 0  # jitted decode invocations (one per step)
-        self.prefill_calls = 0  # jitted prefill-chunk invocations
+        self.prefill_calls = 0  # jitted prefill invocations (chunk/packed)
         self.mesh = sharding.serve_mesh()
 
         # admission pipeline configuration
@@ -228,6 +262,33 @@ class ServeEngine:
         if scfg.prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0, got "
                              f"{scfg.prefill_chunk}")
+        if scfg.token_budget < 0:
+            raise ValueError(f"token_budget must be >= 0, got "
+                             f"{scfg.token_budget}")
+        if scfg.token_budget:
+            # loud parse-time geometry checks: the packed program has ONE
+            # compiled [Rp, Cp] shape, so the budget must tile exactly into
+            # chunk-wide rows and every row must map to a distinct slot
+            if not scfg.prefill_chunk:
+                raise ValueError(
+                    f"token_budget={scfg.token_budget} requires "
+                    f"prefill_chunk > 0 (rows are prefill_chunk tokens "
+                    f"wide)")
+            if scfg.token_budget % scfg.prefill_chunk:
+                raise ValueError(
+                    f"token_budget={scfg.token_budget} must be a multiple "
+                    f"of prefill_chunk={scfg.prefill_chunk}")
+            if scfg.token_budget // scfg.prefill_chunk > B:
+                raise ValueError(
+                    f"token_budget={scfg.token_budget} / prefill_chunk="
+                    f"{scfg.prefill_chunk} = "
+                    f"{scfg.token_budget // scfg.prefill_chunk} packed "
+                    f"rows > max_batch={B} (each row stages in a distinct "
+                    f"slot)")
+        # packed geometry: Rp rows x Cp tokens; Rp == 0 means legacy
+        self.Rp = (scfg.token_budget // scfg.prefill_chunk
+                   if scfg.token_budget else 0)
+        self.Cp = scfg.prefill_chunk
         self.Bp = scfg.prefill_batch or B
         if not 1 <= self.Bp <= B:
             # the batched row scatter maps every admission row to a DISTINCT
@@ -239,6 +300,14 @@ class ServeEngine:
         # source for batched slot recycling (invariant: every free slot's
         # row is zeroed again before the next decode call)
         self._fresh_prefill = self.model.init_cache(cfg, self.Bp, S)
+        if self.Rp:
+            # token-packed staging: a slot-indexed cache (row i = slot i,
+            # same layout as the decode pool) holding every in-flight
+            # row's mid-prefill state; packed calls gather/scatter rows
+            # by slot id. Fresh rows (pos0 == 0) are zeroed IN-PROGRAM,
+            # so recycled staging rows never need host-side zeroing.
+            self._pack_cache = self.model.init_cache(cfg, B, S)
+            self._pack_hlast = jnp.zeros((B, cfg.d_model), ACT_DTYPE)
         self._inflight: list[dict] = []  # in-flight admission batches
         self._reserved: set[int] = set()  # slots claimed by in-flight rows
         self._dirty: list[int] = []  # freed slots awaiting batched zeroing
@@ -251,7 +320,14 @@ class ServeEngine:
         self._clock = self.sched.clock
         self.metrics = {"queue_depth_peak": 0, "rejected": 0, "shed": 0,
                         "refill_admissions": 0, "landings": 0,
-                        "merged_zero_rows": 0, "cancelled": 0}
+                        "merged_zero_rows": 0, "cancelled": 0,
+                        # token-packed admission accounting: TRUE prompt
+                        # tokens packed (pad rows and intra-row padding
+                        # excluded), packed program invocations, and the
+                        # peak number of distinct admission batches
+                        # co-packed into one program
+                        "packed_tokens": 0, "packed_calls": 0,
+                        "packed_batches_peak": 0}
 
         if scfg.ft_mode == "entangle":
             if B % scfg.ft_M:
@@ -311,6 +387,13 @@ class ServeEngine:
             self._prefill_chunk_impl,
             static_argnames=("pos0", "failed_group"),
             donate_argnums=(2, 4) if donate else ())
+        # the token-packed prefill step exclusively owns the staging
+        # cache + h_last carry — donate both so XLA updates them in place
+        self._prefill_packed = jax.jit(
+            self._prefill_packed_impl,
+            static_argnames=("failed_group",),
+            donate_argnums=(1, 2) if donate else ())
+        self._gather_rows = jax.jit(self._gather_rows_impl)
         self._prefill_head = jax.jit(self._prefill_head_impl,
                                      static_argnames=("failed_group",))
         self._decode = jax.jit(self._decode_impl,
@@ -470,6 +553,57 @@ class ServeEngine:
             h_last = jnp.where(in_chunk[:, None], h_at, h_last)
             return h_last, new_cache
 
+    def _prefill_packed_impl(self, params, pack_cache, hlast, tok, sids,
+                             pos0r, lengths, valid,
+                             failed_group: Optional[int] = None):
+        """ONE token-packed prefill step: ``tok`` [Rp, Cp] holds each
+        packed row's next chunk of TRUE prompt tokens, row r staged in
+        slot ``sids[r]`` at absolute offset ``pos0r[r]`` with true prompt
+        length ``lengths[r]``. All metadata is TRACED — one compiled shape
+        serves every packing mix. Gathers the rows' staging state (slot
+        axis 1), zeroes FRESH rows (pos0 == 0) so a recycled staging row
+        can never leak a predecessor's state into a new prompt, runs the
+        model's token-packed prefill, captures each row's last-prompt
+        hidden state, and scatters ``valid`` rows back (pad rows write
+        their own gathered content back — a no-op; sids are DISTINCT, so
+        the scatter is order-free)."""
+        ctx = (sharding.axis_rules(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with ctx:
+            fresh = pos0r == 0
+            def take(a):
+                rows = jnp.take(a, sids, axis=1)
+                f = fresh.reshape((1, -1) + (1,) * (rows.ndim - 2))
+                return jnp.where(f, jnp.zeros_like(rows), rows)
+            rows = jax.tree.map(take, pack_cache)
+            h, new_rows = self.model.prefill_packed(
+                params, tok, self.cfg, rows, pos0=pos0r, lengths=lengths,
+                ft=self._model_ft(failed_group))
+            Cp = tok.shape[1]
+            idx = lengths - 1 - pos0r
+            in_chunk = (idx >= 0) & (idx < Cp)
+            h_at = jnp.take_along_axis(
+                h, jnp.clip(idx, 0, Cp - 1)[:, None, None], axis=1)[:, 0]
+            hrow = jnp.where(in_chunk[:, None], h_at,
+                             jnp.take(hlast, sids, axis=0))
+            def put(big, small):
+                cur = jnp.take(big, sids, axis=1)
+                v = valid.reshape((1, -1) + (1,) * (big.ndim - 2))
+                return big.at[:, sids].set(jnp.where(v, small, cur))
+            pack_cache = jax.tree.map(put, pack_cache, new_rows)
+            hlast = hlast.at[sids].set(
+                jnp.where(valid[:, None], hrow,
+                          jnp.take(hlast, sids, axis=0)))
+            return pack_cache, hlast
+
+    def _gather_rows_impl(self, pack_cache, hlast, sids):
+        """Landing gather: pull a finished admission batch's staging rows
+        (slot axis 1) and last-prompt hidden states into [Bp]-row order so
+        the legacy landing tail (``_prefill_head`` + ``_scatter``) runs
+        unchanged on packed batches."""
+        rows = jax.tree.map(lambda a: jnp.take(a, sids, axis=1), pack_cache)
+        return rows, jnp.take(hlast, sids, axis=0)
+
     def _head_logits(self, params, h, mask, head, failed_group, ft_fn):
         """Shared head epilogue of decode steps and admission batches:
         rows where ``mask`` is False are zeroed so their garbage logits
@@ -580,6 +714,12 @@ class ServeEngine:
             "h_last": jnp.zeros((self.Bp, self.cfg.d_model), ACT_DTYPE),
             "pos0": 0,
             "bucket": b0,
+            # host-side per-row state for token packing (pack_rows /
+            # _advance_packed): true lengths, each row's prefill offset,
+            # and the raw tokens to slice packed chunks from
+            "tokens_np": tokens,
+            "lengths_np": lengths,
+            "rowpos": np.zeros(self.Bp, np.int32),
         })
         return True
 
@@ -607,11 +747,19 @@ class ServeEngine:
         p["pos0"] = pos0 + sz
         if p["pos0"] < Tb:
             return
-        # admission batch complete: first tokens + ONE batched cache
-        # scatter. Rows whose request was cancelled mid-prefill are masked
-        # invalid (they computed garbage under static shapes but never
-        # land); spare scatter capacity absorbs pending recycle-zero rows
-        # so recycling costs no extra dispatch in steady state.
+        # census records BUCKET shapes (admission rows, padded length) —
+        # the traced call signature — never raw prompt lengths
+        self._census_bump("prefill", (self.Bp, Tb))
+        self._land(p, failed_group)
+
+    def _land(self, p: dict, failed_group: Optional[int]):
+        """Land a COMPLETE admission batch (``p["cache"]`` / ``p["h_last"]``
+        hold [Bp]-row final state — from the last legacy chunk or gathered
+        out of the packed staging cache): project first tokens and scatter
+        the batch's cache rows — plus any deferred recycle-zero rows that
+        fit the spare capacity — into the slot pool in ONE batched scatter.
+        Rows whose request was cancelled mid-prefill are masked invalid
+        (they computed garbage under static shapes but never land)."""
         valid = [req is not None for _, req in p["reqs"]]
         vfull = np.zeros(self.Bp, bool)
         vfull[: len(valid)] = valid
@@ -652,10 +800,82 @@ class ServeEngine:
                                     and int(first[j]) == req.eos_token):
                 self._finish(i)
         self.metrics["landings"] += 1
-        # census records BUCKET shapes (admission rows, padded length) —
-        # the traced call signature — never raw prompt lengths
-        self._census_bump("prefill", (self.Bp, Tb))
         self._inflight.remove(p)
+
+    # -- token-packed admission ----------------------------------------------
+
+    def _advance_packed(self, failed_group: Optional[int]) -> bool:
+        """Run ONE token-packed prefill step: draw up to ``Rp`` rows from
+        ALL in-flight admission batches (EDF + shortest-remaining-prefill,
+        token-granular — :meth:`ChunkScheduler.pack_rows`), build the
+        fixed-shape [Rp, Cp] token block with per-row (slot, pos0, length)
+        metadata, advance every packed row by one chunk of its TRUE prompt
+        in a single program, then land every batch whose live rows have
+        all finished (cancelled rows pack nothing and all-cancelled
+        batches drain without compute). Returns True if any row packed."""
+        rows = self.sched.pack_rows(self._inflight, self.Rp)
+        if rows:
+            tok = np.zeros((self.Rp, self.Cp), np.int32)
+            sids = np.zeros(self.Rp, np.int32)
+            pos0r = np.zeros(self.Rp, np.int32)
+            lens = np.zeros(self.Rp, np.int32)
+            valid = np.zeros(self.Rp, bool)
+            used = []
+            true_toks = 0
+            for r, (p, i) in enumerate(rows):
+                off = int(p["rowpos"][i])
+                n = min(self.Cp, int(p["lengths_np"][i]) - off)
+                tok[r, :n] = p["tokens_np"][i, off : off + n]
+                sids[r] = p["reqs"][i][0]
+                pos0r[r] = off
+                lens[r] = p["lengths_np"][i]
+                valid[r] = True
+                used.append(int(sids[r]))
+                true_toks += n
+            # pad rows stage in DISTINCT spare slots (their content is
+            # gathered, run, and written back unchanged — valid is False)
+            spare = [s for s in range(self.scfg.max_batch)
+                     if s not in used]
+            for r in range(len(rows), self.Rp):
+                sids[r] = spare.pop()
+            fg = (failed_group if self._model_ft(failed_group) is not None
+                  else None)
+            self._pack_cache, self._pack_hlast = self._prefill_packed(
+                self.ft_params, self._pack_cache, self._pack_hlast,
+                jnp.asarray(tok), jnp.asarray(sids), jnp.asarray(pos0r),
+                jnp.asarray(lens), jnp.asarray(valid), failed_group=fg)
+            self.prefill_calls += 1
+            self.metrics["packed_calls"] += 1
+            self.metrics["packed_tokens"] += true_toks
+            self.metrics["packed_batches_peak"] = max(
+                self.metrics["packed_batches_peak"],
+                len({id(p) for p, _ in rows}))
+            # ONE compiled shape whatever the packing mix — the census
+            # records the [Rp, Cp] program signature, never the mix
+            self._census_bump("prefill", (self.Rp, self.Cp))
+            for p, i in rows:
+                p["rowpos"][i] = min(int(p["rowpos"][i]) + self.Cp,
+                                     int(p["lengths_np"][i]))
+        for p in list(self._inflight):
+            live = [i for i, (_, r) in enumerate(p["reqs"])
+                    if r is not None]
+            if all(int(p["rowpos"][i]) >= int(p["lengths_np"][i])
+                   for i in live):
+                self._land_packed(p, failed_group)
+        return bool(rows)
+
+    def _land_packed(self, p: dict, failed_group: Optional[int]):
+        """Gather a finished packed batch's staging rows into [Bp]-row
+        order (original admission row order j — so the landing head's
+        row -> group mapping ``j % M`` matches legacy chunking bit-for-
+        bit) and run the shared landing tail."""
+        sids_l = [i for i, _ in p["reqs"]]
+        spare = [s for s in range(self.scfg.max_batch) if s not in sids_l]
+        gsids = np.asarray(sids_l + spare[: self.Bp - len(sids_l)],
+                           np.int32)
+        p["cache"], p["h_last"] = self._gather_rows(
+            self._pack_cache, self._pack_hlast, jnp.asarray(gsids))
+        self._land(p, failed_group)
 
     def _emit(self, req: Request, tok: int, now: float):
         """Push a generated token into the request's streaming ring and
@@ -784,15 +1004,25 @@ class ServeEngine:
         # chunk budget. Unchunked admission completes a batch per call, so
         # the budget is infinite and the loop drains queue + free slots
         # within the step exactly like boundary admission always did.
-        budget = (self.scfg.max_prefill_per_step if self.scfg.prefill_chunk
-                  else float("inf"))
-        while budget > 0:
-            self._plan_admission()
-            p = self.sched.pick_batch(self._inflight)
-            if p is None:
-                break
-            self._advance_prefill(p, failed_group)
-            budget -= 1
+        if self.Rp:
+            # token-packed admission: plan every formable batch FIRST so
+            # mixed-bucket admissions co-pack into the same [Rp, Cp]
+            # program, then run up to max_prefill_per_step packed steps
+            for _ in range(self.scfg.max_prefill_per_step):
+                while self._plan_admission():
+                    pass
+                if not self._advance_packed(failed_group):
+                    break
+        else:
+            budget = (self.scfg.max_prefill_per_step
+                      if self.scfg.prefill_chunk else float("inf"))
+            while budget > 0:
+                self._plan_admission()
+                p = self.sched.pick_batch(self._inflight)
+                if p is None:
+                    break
+                self._advance_prefill(p, failed_group)
+                budget -= 1
         # zero any freed rows no landing scatter absorbed: decode below
         # sees exactly the state boundary admission would have produced
         self._flush_recycled()
@@ -908,11 +1138,24 @@ class ServeEngine:
                 p, jnp.zeros((B, 1), jnp.int32), c,
                 jnp.zeros((B,), jnp.int32), self.cfg, ft=ctx),
             self.params, self.cache)
-        for C in sorted(self._all_chunk_widths()):
+        if self.Rp:
+            # token-packed mode runs exactly ONE prefill program shape —
+            # [Rp, Cp] tokens over Rp gathered staging rows — for every
+            # packing mix, so the census holds one prefill entry set and
+            # CompiledPlans.misses == 0 is checkable for any traffic
             jax.eval_shape(
-                lambda p, c, _C=C: self.model.prefill_chunk(
-                    p, jnp.zeros((self.Bp, _C), jnp.int32), self.cfg, c,
-                    pos0=0, lengths=jnp.zeros((self.Bp,), jnp.int32),
-                    ft=ctx),
-                self.params, self._fresh_prefill)
+                lambda p, c: self.model.prefill_packed(
+                    p, jnp.zeros((self.Rp, self.Cp), jnp.int32), self.cfg,
+                    c, pos0=jnp.zeros((self.Rp,), jnp.int32),
+                    lengths=jnp.zeros((self.Rp,), jnp.int32), ft=ctx),
+                self.params,
+                self.model.init_cache(self.cfg, self.Rp, self.scfg.max_seq))
+        else:
+            for C in sorted(self._all_chunk_widths()):
+                jax.eval_shape(
+                    lambda p, c, _C=C: self.model.prefill_chunk(
+                        p, jnp.zeros((self.Bp, _C), jnp.int32), self.cfg, c,
+                        pos0=0, lengths=jnp.zeros((self.Bp,), jnp.int32),
+                        ft=ctx),
+                    self.params, self._fresh_prefill)
         return self.registry.census()

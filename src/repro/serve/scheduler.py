@@ -155,6 +155,39 @@ class ChunkScheduler:
             return (dl, p["bucket"] - p["pos0"], j)
         return min(enumerate(batches), key=batch_key)[1]
 
+    def pack_rows(self, batches: list, budget_rows: int) -> list:
+        """Token-packed prefill row selection: up to ``budget_rows``
+        ``(batch, row_index)`` pairs forming the next packed program, drawn
+        from ALL in-flight admission batches in the same EDF + shortest-
+        remaining-prefill order as :meth:`pick_batch` — the packed step is
+        the chunk budget, so the ordering policy is identical, just
+        token-granular. Rows advance to their TRUE prompt length (bucket
+        padding is never packed — the density win), each live slot appears
+        at most once per call (the gather/scatter distinctness invariant),
+        and cancelled rows are skipped entirely."""
+        def batch_key(jp):
+            j, p = jp
+            reqs = [r for _, r in p["reqs"] if r is not None]
+            if not reqs:
+                return (float("-inf"), 0, j)
+            dl = min(self._key(r, j)[0] for r in reqs)
+            remaining = max(
+                (int(p["lengths_np"][i]) - int(p["rowpos"][i])
+                 for i, (_, r) in enumerate(p["reqs"]) if r is not None),
+                default=0)
+            return (dl, remaining, j)
+        rows = []
+        for _, p in sorted(enumerate(batches), key=batch_key):
+            for i, (_, r) in enumerate(p["reqs"]):
+                if r is None:
+                    continue
+                if int(p["rowpos"][i]) >= int(p["lengths_np"][i]):
+                    continue  # row's prefill already complete
+                rows.append((p, i))
+                if len(rows) >= budget_rows:
+                    return rows
+        return rows
+
     def shed_expired(self, queue: list, now: Optional[float] = None) -> tuple:
         """Split the wait queue into (kept, shed): queued requests whose
         absolute deadline has passed are shed — they would miss their SLA

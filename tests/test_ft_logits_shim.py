@@ -1,34 +1,35 @@
-"""repro.serve.ft_logits deprecation shim: warns on import, keeps the
-exact public surface working (signatures AND behavior) until every caller
-has migrated to repro.ft.heads."""
+"""The ``repro.serve.ft_logits`` deprecation shim is REMOVED (it warned
+since the entangled-ops v2 redesign): importing it must fail, and
+``repro.ft.heads`` is the ONLY surface defining the head entries — the
+``repro.serve`` package re-exports ARE the subsystem functions, not
+copies, so there is exactly one implementation to patch or pin."""
 import importlib
 import inspect
-import sys
-import warnings
 
-import numpy as np
-import jax.numpy as jnp
 import pytest
 
-from repro.core.plan import make_plan
+
+def test_shim_module_is_gone():
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.serve.ft_logits")
 
 
-def _fresh_import():
-    sys.modules.pop("repro.serve.ft_logits", None)
-    return importlib.import_module("repro.serve.ft_logits")
+def test_heads_is_the_only_surface():
+    """The serve package's convenience names must be the repro.ft.heads
+    objects THEMSELVES (identity, not wrappers): one surface, one
+    signature, one place the protected head projection lives."""
+    import repro.serve as serve
+    from repro.ft import heads
+
+    for name in ("ft_logits", "ft_logits_decode", "ft_logits_prefill",
+                 "quantize_head"):
+        assert getattr(serve, name) is getattr(heads, name), name
 
 
-def test_import_emits_deprecation_warning():
-    with pytest.warns(DeprecationWarning, match="repro.ft.heads"):
-        _fresh_import()
-
-
-def test_public_surface_locked():
-    """The shim must keep every legacy name with its exact signature —
-    a rename or dropped kwarg would break pinned callers silently."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        shim = _fresh_import()
+def test_heads_surface_locked():
+    """The subsystem keeps the legacy signatures — a rename or dropped
+    kwarg would break callers pinned on the old shim's contract."""
+    from repro.ft import heads
 
     want = {
         "ft_logits": ["h", "head_q", "w_scale", "M", "plan", "failed_group",
@@ -43,24 +44,5 @@ def test_public_surface_locked():
         "quantize_head": ["w"],
     }
     for name, params in want.items():
-        fn = getattr(shim, name)
+        fn = getattr(heads, name)
         assert list(inspect.signature(fn).parameters) == params, name
-    assert set(shim.__all__) == set(want)
-
-
-def test_shim_behavior_matches_subsystem():
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        shim = _fresh_import()
-    from repro.ft import heads
-
-    rng = np.random.default_rng(5)
-    h = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
-    w = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
-    head_q, w_scale = shim.quantize_head(w)
-    plan = make_plan(4, 32)
-    old = shim.ft_logits_decode(h, head_q, w_scale, plan=plan,
-                                failed_group=2)
-    new = heads.ft_logits_decode(h, head_q, w_scale, plan=plan,
-                                 failed_group=2)
-    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))

@@ -158,5 +158,16 @@ def test_pretuned_seed_cache_cold_hit(tmp_path, monkeypatch):
         assert cache.sweeps == 0, \
             "refill-path chunk shapes missing from pretuned seed cache"
         assert eng2.plans.misses == 0
+        # token-packed admission runs ONE [Rp, Cp] program whatever the
+        # packing mix — its protected shapes (rows = token_budget) must
+        # cold-hit off the same shipped cache too
+        eng3 = ServeEngine(
+            cfg, ServeConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                             token_budget=16, refill=True,
+                             ft_mode="entangle", ft_M=4,
+                             ft_scope="all", blocks="auto"), params)
+        assert cache.sweeps == 0, \
+            "packed-engine shapes missing from pretuned seed cache"
+        assert eng3.plans.misses == 0
     finally:
         autotune.reset_cache(None)

@@ -21,6 +21,11 @@ def _argv(*extra):
     (["--ft-mode", "entangle", "--ft-M", "2", "--max-batch", "4"], ">= 3"),
     (["--ft-scope", "everything"], "invalid choice"),
     (["--prefill-chunk", "-3"], "prefill-chunk"),
+    (["--token-budget", "-8"], "--token-budget"),
+    (["--token-budget", "16"], "requires --prefill-chunk > 0"),
+    (["--token-budget", "12", "--prefill-chunk", "8"], "multiple"),
+    (["--token-budget", "64", "--prefill-chunk", "8", "--max-batch", "4"],
+     "max-batch"),
     (["--prefill-buckets", "8,banana"], "comma-separated"),
     (["--prefill-buckets", "8,512", "--max-seq", "64"], "max-seq"),
     (["--arrival-rate", "-1.5"], "--arrival-rate"),
@@ -46,6 +51,19 @@ def test_steady_state_flags_accepted_at_parse_time(monkeypatch, capsys):
         launch_serve.main()
     assert e.value.code == 2
     assert "prefill-chunk" in capsys.readouterr().err
+
+
+def test_token_budget_accepted_at_parse_time(monkeypatch, capsys):
+    """A valid --token-budget / --prefill-chunk pairing parses cleanly:
+    the parser takes it and dies on the NEXT invalid flag, proving the
+    packed-geometry validation passed."""
+    monkeypatch.setattr(sys, "argv", _argv(
+        "--token-budget", "32", "--prefill-chunk", "8",
+        "--arrival-rate", "-1"))
+    with pytest.raises(SystemExit) as e:
+        launch_serve.main()
+    assert e.value.code == 2
+    assert "arrival-rate" in capsys.readouterr().err
 
 
 def test_new_scopes_accepted_at_parse_time(monkeypatch, capsys):

@@ -1,0 +1,231 @@
+"""Token-packed admission (ServeConfig.token_budget): one fixed-shape
+token-parallel program per step across ALL in-flight admission batches.
+
+  * the packed x fail-stop bitwise matrix: token-packed admission produces
+    tokens bit-identical to the per-batch chunked pipeline it replaces,
+    for dense/ssm/hybrid x ft_scope head/all x an injected fail-stop in
+    every group — packing (WHICH rows share a program, and at WHAT
+    offsets) must never change tokens or break the entangled roll-forward;
+  * ragged edge cases: a budget smaller than one bucket, a single true
+    token remaining in a row, mixed-bucket co-packing (rows from a
+    bucket-8 and a bucket-16 batch in ONE program), and a cancel
+    mid-pack — all served by the SAME compiled [Rp, Cp] shape;
+  * plan discipline: the packed engine's census holds exactly one prefill
+    entry set, CompiledPlans.misses == 0 and zero new registry entries
+    after a full wave whatever the packing mix;
+  * accounting: metrics['packed_tokens'] counts TRUE prompt tokens (bucket
+    padding never packed), packed_calls == prefill_calls, and
+    packed_batches_peak proves real co-packing;
+  * loud config validation: budget/chunk geometry errors die at engine
+    construction, not inside a traced step.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import get_model
+from repro.serve import Request, ServeConfig, ServeEngine
+
+RNG = np.random.default_rng(31)
+_PARAMS_CACHE: dict = {}
+
+LENGTHS = [5, 6, 12, 3, 4, 6]
+MAX_NEW = [1, 2, 3, 2, 1, 2]
+BUCKETS = (8, 16)
+
+
+def _setup(arch: str, max_seq: int = 48):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+        _PARAMS_CACHE[arch] = (cfg, model, params)
+    return _PARAMS_CACHE[arch]
+
+
+def _prompts(cfg, lengths):
+    return [RNG.integers(0, cfg.vocab_size, size=int(n)).astype(np.int32)
+            for n in lengths]
+
+
+def _run(cfg, params, *, token_budget, scope="head", ft=True,
+         failed_group=None, refill=True, lengths=LENGTHS, max_new=MAX_NEW):
+    global RNG
+    RNG = np.random.default_rng(31)  # same prompts for every variant
+    scfg = ServeConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                       prefill_buckets=BUCKETS, refill=refill,
+                       token_budget=token_budget,
+                       **({"ft_mode": "entangle", "ft_M": 4,
+                           "ft_scope": scope} if ft else {}))
+    eng = ServeEngine(cfg, scfg, params)
+    for r, p in enumerate(_prompts(cfg, lengths)):
+        eng.submit(Request(rid=r, prompt=p, max_new=max_new[r]))
+    eng.run_to_completion(max_steps=500, failed_group=failed_group)
+    return {r.rid: np.asarray(r.out) for r in eng.done}, eng
+
+
+@pytest.mark.parametrize("scope", ["head", "all"])
+@pytest.mark.parametrize(
+    "arch", ["llama3.2-1b", "falcon-mamba-7b", "recurrentgemma-2b"])
+def test_packed_failstop_bitwise_matrix(arch, scope):
+    """Packed vs per-batch chunked admission, healthy AND with a fail-stop
+    injected into every group: identical tokens per request. Slot -> group
+    stays slot % M, activation quantization is per row, and the entangled
+    recovery is exact, so HOW rows were packed — co-residents, offsets,
+    pad rows — can never move a request's integer grid."""
+    cfg, _, params = _setup(arch)
+    ref, _ = _run(cfg, params, token_budget=0, scope=scope)
+    assert set(ref) == set(range(len(LENGTHS)))
+    for fg in [None] + list(range(4)):
+        out, eng = _run(cfg, params, token_budget=16, scope=scope,
+                        failed_group=fg)
+        assert eng.metrics["packed_calls"] > 0
+        assert eng.metrics["packed_tokens"] == sum(LENGTHS), \
+            "bucket padding leaked into the packed-token count"
+        assert eng.metrics["packed_batches_peak"] >= 2, \
+            "matrix never co-packed rows from two admission batches"
+        for r in ref:
+            np.testing.assert_array_equal(
+                ref[r], out[r],
+                err_msg=f"{arch} scope={scope} failed_group={fg} rid={r} "
+                        f"(packing or roll-forward changed tokens)")
+
+
+def test_packed_one_compiled_shape_no_misses():
+    """Whatever the packing mix, the engine runs ONE [Rp, Cp] prefill
+    program: a single census entry set, zero CompiledPlans lookup misses
+    and zero NEW registry entries after the wave."""
+    cfg, _, params = _setup("llama3.2-1b")
+    out, eng = _run(cfg, params, token_budget=16, scope="all")
+    assert set(out) == set(range(len(LENGTHS)))
+    Rp, Cp = 16 // 8, 8
+    assert set(eng.census["prefill"]) == {(Rp, Cp)}, \
+        "packed admission retraced a second prefill shape"
+    assert eng.plans.misses == 0, \
+        "a packing mix requested a shape the startup census missed"
+    n_entries = len(eng.registry.census())
+    out2, eng2 = _run(cfg, params, token_budget=16, scope="all",
+                      lengths=[3, 9, 15, 2, 8, 12],
+                      max_new=[2, 1, 2, 3, 1, 2])
+    assert set(eng2.census["prefill"]) == {(Rp, Cp)}
+    assert eng2.plans.misses == 0
+    assert len(eng2.registry.census()) == n_entries, \
+        "a different packing mix created new plan-registry entries"
+
+
+def test_packed_budget_smaller_than_bucket():
+    """token_budget=8 (ONE chunk-wide row per step) is smaller than every
+    bucket — rows just take more steps; tokens stay bit-identical."""
+    cfg, _, params = _setup("llama3.2-1b")
+    ref, _ = _run(cfg, params, token_budget=0)
+    out, eng = _run(cfg, params, token_budget=8)
+    assert eng.metrics["packed_tokens"] == sum(LENGTHS)
+    for r in ref:
+        np.testing.assert_array_equal(ref[r], out[r], err_msg=f"rid={r}")
+
+
+def test_packed_single_token_remaining():
+    """A 9-token prompt with chunk 8 leaves ONE true token for its second
+    packed row — the [Rp, Cp] program serves it (7 pad positions masked)
+    with tokens bit-identical to chunked admission."""
+    cfg, _, params = _setup("llama3.2-1b")
+    lengths, max_new = [9, 5, 15, 3], [2, 1, 2, 2]
+    ref, _ = _run(cfg, params, token_budget=0, lengths=lengths,
+                  max_new=max_new)
+    out, eng = _run(cfg, params, token_budget=16, lengths=lengths,
+                    max_new=max_new)
+    assert eng.metrics["packed_tokens"] == sum(lengths)
+    for r in ref:
+        np.testing.assert_array_equal(ref[r], out[r], err_msg=f"rid={r}")
+
+
+def test_packed_mixed_bucket_copacking():
+    """Rows from a bucket-8 batch and a bucket-16 batch share one packed
+    program — exactly what per-batch chunking cannot do (one bucket per
+    [Bp, bucket] call). packed_batches_peak >= 2 is the evidence, and the
+    refill counter still tracks mid-flight admissions."""
+    cfg, _, params = _setup("llama3.2-1b")
+    # two single-request batches in different buckets: the 12-token
+    # prompt buckets to 16, the 5-token to 8 — pack_rows (shortest
+    # remaining first) must put the bucket-8 row AND a bucket-16 row in
+    # the same 2-row program on the first packed step
+    lengths, max_new = [12, 5], [3, 2]
+    ref, _ = _run(cfg, params, token_budget=0, lengths=lengths,
+                  max_new=max_new)
+    out, eng = _run(cfg, params, token_budget=16, lengths=lengths,
+                    max_new=max_new)
+    assert eng.metrics["packed_batches_peak"] >= 2, \
+        "mixed-bucket wave never co-packed two admission batches"
+    assert eng.metrics["refill_admissions"] > 0
+    for r in ref:
+        np.testing.assert_array_equal(ref[r], out[r], err_msg=f"rid={r}")
+
+
+def test_packed_cancel_mid_pack():
+    """cancel() between packed steps: the row stops packing immediately
+    (its remaining tokens are never spent), its reservation frees, other
+    requests' tokens are untouched, and an all-cancelled batch drains
+    without compute."""
+    cfg, _, params = _setup("llama3.2-1b")
+    eng = ServeEngine(
+        cfg, ServeConfig(max_batch=4, max_seq=48, prefill_chunk=8,
+                         prefill_buckets=(8, 16, 32),
+                         token_budget=16), params)
+    rng = np.random.default_rng(31)
+    long = Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 30)
+                   .astype(np.int32), max_new=4)
+    eng.submit(long)
+    eng.step()  # packs the first chunk(s) of the long prompt
+    assert long.status == "prefill" and eng._inflight
+    toks_before = eng.metrics["packed_tokens"]
+    eng.cancel(long)
+    assert long.status == "cancelled" and not eng._reserved
+    short = Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 6)
+                    .astype(np.int32), max_new=3)
+    eng.submit(short)
+    done = eng.run_to_completion(max_steps=100)
+    assert [r.rid for r in done] == [1] and len(short.out) == 3
+    assert eng.idle(), "cancelled batch never drained from _inflight"
+    # the cancelled row packed nothing after the cancel
+    assert eng.metrics["packed_tokens"] == toks_before + 6
+
+
+def test_packed_boundary_mode():
+    """token_budget composes with refill=False: one admission batch at a
+    time (refill_admissions == 0), tokens still bit-identical."""
+    cfg, _, params = _setup("llama3.2-1b")
+    ref, _ = _run(cfg, params, token_budget=0, refill=False)
+    out, eng = _run(cfg, params, token_budget=16, refill=False)
+    assert eng.metrics["refill_admissions"] == 0
+    assert eng.metrics["packed_calls"] > 0
+    for r in ref:
+        np.testing.assert_array_equal(ref[r], out[r], err_msg=f"rid={r}")
+
+
+def test_packed_accounting():
+    """prefill_calls counts packed program invocations (== packed_calls),
+    packed_tokens counts exactly the true prompt tokens, and no landing
+    is lost: every request lands through the shared landing tail."""
+    cfg, _, params = _setup("llama3.2-1b")
+    out, eng = _run(cfg, params, token_budget=16, ft=False)
+    assert set(out) == set(range(len(LENGTHS)))
+    assert eng.prefill_calls == eng.metrics["packed_calls"] > 0
+    assert eng.metrics["packed_tokens"] == sum(LENGTHS)
+    assert eng.metrics["landings"] >= 2, \
+        "the wave should land several admission batches"
+
+
+def test_packed_config_validation():
+    """Geometry errors die loudly at engine construction."""
+    cfg, _, params = _setup("llama3.2-1b")
+    def mk(**kw):
+        ServeEngine(cfg, ServeConfig(max_batch=4, max_seq=48, **kw), params)
+    with pytest.raises(ValueError, match="token_budget"):
+        mk(token_budget=-8, prefill_chunk=8)
+    with pytest.raises(ValueError, match="prefill_chunk > 0"):
+        mk(token_budget=16)  # packed requires chunked admission
+    with pytest.raises(ValueError, match="multiple"):
+        mk(token_budget=12, prefill_chunk=8)
+    with pytest.raises(ValueError, match="max_batch"):
+        mk(token_budget=64, prefill_chunk=8)  # 8 rows > 4 slots
