@@ -73,6 +73,18 @@ steps-to-drain on the shared virtual clock (deterministic), which must
 be >= 1.0: packing true prompt tokens across all in-flight batches must
 beat even the best per-batch chunking admission policy (chunked-refill
 steps ride along informationally).
+
+Fleet (multi-replica fabric, :mod:`repro.serve.fleet`): the saturated
+trace is replayed through in-process replica fleets on the same virtual
+clock. ``serve_fleet_migration_completed`` kills one of 4 replicas
+mid-trace and gates on every request completing with tokens identical to
+the no-kill replay (fail-stop migration: queued requests replay, decoding
+requests resume from their generated prefix — the caller never loses or
+repeats a token). ``serve_fleet_scaleup_ttft_speedup`` replays the trace
+on 2- and 4-replica fleets and gates mean TTFT (step units) improving
+with the larger pool (> 1.0) — the router's least-loaded dispatch must
+actually convert replicas into admission capacity. CI requires both
+records.
 """
 from __future__ import annotations
 
@@ -85,7 +97,8 @@ import jax
 
 from repro.configs import get_smoke_config
 from repro.models import get_model
-from repro.serve import PerSlotEngine, Request, ServeConfig, ServeEngine
+from repro.serve import (Fleet, FleetConfig, PerSlotEngine, Request,
+                         ServeConfig, ServeEngine)
 
 
 def _derive(emit, records, tps, *, prefix: str, label: str, main: str,
@@ -183,6 +196,36 @@ def _openloop(cfg, params, *, refill: bool, arrivals, prompts,
         wall = time.perf_counter() - wall0
         eng.done = []
     return reqs, wall / steps * 1e3, steps, eng
+
+
+def _fleet_trace(cfg, params, *, replicas: int, arrivals, prompts,
+                 max_new: int, kill_at=None, kill_rid: int = 0):
+    """Replay one open-loop arrival trace through an in-process replica
+    fleet on the shared virtual clock (1 unit per fleet step). The
+    per-replica ServeConfig matches ``_openloop``'s shapes, so every
+    program is already compiled by the earlier sections — fleet replays
+    measure scheduling, not jit. ``kill_at`` injects a whole-replica
+    fail-stop at that step. Returns (requests, steps, fleet)."""
+    vclock = [0.0]
+    fleet = Fleet(
+        cfg, ServeConfig(max_batch=8, max_seq=80, prefill_chunk=8,
+                         prefill_buckets=(16, 64),
+                         clock=lambda: vclock[0]), params,
+        FleetConfig(replicas=replicas))
+    reqs, i, steps = [], 0, 0
+    while i < len(prompts) or not fleet.idle():
+        while i < len(prompts) and arrivals[i] <= vclock[0]:
+            rq = Request(rid=i, prompt=prompts[i].copy(), max_new=max_new)
+            fleet.submit(rq)
+            reqs.append(rq)
+            i += 1
+        if steps == kill_at:
+            fleet.kill_replica(kill_rid)
+        fleet.step()
+        steps += 1
+        vclock[0] += 1.0
+        assert steps < 10_000, "fleet trace failed to drain"
+    return reqs, steps, fleet
 
 
 def run(emit, *, max_batch: int = 8, n_requests: int = 16,
@@ -411,6 +454,77 @@ def run(emit, *, max_batch: int = 8, n_requests: int = 16,
         "packed_steps": sat["packed"]["steps"],
         "gate": ">= 1.0", "ok": sat_ok})
     ok &= sat_ok
+
+    # -- fleet: fail-stop migration + replica scale-out ----------------------
+    # The saturated trace again, now through the multi-replica fabric.
+    # Migration gate: kill replica 1 of 4 mid-trace; every request must
+    # still complete, with tokens identical to the no-kill replay (greedy
+    # decode is deterministic and migration resumes from the streamed
+    # prefix, so a surviving caller cannot tell the difference).
+    base_reqs, base_steps, _ = _fleet_trace(
+        cfg, params, replicas=4, arrivals=sat_arrivals,
+        prompts=sat_prompts, max_new=4)
+    kill_reqs, kill_steps, kfleet = _fleet_trace(
+        cfg, params, replicas=4, arrivals=sat_arrivals,
+        prompts=sat_prompts, max_new=4, kill_at=6, kill_rid=1)
+    km = kfleet.fleet_metrics()
+    completed = all(r.status == "done" for r in kill_reqs)
+    identical = (len(kill_reqs) == len(base_reqs) and all(
+        np.array_equal(a.out, b.out)
+        for a, b in zip(kill_reqs, base_reqs)))
+    mig_ok = (completed and identical and km["failed"] == 1
+              and km["router_migrated"] >= 1)
+    emit("serve_fleet_migration_completed", 0.0,
+         f"killed 1/4 replicas at step 6: "
+         f"{sum(r.status == 'done' for r in kill_reqs)}/{len(kill_reqs)} "
+         f"completed, tokens {'identical' if identical else 'DIVERGED'} "
+         f"vs no-kill replay; migrated={km['router_migrated']} "
+         f"(prefix-resume={km['router_resume_prefix']}, "
+         f"recompute={km['router_resume_recompute']}, "
+         f"replayed={km['router_replayed']}); drain "
+         f"{base_steps} -> {kill_steps} steps "
+         f"({'PASS' if mig_ok else 'FAIL'})")
+    records.append({
+        "name": "serve_fleet_migration_completed",
+        "completed": sum(r.status == "done" for r in kill_reqs),
+        "requests": len(kill_reqs),
+        "tokens_identical": identical,
+        "migrated": km["router_migrated"],
+        "resume_prefix": km["router_resume_prefix"],
+        "resume_recompute": km["router_resume_recompute"],
+        "replayed": km["router_replayed"],
+        "nokill_steps": base_steps, "kill_steps": kill_steps,
+        "gate": "all complete, tokens identical to no-kill replay",
+        "ok": mig_ok})
+    ok &= mig_ok
+
+    # Scale-out gate: same saturated trace on a 2-replica fleet; the
+    # 4-replica mean TTFT (step units, deterministic) must beat it — the
+    # router's least-loaded dispatch has to turn replicas into admission
+    # capacity, not just spares.
+    small_reqs, small_steps, _ = _fleet_trace(
+        cfg, params, replicas=2, arrivals=sat_arrivals,
+        prompts=sat_prompts, max_new=4)
+    ttft = {}
+    for label, rs in (("2", small_reqs), ("4", base_reqs)):
+        assert all(r.status == "done" for r in rs)
+        ttft[label] = float(np.mean([r.t_first - r.t_submit for r in rs]))
+    fleet_speedup = ttft["2"] / ttft["4"]
+    scale_ok = fleet_speedup > 1.0
+    emit("serve_fleet_scaleup_ttft_speedup", 0.0,
+         f"saturated TTFT 2->4 replicas {fleet_speedup:.2f}x "
+         f"({ttft['2']:.2f} -> {ttft['4']:.2f} steps; drain "
+         f"{small_steps} -> {base_steps} steps; gate > 1.0: "
+         f"{'PASS' if scale_ok else 'FAIL'})")
+    records.append({
+        "name": "serve_fleet_scaleup_ttft_speedup",
+        "value": round(fleet_speedup, 3),
+        "ttft_steps_2_replicas": round(ttft["2"], 3),
+        "ttft_steps_4_replicas": round(ttft["4"], 3),
+        "drain_steps_2_replicas": small_steps,
+        "drain_steps_4_replicas": base_steps,
+        "gate": "> 1.0", "ok": scale_ok})
+    ok &= scale_ok
 
     path = pathlib.Path.cwd() / "BENCH_serve.json"
     path.write_text(json.dumps({

@@ -29,6 +29,16 @@ front), ``--deadline-ms d`` attaches an SLA to every request (queued
 requests past it are shed loudly), ``--no-refill`` forces boundary
 admission — new batches plan only when no admission batch is in flight
 (the A/B baseline for mid-flight refill, which is the default).
+
+Fleet flags: ``--replicas N`` (N > 1, or any fleet flag) serves the wave
+through the multi-replica fabric (:mod:`repro.serve.fleet`) instead of a
+single engine — router-owned admission, per-replica engines behind the
+in-process transport. ``--kill-replica-at S --kill-replica R`` injects a
+fail-stop into replica R at fleet step S (mid-wave machine loss; the
+router migrates R's in-flight requests and the wave still completes),
+``--max-replicas M --scale-up-depth D`` turns on queue-depth autoscaling
+between the initial pool size and M. All cross-flag contracts are
+validated at parse time.
 """
 import argparse
 import dataclasses
@@ -42,7 +52,13 @@ from repro.ft import SCOPES
 from repro.kernels import autotune
 from repro.models import get_model
 from repro.serve.engine import Request, ServeConfig, ServeEngine
+from repro.serve.fleet import Fleet, FleetConfig, ScalingPolicy
 from repro.train.checkpoint import CheckpointManager
+
+# shared drain bound for closed waves — kill/scaling schedules are
+# validated against it at parse time so a mis-typed step count fails
+# before engine startup rather than hanging a wave
+MAX_WAVE_STEPS = 10_000
 
 
 def _wave(eng: ServeEngine, n_requests: int, vocab: int, max_new: int,
@@ -56,7 +72,7 @@ def _wave(eng: ServeEngine, n_requests: int, vocab: int, max_new: int,
     if not arrival_rate:
         for rq in reqs:
             eng.submit(rq)
-        done = eng.run_to_completion(max_steps=10_000,
+        done = eng.run_to_completion(max_steps=MAX_WAVE_STEPS,
                                      failed_group=failed_group)
         return {r.rid: np.asarray(r.out) for r in done}
     # open-loop: submit each request at its seeded Poisson arrival time
@@ -75,12 +91,58 @@ def _wave(eng: ServeEngine, n_requests: int, vocab: int, max_new: int,
             i += 1
         eng.step(failed_group=failed_group)
         steps += 1
-        assert steps < 10_000, "open-loop wave failed to drain"
+        assert steps < MAX_WAVE_STEPS, "open-loop wave failed to drain"
     if any(r.status == "shed" for r in reqs):
         print(f"[launch.serve] shed "
               f"{sum(r.status == 'shed' for r in reqs)} queued requests "
               f"past --deadline-ms {deadline_ms}")
     return {r.rid: np.asarray(r.out) for r in reqs if r.status == "done"}
+
+
+def _fleet_wave(cfg, scfg: ServeConfig, params, args, failed_group):
+    """Serve the synthetic wave through the multi-replica fabric, with an
+    optional scheduled replica fail-stop, and print the migration
+    summary. The wave must complete every request even when a replica is
+    killed mid-flight — an incomplete wave exits nonzero."""
+    pol = None
+    if args.max_replicas:
+        pol = ScalingPolicy(min_replicas=args.replicas,
+                            max_replicas=args.max_replicas,
+                            scale_up_depth=args.scale_up_depth)
+    fleet = Fleet(cfg, scfg, params,
+                  FleetConfig(replicas=args.replicas, policy=pol))
+    rng = np.random.default_rng(0)
+    reqs = [Request(
+        rid=r,
+        prompt=rng.integers(0, cfg.vocab_size, size=8).astype(np.int32),
+        max_new=args.max_new, deadline_ms=args.deadline_ms)
+        for r in range(args.requests)]
+    for rq in reqs:
+        fleet.submit(rq)
+    steps = 0
+    while not fleet.idle():
+        if steps == args.kill_replica_at:
+            print(f"[launch.serve] killing replica {args.kill_replica} "
+                  f"at fleet step {steps} (fail-stop injected)")
+            fleet.kill_replica(args.kill_replica)
+        fleet.step(failed_group=failed_group)
+        steps += 1
+        assert steps < MAX_WAVE_STEPS, "fleet wave failed to drain"
+    m = fleet.fleet_metrics()
+    states = {rid: rep["state"] for rid, rep in m["replicas"].items()}
+    done = sum(r.status == "done" for r in reqs)
+    print(f"[launch.serve] fleet: {done}/{args.requests} requests "
+          f"completed in {steps} fleet steps over {m['spawned']} replicas "
+          f"(states: {states})")
+    print(f"[launch.serve] fleet migration summary: "
+          f"failed={m['failed']} migrated={m['router_migrated']} "
+          f"(prefix-resume={m['router_resume_prefix']}, "
+          f"recompute={m['router_resume_recompute']}, "
+          f"replayed={m['router_replayed']}) "
+          f"scale_ups={m['scale_ups']} scale_downs={m['scale_downs']} "
+          f"shed={m['router_shed']}")
+    if done + sum(r.status == "shed" for r in reqs) != args.requests:
+        raise SystemExit(1)
 
 
 def _validate_args(ap: argparse.ArgumentParser, args) -> None:
@@ -146,6 +208,33 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
                  f"wave), got {args.arrival_rate}")
     if args.deadline_ms is not None and args.deadline_ms <= 0:
         ap.error(f"--deadline-ms must be > 0, got {args.deadline_ms}")
+    # -- fleet flags ---------------------------------------------------------
+    if args.replicas < 1:
+        ap.error(f"--replicas must be >= 1, got {args.replicas}")
+    if args.max_replicas:
+        if args.max_replicas < args.replicas:
+            ap.error(f"--max-replicas ({args.max_replicas}) must be >= "
+                     f"--replicas ({args.replicas}): autoscaling grows the "
+                     f"pool above the initial size, never below it")
+    if args.scale_up_depth < 1:
+        ap.error(f"--scale-up-depth must be >= 1 (queued requests per "
+                 f"healthy replica), got {args.scale_up_depth}")
+    if args.kill_replica_at >= 0:
+        if args.replicas < 2 and not args.max_replicas:
+            ap.error(f"--kill-replica-at requires --replicas >= 2 or "
+                     f"--max-replicas autoscaling: a surviving replica "
+                     f"must absorb the migrated requests or the wave "
+                     f"cannot drain")
+        if args.kill_replica_at >= MAX_WAVE_STEPS:
+            ap.error(f"--kill-replica-at ({args.kill_replica_at}) must be "
+                     f"< {MAX_WAVE_STEPS}, the wave's drain bound — a "
+                     f"later kill step would never fire")
+        if not 0 <= args.kill_replica < args.replicas:
+            ap.error(f"--kill-replica ({args.kill_replica}) must name a "
+                     f"replica in the initial pool [0, {args.replicas})")
+    elif args.kill_replica:
+        ap.error(f"--kill-replica ({args.kill_replica}) requires "
+                 f"--kill-replica-at to schedule the fail-stop")
     return buckets
 
 
@@ -198,6 +287,24 @@ def main():
                     help="boundary admission: plan new batches only when "
                          "no admission batch is in flight (disables "
                          "mid-flight slot refill)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1 (or any fleet flag): serve through the "
+                         "multi-replica fabric — router-owned admission "
+                         "over this many in-process engine replicas")
+    ap.add_argument("--kill-replica-at", type=int, default=-1,
+                    help=">= 0: inject a whole-replica fail-stop at this "
+                         "fleet step; the router migrates its in-flight "
+                         "requests to healthy replicas")
+    ap.add_argument("--kill-replica", type=int, default=0,
+                    help="which replica id --kill-replica-at kills "
+                         "(must lie in the initial pool)")
+    ap.add_argument("--max-replicas", type=int, default=0,
+                    help=">0: queue-depth autoscaling between --replicas "
+                         "and this bound (0 = fixed-size pool)")
+    ap.add_argument("--scale-up-depth", type=int, default=4,
+                    help="autoscaling trigger: spawn a replica when the "
+                         "router queue exceeds this many requests per "
+                         "healthy replica")
     args = ap.parse_args()
     buckets = _validate_args(ap, args)
 
@@ -218,6 +325,11 @@ def main():
         prefill_buckets=buckets, prefill_chunk=args.prefill_chunk,
         token_budget=args.token_budget, refill=not args.no_refill)
     failed = args.failed_group if args.failed_group >= 0 else None
+
+    if (args.replicas > 1 or args.max_replicas > 0
+            or args.kill_replica_at >= 0):
+        _fleet_wave(cfg, scfg, params, args, failed)
+        return
 
     eng = ServeEngine(cfg, scfg, params)
     outs = _wave(eng, args.requests, cfg.vocab_size, args.max_new, failed,

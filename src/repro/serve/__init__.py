@@ -108,23 +108,89 @@ boundaries:
     request's integer grid: tokens and the entangled roll-forward are
     bit-identical under refill and boundary admission (tested as a
     refill x fail-stop matrix across dense/ssm/hybrid x scopes x groups).
+
+Multi-replica fleet (router + replica pool + fail-stop migration)
+-----------------------------------------------------------------
+:mod:`repro.serve.fleet` lifts the paper's fail-stop story one level up:
+lose a whole REPLICA (machine), keep every request — the fleet analogue
+of the in-kernel stream roll-forward.
+
+  * **router / replica split** (:mod:`repro.serve.router`,
+    :mod:`repro.serve.transport`) — a front-end :class:`Router` owns ALL
+    admission (``max_queue`` saturation, EDF ordering, deadline shedding)
+    and fans requests out to N :class:`ServeEngine` replicas behind a
+    :class:`ReplicaTransport` seam (in-process engines by default, so a
+    whole fleet is Tier-1-testable in one process). Replicas run with
+    unbounded engine queues and no deadlines: the router is the fleet's
+    single gatekeeper, per-replica :class:`ChunkScheduler` instances keep
+    ordering prefill chunks inside each engine.
+  * **replica lifecycle** — STARTING -> HEALTHY -> DRAINING -> DEAD
+    (:class:`repro.serve.fleet.Replica`), driven by per-step heartbeats
+    on the injectable ``ServeConfig.clock``. STARTING replicas take no
+    traffic until their first probe; DRAINING replicas finish their
+    in-flight work and retire; fail-stop (missed heartbeat or
+    :class:`ReplicaDead` mid-call) is terminal and loses ALL replica
+    state — recovery reads nothing back from the dead engine.
+  * **migration guarantees** — the router keeps its own census (what it
+    dispatched where, every token streamed back), so on fail-stop each
+    affected request re-enters the queue: never-started requests replay;
+    decoding requests resume from their generated-token prefix via ONE
+    batched prefill of ``prompt + prefix`` (cost independent of decode
+    steps already spent — the no-rollback property); when the prefix
+    outgrows the largest bucket, the original prompt is recomputed and
+    the regenerated prefix suppressed at drain time. The caller's
+    :class:`RequestHandle`/:class:`TokenRing` surface stays valid across
+    migration — the iterator never learns a replica died, never repeats
+    a token, and (greedy decode being deterministic, prefill/decode
+    paths bit-identical) streams EXACTLY the no-failure run's tokens.
+    What is NOT preserved: wall-clock latency (a migrated request pays
+    queue re-entry + one context prefill) and engine-level metrics of
+    the dead replica (the router's counters survive; the engine's die
+    with it).
+  * **autoscaling + warm spawn** — :class:`ScalingPolicy` spawns a
+    replica when router queue depth outruns the healthy pool and drains
+    one when utilization (``metrics['packed_tokens']`` against the token
+    budget, or slot occupancy) falls below a floor. Spawned replicas
+    reuse the first replica's :meth:`ServeEngine.warm_state` — shared
+    slot census, :class:`~repro.ft.plans.CompiledPlans`, quantized
+    protected weights, autotune winners — so scale-up under load never
+    re-runs the startup census/sweep (``plans.misses == 0`` and zero new
+    sweeps on every replica after the first).
 """
 from repro.ft.heads import (ft_logits, ft_logits_decode, ft_logits_prefill,
                             quantize_head)
 from repro.serve.engine import (Request, ServeConfig, ServeEngine,
-                                geometric_buckets)
+                                geometric_buckets, resolve_buckets)
+from repro.serve.fleet import (DEAD, DRAINING, HEALTHY, STARTING, Fleet,
+                               FleetConfig, Replica, ScalingPolicy)
 from repro.serve.reference import PerSlotEngine
+from repro.serve.router import FleetRecord, Router
 from repro.serve.scheduler import (AdmissionRejected, ChunkScheduler,
                                    DeadlineExceeded, RequestHandle,
                                    TokenRing)
+from repro.serve.transport import (InProcessTransport, ReplicaDead,
+                                   ReplicaTransport)
 
 __all__ = [
     "AdmissionRejected",
     "ChunkScheduler",
+    "DEAD",
+    "DRAINING",
     "DeadlineExceeded",
+    "Fleet",
+    "FleetConfig",
+    "FleetRecord",
+    "HEALTHY",
+    "InProcessTransport",
     "PerSlotEngine",
+    "Replica",
+    "ReplicaDead",
+    "ReplicaTransport",
     "Request",
     "RequestHandle",
+    "Router",
+    "STARTING",
+    "ScalingPolicy",
     "ServeConfig",
     "ServeEngine",
     "TokenRing",
@@ -133,4 +199,5 @@ __all__ = [
     "ft_logits_prefill",
     "geometric_buckets",
     "quantize_head",
+    "resolve_buckets",
 ]

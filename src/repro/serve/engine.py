@@ -167,6 +167,21 @@ def geometric_buckets(max_seq: int, base: int = 8) -> tuple:
     return tuple(out)
 
 
+def resolve_buckets(scfg: "ServeConfig") -> tuple:
+    """The admission bucket set a ServeConfig implies — shared by the
+    engine and the fleet router, which must validate prompt capacity and
+    plan migration resumes against the same bounds WITHOUT building an
+    engine of its own."""
+    buckets = tuple(sorted(set(
+        int(b) for b in (scfg.prefill_buckets
+                         or geometric_buckets(scfg.max_seq)))))
+    if buckets[0] < 1 or buckets[-1] > scfg.max_seq:
+        raise ValueError(
+            f"prefill_buckets {buckets} must lie in [1, "
+            f"max_seq={scfg.max_seq}]")
+    return buckets
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 4  # slot count; must be divisible by ft_M if entangling
@@ -233,10 +248,18 @@ class Request:
 
 
 class ServeEngine:
-    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params,
+                 warm: Optional[dict] = None):
         self.cfg, self.scfg, self.params = cfg, scfg, params
         if not scfg.greedy:
             raise NotImplementedError("only greedy decode is implemented")
+        if warm is not None and warm.get("sig") != self._warm_sig():
+            # a mismatched warm state would silently serve stale plans /
+            # quantized weights for a DIFFERENT program set — refuse
+            raise ValueError(
+                "warm state was built by a differently-configured engine; "
+                "replicas sharing startup products must share (cfg, scfg "
+                "modulo clock)")
         self.model = get_model(cfg)
         B, S = scfg.max_batch, scfg.max_seq
         # THE slot-batched cache: one pytree, slot i = batch row i
@@ -252,13 +275,7 @@ class ServeEngine:
         self.mesh = sharding.serve_mesh()
 
         # admission pipeline configuration
-        self.buckets = tuple(sorted(set(
-            int(b) for b in (scfg.prefill_buckets
-                             or geometric_buckets(scfg.max_seq)))))
-        if self.buckets[0] < 1 or self.buckets[-1] > scfg.max_seq:
-            raise ValueError(
-                f"prefill_buckets {self.buckets} must lie in [1, "
-                f"max_seq={scfg.max_seq}]")
+        self.buckets = resolve_buckets(scfg)
         if scfg.prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0, got "
                              f"{scfg.prefill_chunk}")
@@ -341,25 +358,36 @@ class ServeEngine:
                 raise ValueError(
                     "in-model protected GEMMs are decoder-only; enc-dec "
                     "supports ft_scope='head' only")
-            # plan reuse: made ONCE, shared by every decode step, every
-            # admission-batch head projection, every in-model protected
-            # site and every autotune key
-            self.plan = make_plan(scfg.ft_M, scfg.ft_w)
-            self.head_q, self.w_scale = quantize_head(
-                self.model.head_weights(params, cfg))
-            # true [D, V] head dims — recorded BEFORE packing (the packed
-            # copy's contraction axis holds ceil(D/4) words, not D)
-            self._head_dims = tuple(self.head_q.shape)
-            if scfg.ft_packed:
-                self.head_q = pack_int8(self.head_q, axis=0)
-            # the protected-GEMM subsystem: one registry for the whole
-            # forward pass; layer sites get "auto" blocks only when the
-            # engine itself autotunes (a user dict targets the HEAD shape
-            # and must not leak onto differently-shaped layer GEMMs)
-            self.registry = PlanRegistry(
-                self.plan,
-                blocks="auto" if scfg.blocks == "auto" else None,
-                packed=scfg.ft_packed)
+            if warm is not None:
+                # fleet warm start: reuse the sibling replica's quantized
+                # head and plan registry verbatim — same config, same
+                # shapes, same grids
+                self.plan = warm["plan"]
+                self.head_q, self.w_scale = warm["head_q"], warm["w_scale"]
+                self._head_dims = warm["head_dims"]
+                self.registry = warm["registry"]
+            else:
+                # plan reuse: made ONCE, shared by every decode step, every
+                # admission-batch head projection, every in-model protected
+                # site and every autotune key
+                self.plan = make_plan(scfg.ft_M, scfg.ft_w)
+                self.head_q, self.w_scale = quantize_head(
+                    self.model.head_weights(params, cfg))
+                # true [D, V] head dims — recorded BEFORE packing (the
+                # packed copy's contraction axis holds ceil(D/4) words,
+                # not D)
+                self._head_dims = tuple(self.head_q.shape)
+                if scfg.ft_packed:
+                    self.head_q = pack_int8(self.head_q, axis=0)
+                # the protected-GEMM subsystem: one registry for the whole
+                # forward pass; layer sites get "auto" blocks only when the
+                # engine itself autotunes (a user dict targets the HEAD
+                # shape and must not leak onto differently-shaped layer
+                # GEMMs)
+                self.registry = PlanRegistry(
+                    self.plan,
+                    blocks="auto" if scfg.blocks == "auto" else None,
+                    packed=scfg.ft_packed)
             self.ftx = FTContext(registry=self.registry,
                                  scope=scfg.ft_scope,
                                  use_pallas=scfg.use_pallas,
@@ -408,6 +436,22 @@ class ServeEngine:
         # copies alongside the float masters, so a traced decode/prefill
         # step contains ZERO weight-quantization ops (tested via the
         # quantize.TRACE_STATS trace counter)
+        if warm is not None:
+            # fleet warm start: the census, compiled ProtectionPlans and
+            # startup-quantized params are immutable after startup, so a
+            # spawned replica of identical config reuses one copy —
+            # NO census retrace, NO plan compile, NO eq.-13 weight
+            # re-quantization, NO autotune sweep (tested: spawning the
+            # second replica leaves quantize.TRACE_STATS and the autotune
+            # sweep counter untouched). The shared CompiledPlans pools
+            # its ``misses`` counter across the fleet.
+            self.protected_census = warm["census"]
+            self._chunk_widths = self._all_chunk_widths()
+            self.plans = warm["plans"]
+            self.ft_params = warm["ft_params"]
+            if self.plans is not None:
+                self.ftx = self.ftx.with_plans(self.plans)
+            return
         self.protected_census = self._protected_shape_census()
         # every chunk width any admission — boundary or refill — can run:
         # refill-time plan reuse is checked against this set, because a
@@ -426,6 +470,31 @@ class ServeEngine:
                                             packed=scfg.ft_packed)
         if scfg.blocks == "auto":
             self.warm_autotune()
+
+    def _warm_sig(self) -> tuple:
+        """Config signature warm-started replicas must share. The clock is
+        excluded — it is the only per-process field and shapes no traced
+        program."""
+        return (self.cfg, dataclasses.replace(self.scfg, clock=None))
+
+    def warm_state(self) -> dict:
+        """Shareable startup products for spawning engine replicas of
+        IDENTICAL config — the fleet's scale-up seam. The protected-site
+        census, compiled :class:`~repro.ft.plans.CompiledPlans`,
+        startup-quantized ``ft_params`` and the quantized head are all
+        immutable after startup, so sibling replicas share one copy:
+        constructing ``ServeEngine(cfg, scfg, params, warm=...)`` re-runs
+        no census trace, no plan compile, no weight quantization and no
+        autotune sweep. Sharing CompiledPlans also pools its ``misses``
+        counter, so the fleet's ``misses == 0`` invariant covers every
+        replica at once."""
+        w = {"sig": self._warm_sig(), "census": self.protected_census,
+             "plans": self.plans, "ft_params": self.ft_params}
+        if self.scfg.ft_mode == "entangle":
+            w.update(plan=self.plan, head_q=self.head_q,
+                     w_scale=self.w_scale, head_dims=self._head_dims,
+                     registry=self.registry)
+        return w
 
     def submit(self, req: Request) -> RequestHandle:
         """Enqueue a request and return its async handle (iterate for the

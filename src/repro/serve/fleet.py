@@ -1,0 +1,329 @@
+"""Multi-replica serving fleet: replica pool, heartbeat health checks,
+fail-stop migration, and queue-depth autoscaling.
+
+This is the layer the ROADMAP calls entanglement ABOVE the engine: each
+:class:`~repro.serve.ServeEngine` already rolls forward past a failed
+in-kernel stream group; the :class:`Fleet` rolls forward past a failed
+whole REPLICA — lose a machine, keep every request — with recovery cost
+independent of the work the dead replica had already performed (one
+batched prefill of each request's generated prefix; see
+:mod:`repro.serve.router`).
+
+Structure (Ray Serve's router / replica-state / backpressure split is the
+design exemplar):
+
+  * :class:`Replica` — one engine behind a
+    :class:`~repro.serve.transport.ReplicaTransport`, with the lifecycle
+    STARTING -> HEALTHY -> DRAINING -> DEAD. STARTING replicas take no
+    traffic until their first heartbeat; DRAINING replicas finish what
+    they hold and retire; DEAD is terminal (either a graceful retire or a
+    fail-stop, distinguished by ``failed``).
+  * :class:`Fleet` — owns the pool and the step loop. One
+    :meth:`Fleet.step` = heartbeats -> shed -> dispatch -> one engine
+    step on every live replica -> token drain -> retire idle drainers ->
+    autoscale. Everything is driven by the injectable ``ServeConfig.clock``
+    and plain step counting, so a 4-replica fleet with a mid-decode kill
+    is a deterministic single-process Tier-1 test.
+  * :class:`ScalingPolicy` — spawns replicas when router queue depth
+    outruns the healthy pool and drains one when the queue is empty and
+    per-replica utilization (packed prompt tokens against the token
+    budget, or slot occupancy) falls below a floor.
+
+Spawned replicas reuse the first replica's
+:meth:`~repro.serve.ServeEngine.warm_state` — shared slot census,
+:class:`~repro.ft.plans.CompiledPlans`, quantized protected weights and
+autotune winners — so scale-up under load costs engine construction, not
+a startup re-sweep (``plans.misses == 0`` and zero new autotune sweeps on
+every replica after the first).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.serve.engine import Request, ServeConfig
+from repro.serve.router import Router
+from repro.serve.scheduler import RequestHandle
+from repro.serve.transport import (InProcessTransport, ReplicaDead,
+                                   ReplicaTransport)
+
+STARTING, HEALTHY, DRAINING, DEAD = "starting", "healthy", "draining", "dead"
+
+
+@dataclasses.dataclass
+class Replica:
+    """One pool member: a transport plus its lifecycle state. The fleet
+    is the only writer; the router only reads ``rid``/``transport``."""
+
+    rid: int
+    transport: ReplicaTransport
+    state: str = STARTING
+    failed: bool = False  # DEAD via fail-stop (vs graceful retirement)
+    active: int = 0  # slots active at the last step (occupancy signal)
+    packed_seen: int = 0  # packed_tokens counter at the last scale decision
+    steps_seen: int = 0  # fleet steps this replica was live since then
+
+    @property
+    def live(self) -> bool:
+        return self.state in (STARTING, HEALTHY, DRAINING)
+
+    def utilization(self, scfg: ServeConfig, packed_now: int) -> float:
+        """Fraction of serving capacity used since the last scaling
+        decision: packed prompt tokens against the per-step token budget
+        when token packing is on, slot occupancy otherwise."""
+        if self.steps_seen <= 0:
+            return 1.0  # no observation window yet — never a drain signal
+        if scfg.token_budget > 0:
+            return ((packed_now - self.packed_seen)
+                    / (self.steps_seen * scfg.token_budget))
+        return self.active / max(scfg.max_batch, 1)
+
+
+@dataclasses.dataclass
+class ScalingPolicy:
+    """Queue-depth / utilization autoscaling. Pure policy: ``decide``
+    looks at the router queue and per-replica utilization and returns
+    +1 (spawn), -1 (drain one) or 0 — the fleet applies the decision and
+    enforces the [min_replicas, max_replicas] bounds."""
+
+    min_replicas: int = 1
+    max_replicas: int = 4
+    scale_up_depth: int = 4  # queued requests PER HEALTHY replica
+    scale_down_util: float = 0.25  # drain when every replica is below this
+    decide_every: int = 8  # fleet steps between decisions
+
+    def __post_init__(self):
+        if self.min_replicas < 1:
+            raise ValueError(
+                f"min_replicas must be >= 1, got {self.min_replicas}")
+        if self.max_replicas < self.min_replicas:
+            raise ValueError(
+                f"max_replicas ({self.max_replicas}) < min_replicas "
+                f"({self.min_replicas})")
+        if self.decide_every < 1:
+            raise ValueError(
+                f"decide_every must be >= 1, got {self.decide_every}")
+
+    def decide(self, queue_depth: int, healthy: int,
+               utils: List[float]) -> int:
+        if healthy < self.min_replicas:
+            return 1
+        if (queue_depth > self.scale_up_depth * max(healthy, 1)
+                and healthy < self.max_replicas):
+            return 1
+        if (healthy > self.min_replicas and queue_depth == 0 and utils
+                and max(utils) < self.scale_down_util):
+            return -1
+        return 0
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Fleet-level knobs, separate from the per-engine ``ServeConfig``
+    (which every replica shares, minus router-owned admission fields)."""
+
+    replicas: int = 1  # initial pool size
+    heartbeat_every: int = 1  # fleet steps between health probes
+    policy: Optional[ScalingPolicy] = None  # None = fixed-size pool
+    transport_factory: Callable[..., ReplicaTransport] = InProcessTransport
+
+    def __post_init__(self):
+        if self.replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {self.replicas}")
+        if self.heartbeat_every < 1:
+            raise ValueError(
+                f"heartbeat_every must be >= 1, got {self.heartbeat_every}")
+
+
+class Fleet:
+    """N-replica serving fabric behind the single-engine surface:
+    ``submit() -> RequestHandle``, ``step()``, ``cancel()``, ``idle()``,
+    ``run_to_completion()`` — drop-in for :class:`ServeEngine` in every
+    caller, including :class:`~repro.serve.scheduler.RequestHandle`
+    itself (handle iteration drives ``Fleet.step``)."""
+
+    def __init__(self, cfg, scfg: ServeConfig, params,
+                 fcfg: Optional[FleetConfig] = None):
+        self.cfg, self.params = cfg, params
+        self.fcfg = fcfg or FleetConfig()
+        self.scfg = scfg
+        # replicas never shed or reject: admission control (max_queue,
+        # deadlines, EDF) lives in the router — the fleet's one gatekeeper
+        self.rep_scfg = dataclasses.replace(scfg, max_queue=0)
+        self.router = Router(self, scfg)
+        self.replicas: Dict[int, Replica] = {}
+        self._next_rid = 0
+        self._warm: Optional[dict] = None
+        self.steps = 0
+        self.metrics = {"spawned": 0, "retired": 0, "failed": 0,
+                        "scale_ups": 0, "scale_downs": 0}
+        for _ in range(self.fcfg.replicas):
+            self._spawn()
+
+    # -- pool management ------------------------------------------------------
+
+    def _spawn(self) -> Replica:
+        """Add a replica. The first one pays full engine startup (census
+        trace, plan compilation, weight quantization, autotune sweep) and
+        publishes its warm state; every later spawn reuses it, so scale-up
+        never re-sweeps."""
+        rid = self._next_rid
+        self._next_rid += 1
+        tr = self.fcfg.transport_factory(
+            self.cfg, self.rep_scfg, self.params,
+            replica_id=rid, warm=self._warm)
+        if self._warm is None:
+            self._warm = tr.warm_state()
+        rep = Replica(rid=rid, transport=tr)
+        self.replicas[rid] = rep
+        self.metrics["spawned"] += 1
+        return rep
+
+    def _fail(self, rep: Replica):
+        """Declare a replica fail-stopped: terminal state, then migrate
+        every request the router had assigned to it."""
+        if rep.state == DEAD:
+            return
+        rep.state, rep.failed = DEAD, True
+        self.metrics["failed"] += 1
+        self.router.migrate(rep.rid)
+
+    def kill_replica(self, rid: int):
+        """Inject a fail-stop (test/bench hook): the transport drops all
+        replica state; the next heartbeat (same step) detects and
+        migrates. Killing the last live replica is allowed — requests
+        wait in the router queue until a spawn or scale-up revives the
+        pool, exactly like a real full outage."""
+        self.replicas[rid].transport.kill()
+
+    def transport_of(self, rid: int) -> Optional[ReplicaTransport]:
+        rep = self.replicas.get(rid)
+        return rep.transport if rep is not None and rep.live else None
+
+    def _healthy(self) -> List[Replica]:
+        return [r for r in self.replicas.values() if r.state == HEALTHY]
+
+    # -- step loop ------------------------------------------------------------
+
+    def _heartbeats(self):
+        for rep in self.replicas.values():
+            if not rep.live:
+                continue
+            try:
+                ok = rep.transport.heartbeat()
+            except ReplicaDead:
+                ok = False
+            if not ok:
+                self._fail(rep)
+            elif rep.state == STARTING:
+                rep.state = HEALTHY  # first successful probe promotes
+
+    def step(self, failed_group: Optional[int] = None) -> int:
+        """One fleet step: health, admission, one engine step per live
+        replica, token drain, retirement, scaling. Returns total active
+        slots across live replicas (the engine-step contract).
+        ``failed_group`` is forwarded to every replica — the in-engine
+        stream-group fail-stop and the fleet-level replica fail-stop
+        compose."""
+        self.steps += 1
+        if (self.steps - 1) % self.fcfg.heartbeat_every == 0:
+            self._heartbeats()
+        self.router.shed()
+        self.router.dispatch(self._healthy())
+        active_total = 0
+        for rep in list(self.replicas.values()):
+            if not rep.live:
+                continue
+            try:
+                rep.active = rep.transport.step(failed_group=failed_group)
+            except ReplicaDead:
+                self._fail(rep)
+                continue
+            rep.steps_seen += 1
+            active_total += rep.active
+        self.router.drain()
+        self._retire_drained()
+        if self.fcfg.policy is not None and (
+                self.steps % self.fcfg.policy.decide_every == 0):
+            self._autoscale()
+        return active_total
+
+    def _retire_drained(self):
+        for rep in self.replicas.values():
+            if rep.state != DRAINING:
+                continue
+            try:
+                done = (self.router.assigned(rep.rid) == 0
+                        and rep.transport.idle())
+            except ReplicaDead:
+                continue  # heartbeat will fail it
+            if done:
+                rep.state = DEAD
+                self.metrics["retired"] += 1
+
+    def _autoscale(self):
+        pol = self.fcfg.policy
+        healthy = self._healthy()
+        utils = []
+        for rep in healthy:
+            try:
+                packed = rep.transport.metrics().get("packed_tokens", 0)
+            except ReplicaDead:
+                continue
+            utils.append(rep.utilization(self.rep_scfg, packed))
+            rep.packed_seen, rep.steps_seen = packed, 0
+        d = pol.decide(len(self.router.queue), len(healthy), utils)
+        if d > 0 and len(healthy) < pol.max_replicas:
+            self._spawn()
+            self.metrics["scale_ups"] += 1
+        elif d < 0 and len(healthy) > pol.min_replicas:
+            # drain the least-loaded healthy replica; it takes no new
+            # work and retires once its in-flight requests finish
+            rep = min(healthy, key=lambda r: (self.router.load(r.rid), r.rid))
+            rep.state = DRAINING
+            self.metrics["scale_downs"] += 1
+
+    # -- engine-compatible surface --------------------------------------------
+
+    def submit(self, req: Request) -> RequestHandle:
+        return self.router.submit(req)
+
+    def cancel(self, req: Request):
+        self.router.cancel(req)
+
+    def idle(self) -> bool:
+        return self.router.idle()
+
+    def run_to_completion(self, max_steps: int = 10_000,
+                          failed_group: Optional[int] = None) -> int:
+        """Step until every router-tracked request finishes. Returns the
+        steps taken; raises if the fleet cannot drain (e.g. every replica
+        dead with an empty scaling policy)."""
+        for n in range(max_steps):
+            if self.idle():
+                return n
+            self.step(failed_group=failed_group)
+        if not self.idle():
+            raise RuntimeError(
+                f"fleet did not drain within {max_steps} steps "
+                f"({len(self.router.records)} live records, "
+                f"{len(self.router.queue)} queued, "
+                f"{len(self._healthy())} healthy replicas)")
+        return max_steps
+
+    def fleet_metrics(self) -> dict:
+        """Aggregated observability: fleet counters + router counters +
+        per-replica state/engine metrics."""
+        out = dict(self.metrics)
+        out.update({f"router_{k}": v for k, v in self.router.metrics.items()})
+        per = {}
+        for rid, rep in self.replicas.items():
+            entry = {"state": rep.state, "failed": rep.failed}
+            if rep.live:
+                try:
+                    entry["engine"] = rep.transport.metrics()
+                except ReplicaDead:
+                    pass
+            per[rid] = entry
+        out["replicas"] = per
+        return out

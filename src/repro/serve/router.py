@@ -1,0 +1,318 @@
+"""Front-end router of the multi-replica serving fabric: one request
+queue above N replica engines, with fail-stop migration.
+
+The router owns ADMISSION for the whole fleet — ``max_queue`` saturation
+control, EDF ordering and deadline shedding move up here (the per-replica
+:class:`~repro.serve.scheduler.ChunkScheduler` keeps ordering the prefill
+chunks *inside* each engine) — and it owns the only state recovery ever
+needs: a per-request census of what was dispatched where and which tokens
+have streamed back.
+
+Request flow
+------------
+``submit()`` registers a :class:`FleetRecord` and returns the standard
+:class:`~repro.serve.scheduler.RequestHandle` over a ROUTER-level
+:class:`~repro.serve.scheduler.TokenRing`. Dispatch picks the least-loaded
+HEALTHY replica and submits a SHADOW request to its engine; after each
+fleet step the router drains the shadow's engine-level ring into the
+router-level ring. The caller's handle therefore never references a
+replica: iterating it keeps yielding tokens across a replica fail-stop —
+the iterator cannot even observe that a migration happened.
+
+Fail-stop migration
+-------------------
+When a replica dies, its engine state (KV cache, slots, in-flight
+admission batches) is unrecoverable. The router re-dispatches every
+affected request from its own census:
+
+  * **queued / mid-prefill** rows (no tokens streamed yet) simply replay:
+    the prompt re-enters the router queue and prefills — batched, through
+    the normal admission pipeline — on a healthy replica.
+  * **decoding** rows resume from their generated-token PREFIX: the
+    shadow prompt becomes ``prompt + tokens_so_far`` and ``max_new``
+    shrinks by the prefix length, so recovery costs one batched prefill
+    of the context — independent of how many decode steps the dead
+    replica had already spent (the fault-oblivious no-rollback property).
+    Greedy decode is deterministic and the engine's prefill/decode paths
+    are bit-identical, so the continuation tokens equal the no-failure
+    run's exactly (tested).
+  * when the prefix outgrows the largest prefill bucket, the router falls
+    back to **recompute**: the original prompt replays with full
+    ``max_new`` and the first ``len(prefix)`` regenerated tokens are
+    suppressed at drain time — the caller's stream never repeats a token.
+
+Migrated requests keep their original ``t_submit``, so EDF puts them at
+the front of their deadline class; they are never deadline-shed (their
+admission already happened — the compute is sunk, and shedding them would
+turn a replica failure into a visible SLA failure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serve.engine import Request, ServeConfig, resolve_buckets
+from repro.serve.scheduler import (ChunkScheduler, RequestHandle, TokenRing)
+from repro.serve.transport import ReplicaDead
+
+
+@dataclasses.dataclass
+class FleetRecord:
+    """The router's census entry for one submitted request — everything
+    migration needs, and nothing a dead replica holds: the caller's
+    request, the router-level ring its handle pops, every token emitted
+    so far (the migration prefix), and the current shadow dispatch."""
+
+    req: Request
+    ring: TokenRing
+    toks: list = dataclasses.field(default_factory=list)
+    replica: Optional[int] = None  # replica id; None = in the router queue
+    shadow: Optional[Request] = None  # engine-level request on the replica
+    eh: Optional[RequestHandle] = None  # engine handle (token source)
+    skip: int = 0  # regenerated-prefix tokens to suppress (recompute path)
+    migrations: int = 0
+    dispatched: bool = False  # ever admitted to a replica (never shed then)
+
+
+class Router:
+    """Fleet front-end: request queue, dispatch, token drain, migration.
+
+    The fleet calls the phases in order each step: :meth:`shed` ->
+    :meth:`dispatch` -> (replica steps) -> :meth:`drain`; :meth:`migrate`
+    fires whenever a replica is declared dead. ``fleet`` only needs
+    ``step()`` / ``cancel()`` (the :class:`RequestHandle` contract) and a
+    way to look up transports by replica id (``transport_of``)."""
+
+    def __init__(self, fleet, scfg: ServeConfig):
+        self.fleet = fleet
+        self.scfg = scfg
+        self.clock = scfg.clock or time.monotonic
+        # router-level admission control: the engine-side queues stay
+        # unbounded — the router is the fleet's single gatekeeper
+        self.sched = ChunkScheduler(max_queue=scfg.max_queue,
+                                    clock=self.clock)
+        self.buckets = resolve_buckets(scfg)
+        self.queue: List[Request] = []
+        self.records: dict[int, FleetRecord] = {}  # id(req) -> record
+        self.metrics = {"queue_depth_peak": 0, "rejected": 0, "shed": 0,
+                        "cancelled": 0, "migrated": 0, "resume_prefix": 0,
+                        "resume_recompute": 0, "replayed": 0}
+
+    # -- admission ------------------------------------------------------------
+
+    def submit(self, req: Request) -> RequestHandle:
+        """Register a request with the fleet. Capacity contracts are the
+        engine's, enforced HERE (the request may land on any replica —
+        including one spawned later — so the bounds must hold fleet-wide);
+        saturation raises the same typed
+        :class:`~repro.serve.scheduler.AdmissionRejected`."""
+        if len(req.prompt) > self.buckets[-1]:
+            raise ValueError(
+                f"request rid={req.rid} prompt length {len(req.prompt)} > "
+                f"largest prefill bucket {self.buckets[-1]} (configure "
+                f"prefill_buckets / raise max_seq)")
+        need = len(req.prompt) + req.max_new
+        if need > self.scfg.max_seq:
+            raise ValueError(
+                f"request rid={req.rid} needs {need} positions "
+                f"(prompt {len(req.prompt)} + max_new {req.max_new}) "
+                f"> max_seq={self.scfg.max_seq}")
+        try:
+            self.sched.check_admission(req.rid, len(self.queue))
+        except Exception:
+            self.metrics["rejected"] += 1
+            raise
+        req.status = "queued"
+        req.t_submit = self.clock()
+        rec = FleetRecord(req=req, ring=TokenRing(req.max_new))
+        self.records[id(req)] = rec
+        self.queue.append(req)
+        self.metrics["queue_depth_peak"] = max(
+            self.metrics["queue_depth_peak"], len(self.queue))
+        return RequestHandle(self.fleet, req, rec.ring)
+
+    def shed(self):
+        """Deadline-shed lapsed QUEUED requests that were never admitted
+        anywhere. Migrated requests are exempt: their admission happened —
+        a replica failure must not become a visible SLA failure."""
+        if not any(r.deadline_ms is not None and
+                   not self.records[id(r)].dispatched for r in self.queue):
+            return
+        fresh = [r for r in self.queue
+                 if not self.records[id(r)].dispatched]
+        kept, shed = self.sched.shed_expired(fresh)
+        if not shed:
+            return
+        gone = {id(r) for r in shed}
+        self.queue = [r for r in self.queue if id(r) not in gone]
+        now = self.clock()
+        for req in shed:
+            req.status = "shed"
+            req.out = np.zeros(0, np.int32)
+            req.t_done = now
+            del self.records[id(req)]
+            self.metrics["shed"] += 1
+
+    # -- dispatch -------------------------------------------------------------
+
+    def load(self, replica_id: int) -> int:
+        """Live records assigned to a replica — the dispatch balance key
+        and the per-replica backpressure bound (capacity = max_batch: the
+        router never queues more work on a replica than its slot pool,
+        keeping the migration blast radius and the router queue — the
+        scaling signal — both honest)."""
+        return sum(1 for rec in self.records.values()
+                   if rec.replica == replica_id)
+
+    def dispatch(self, healthy: list):
+        """Assign queued requests (EDF order) to the least-loaded healthy
+        replicas, up to each replica's slot capacity. ``healthy`` is a
+        list of objects with ``rid`` + ``transport`` (fleet Replicas)."""
+        if not self.queue or not healthy:
+            return
+        loads = {rep.rid: self.load(rep.rid) for rep in healthy}
+        by_rid = {rep.rid: rep for rep in healthy}
+        remaining = []
+        for req in self.sched.order_queue(self.queue):
+            rid = min((r for r in loads if loads[r] < self.scfg.max_batch),
+                      key=lambda r: (loads[r], r), default=None)
+            if rid is None:
+                remaining.append(req)
+                continue
+            if self._dispatch_one(self.records[id(req)], by_rid[rid]):
+                loads[rid] += 1
+            else:
+                remaining.append(req)
+        self.queue = remaining
+
+    def _dispatch_one(self, rec: FleetRecord, rep) -> bool:
+        """Submit one record's shadow request to a replica. Returns False
+        (leaving the record queued) if the replica died under us."""
+        req = rec.req
+        k = len(rec.toks)
+        if k == 0:
+            prompt, max_new, skip = req.prompt, req.max_new, 0
+            if rec.migrations:
+                self.metrics["replayed"] += 1
+        elif len(req.prompt) + k <= self.buckets[-1]:
+            # decode-prefix resume: prefill the generated prefix as
+            # context, continue decoding where the dead replica stopped.
+            # Cost: one batched prefill of len(prompt)+k tokens —
+            # independent of the decode steps already performed.
+            prompt = np.concatenate(
+                [req.prompt, np.asarray(rec.toks, np.int32)])
+            max_new, skip = req.max_new - k, 0
+            self.metrics["resume_prefix"] += 1
+        else:
+            # prefix outgrew the bucket set: recompute from the original
+            # prompt and suppress the k regenerated tokens at drain time
+            # (greedy decode is deterministic, so they are the SAME k
+            # tokens the caller already streamed)
+            prompt, max_new, skip = req.prompt, req.max_new, k
+            self.metrics["resume_recompute"] += 1
+        shadow = Request(rid=req.rid, prompt=np.asarray(prompt, np.int32),
+                         max_new=max_new, eos_token=req.eos_token)
+        try:
+            rec.eh = rep.transport.submit(shadow)
+        except ReplicaDead:
+            return False
+        rec.shadow, rec.replica = shadow, rep.rid
+        rec.skip, rec.dispatched = skip, True
+        req.status = "prefill"
+        return True
+
+    # -- token drain ----------------------------------------------------------
+
+    def drain(self):
+        """Pull every shadow's newly generated tokens into the router-
+        level rings, mirror engine status onto the caller's request, and
+        finalize completed requests."""
+        now = self.clock()
+        for rec in list(self.records.values()):
+            if rec.eh is None:
+                continue
+            req = rec.req
+            while len(rec.eh.ring):
+                tok = rec.eh.ring.pop()
+                if rec.skip:
+                    rec.skip -= 1
+                    continue
+                rec.toks.append(tok)
+                rec.ring.push(tok)
+                if req.t_first is None:
+                    req.t_first = now
+                req.tok_times.append(now)
+            st = rec.shadow.status
+            if st == "done":
+                self._finalize(rec, now)
+            elif st == "decoding":
+                req.status = "decoding"
+            # engine-queued / prefill shadows stay caller-visible as
+            # "prefill": the request IS admitted fleet-side
+
+    def _finalize(self, rec: FleetRecord, now: float):
+        req = rec.req
+        req.out = np.asarray(rec.toks[: req.max_new], np.int32)
+        req.status = "done"
+        req.t_done = now
+        del self.records[id(req)]
+
+    # -- migration ------------------------------------------------------------
+
+    def migrate(self, replica_id: int):
+        """Re-dispatch every request assigned to a dead replica from the
+        router's census. Tokens already streamed are kept; the resume
+        strategy (prefix vs recompute) is chosen per request at the next
+        dispatch. The caller's handle keeps its ring — nothing observable
+        changes except a short queue re-entry."""
+        for rec in list(self.records.values()):
+            if rec.replica != replica_id:
+                continue
+            rec.replica = rec.shadow = rec.eh = None
+            rec.skip = 0
+            rec.migrations += 1
+            req = rec.req
+            if len(rec.toks) >= req.max_new or (
+                    req.eos_token is not None and rec.toks
+                    and rec.toks[-1] == req.eos_token):
+                # fully generated but not yet finalized (death raced the
+                # drain): complete it — nothing left to recover
+                self._finalize(rec, self.clock())
+            else:
+                req.status = "queued"
+                self.queue.append(req)
+            self.metrics["migrated"] += 1
+
+    # -- cancellation / lifecycle --------------------------------------------
+
+    def cancel(self, req: Request):
+        """Fleet-wide cancel in any state: router-queued requests leave
+        the queue; dispatched shadows cancel on their replica (a dead
+        replica is moot — the state is gone anyway)."""
+        rec = self.records.get(id(req))
+        if rec is None or req.status in ("done", "cancelled", "shed"):
+            return
+        if rec.replica is None:
+            self.queue = [r for r in self.queue if r is not req]
+        else:
+            tr = self.fleet.transport_of(rec.replica)
+            if tr is not None:
+                try:
+                    tr.cancel(rec.shadow)
+                except ReplicaDead:
+                    pass
+        req.status = "cancelled"
+        req.out = np.asarray(rec.toks, np.int32)
+        req.t_done = self.clock()
+        del self.records[id(req)]
+        self.metrics["cancelled"] += 1
+
+    def assigned(self, replica_id: int) -> int:
+        """Live records currently on a replica (drain-progress probe)."""
+        return self.load(replica_id)
+
+    def idle(self) -> bool:
+        return not self.queue and not self.records

@@ -1,0 +1,137 @@
+"""Replica transport seam of the multi-replica serving fabric.
+
+The router and fleet never touch a :class:`~repro.serve.ServeEngine`
+directly — every interaction goes through a :class:`ReplicaTransport`, so
+the SAME router/migration/scaling logic drives in-process replicas (this
+module's :class:`InProcessTransport`, the Tier-1-testable default: a
+4-replica fleet is four engines in one process) and, later, remote
+replicas behind an RPC boundary.
+
+Fail-stop semantics are the paper's: a killed replica loses ALL state —
+:meth:`InProcessTransport.kill` drops the engine object outright, and
+every subsequent call raises :class:`ReplicaDead`. Recovery therefore
+cannot read anything back from the dead replica; the router's own
+request census (what it dispatched, which tokens streamed back) is the
+only recovery input — which is exactly what makes the recovery cost
+independent of the work the replica had already performed.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.serve.engine import ServeEngine
+
+
+class ReplicaDead(RuntimeError):
+    """Raised by every call on a fail-stopped replica transport. The
+    fleet treats it exactly like a missed heartbeat: mark the replica
+    DEAD and migrate its in-flight requests."""
+
+    def __init__(self, replica_id, op: str = "call"):
+        self.replica_id, self.op = replica_id, op
+        super().__init__(
+            f"replica {replica_id} is dead (fail-stop): {op} refused")
+
+
+class ReplicaTransport:
+    """Abstract seam between the router and one replica's engine.
+
+    Implementations must preserve two contracts the fleet builds on:
+
+      * **fail-stop, not fail-slow** — after :meth:`kill` (or a real
+        crash) every method raises :class:`ReplicaDead`; no call may
+        return stale data from a dead replica.
+      * **engine-compatible streaming** — :meth:`submit` returns the
+        engine's :class:`~repro.serve.scheduler.RequestHandle`, whose
+        :class:`~repro.serve.scheduler.TokenRing` the router drains after
+        each step; token order is the engine's emission order.
+    """
+
+    replica_id: int = -1
+
+    def submit(self, req):
+        """Dispatch a (shadow) request to the replica's engine; returns
+        the engine-level handle whose ring the router drains."""
+        raise NotImplementedError
+
+    def cancel(self, req):
+        raise NotImplementedError
+
+    def step(self, failed_group: Optional[int] = None) -> int:
+        """Advance the replica's engine one step; returns active slots."""
+        raise NotImplementedError
+
+    def heartbeat(self) -> bool:
+        """Health probe. True = alive; False / :class:`ReplicaDead` =
+        fail the replica."""
+        raise NotImplementedError
+
+    def idle(self) -> bool:
+        raise NotImplementedError
+
+    def metrics(self) -> dict:
+        raise NotImplementedError
+
+    def kill(self):
+        """Inject a fail-stop: all replica state is lost, every later
+        call raises :class:`ReplicaDead`."""
+        raise NotImplementedError
+
+    def warm_state(self) -> Optional[dict]:
+        """Shareable startup state (census / compiled plans / quantized
+        weights / autotune winners) for spawning sibling replicas of
+        identical config without re-running startup work. ``None`` when
+        the transport cannot share it (e.g. across a process boundary)."""
+        return None
+
+
+class InProcessTransport(ReplicaTransport):
+    """A replica as an in-process :class:`ServeEngine` — the seam's
+    default implementation and the one Tier-1 tests drive: a whole fleet
+    lives in one process, and :meth:`kill` simulates a machine loss by
+    dropping the engine (state unrecoverable) and poisoning the seam.
+
+    ``warm`` is a sibling engine's :meth:`ServeEngine.warm_state`: a
+    spawned replica of identical config reuses the shared census /
+    compiled plans / quantized weights / autotune winners instead of
+    re-running startup work (the fleet's scale-up path)."""
+
+    def __init__(self, cfg, scfg, params, *, replica_id: int = 0,
+                 warm: Optional[dict] = None):
+        self.replica_id = replica_id
+        self._dead = False
+        self.engine: Optional[ServeEngine] = ServeEngine(
+            cfg, scfg, params, warm=warm)
+
+    def _live(self, op: str) -> ServeEngine:
+        if self._dead or self.engine is None:
+            raise ReplicaDead(self.replica_id, op)
+        return self.engine
+
+    def submit(self, req):
+        return self._live("submit").submit(req)
+
+    def cancel(self, req):
+        self._live("cancel").cancel(req)
+
+    def step(self, failed_group: Optional[int] = None) -> int:
+        return self._live("step").step(failed_group=failed_group)
+
+    def heartbeat(self) -> bool:
+        self._live("heartbeat")
+        return True
+
+    def idle(self) -> bool:
+        return self._live("idle").idle()
+
+    def metrics(self) -> dict:
+        return dict(self._live("metrics").metrics)
+
+    def warm_state(self) -> Optional[dict]:
+        return self._live("warm_state").warm_state()
+
+    def kill(self):
+        # fail-stop: the engine (cache, slots, in-flight admission state)
+        # is GONE — recovery must work from the router's census alone
+        self._dead = True
+        self.engine = None

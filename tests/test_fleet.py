@@ -1,0 +1,353 @@
+"""Multi-replica fleet invariants: fail-stop migration, warm scale-up,
+replica lifecycle, autoscaling.
+
+  * ACCEPTANCE: a 4-replica single-process fleet kills one replica
+    mid-decode and every in-flight request completes with tokens
+    bit-identical to a no-failure single-engine run — decode-prefix
+    resume for short contexts, batched-prefill recompute (with
+    regenerated-prefix suppression) otherwise — and the surviving
+    replicas' shared ``CompiledPlans.misses`` stays 0;
+  * the caller's RequestHandle/TokenRing surface stays valid across a
+    migration: an iterator started before the kill streams the full
+    no-failure token sequence, never repeats a token, and never learns a
+    replica died;
+  * queued and mid-prefill requests on the dead replica replay via
+    normal batched admission on survivors;
+  * spawned replicas reuse the first replica's warm state: no autotune
+    re-sweep, no weight re-quantization, the SAME CompiledPlans object;
+  * replica lifecycle: STARTING promotes on first heartbeat, DRAINING
+    finishes in-flight work then retires, fail-stop is terminal;
+  * ScalingPolicy: queue depth spawns, idle low-utilization drains,
+    bounds respected.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels import autotune
+from repro.ft import quantize
+from repro.models import get_model
+from repro.serve import (DEAD, DRAINING, HEALTHY, STARTING, Fleet,
+                         FleetConfig, ReplicaDead, Request, ScalingPolicy,
+                         ServeConfig, ServeEngine)
+
+RNG = np.random.default_rng(23)
+_PARAMS_CACHE: dict = {}
+
+
+def _setup(arch: str, max_seq: int = 48):
+    if arch not in _PARAMS_CACHE:
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0), cfg, max_seq=max_seq)
+        _PARAMS_CACHE[arch] = (cfg, model, params)
+    return _PARAMS_CACHE[arch]
+
+
+def _prompts(vocab, lengths):
+    return [RNG.integers(0, vocab, size=n).astype(np.int32)
+            for n in lengths]
+
+
+def _scfg(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_seq", 48)
+    kw.setdefault("prefill_buckets", (8, 16))
+    kw.setdefault("prefill_chunk", 8)
+    return ServeConfig(**kw)
+
+
+def _reference(cfg, scfg, params, prompts, max_new):
+    """No-failure single-engine run — the bit-identity oracle."""
+    eng = ServeEngine(cfg, scfg, params)
+    hs = [eng.submit(Request(rid=i, prompt=p, max_new=max_new))
+          for i, p in enumerate(prompts)]
+    eng.run_to_completion(max_steps=500)
+    return [np.asarray(h.req.out).copy() for h in hs]
+
+
+# -- acceptance: kill mid-decode, bit-identical completion --------------------
+
+
+@pytest.mark.parametrize("arch,ft_mode,ft_scope", [
+    ("llama3.2-1b", "none", "head"),
+    ("llama3.2-1b", "entangle", "all"),
+    ("falcon-mamba-7b", "entangle", "head"),
+])
+def test_kill_mid_decode_completes_bit_identical(arch, ft_mode, ft_scope):
+    """The headline guarantee: 4 replicas, kill one mid-decode, every
+    request finishes with the no-failure run's exact tokens; surviving
+    replicas' (shared) plans never miss."""
+    cfg, _, params = _setup(arch)
+    scfg = _scfg(ft_mode=ft_mode, ft_scope=ft_scope,
+                 token_budget=16 if ft_mode == "none" else 0)
+    # short prompts exercise decode-prefix resume; the 15-token ones can
+    # outgrow the 16 bucket once a prefix is appended -> recompute path
+    prompts = _prompts(cfg.vocab_size, (4, 9, 12, 5, 15, 3, 15, 6))
+    ref = _reference(cfg, scfg, params, prompts, max_new=10)
+
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=4))
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=10))
+          for i, p in enumerate(prompts)]
+    for _ in range(6):
+        fleet.step()
+    assert any(h.status == "decoding" for h in hs), "kill must land mid-decode"
+    fleet.kill_replica(2)
+    fleet.run_to_completion(max_steps=500)
+
+    m = fleet.fleet_metrics()
+    assert m["failed"] == 1 and m["router_migrated"] >= 1
+    assert fleet.replicas[2].state == DEAD and fleet.replicas[2].failed
+    for h, want in zip(hs, ref):
+        assert h.status == "done"
+        np.testing.assert_array_equal(np.asarray(h.req.out), want)
+    for rid, rep in fleet.replicas.items():
+        if rep.live and rep.transport.engine.plans is not None:
+            assert rep.transport.engine.plans.misses == 0
+
+
+def test_both_resume_paths_exercised_and_exact():
+    """Force one request down each recovery path — decode-prefix resume
+    (prompt + prefix fits the largest bucket) and full recompute with
+    prefix suppression (it doesn't) — and check both streams match the
+    no-failure oracle."""
+    cfg, _, params = _setup("llama3.2-1b")
+    scfg = _scfg()
+    prompts = _prompts(cfg.vocab_size, (4, 15))  # 4+k <= 16; 15+k > 16
+    ref = _reference(cfg, scfg, params, prompts, max_new=12)
+
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=3))
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=12))
+          for i, p in enumerate(prompts)]
+    # both requests decode for a few steps (k >= 2) before the kill
+    for _ in range(7):
+        fleet.step()
+    assert all(h.status == "decoding" for h in hs)
+    # least-loaded dispatch spreads the two requests over distinct
+    # replicas; kill each holder (letting the first migration re-land in
+    # between) so BOTH recovery paths run, with the third replica as the
+    # survivor absorbing everything
+    holder0 = fleet.router.records[id(hs[0].req)].replica
+    fleet.kill_replica(holder0)
+    fleet.step()  # detect + migrate request 0 before the second kill
+    holder1 = fleet.router.records[id(hs[1].req)].replica
+    if holder1 != holder0:
+        fleet.kill_replica(holder1)
+    fleet.run_to_completion(max_steps=500)
+    m = fleet.fleet_metrics()
+    assert m["router_resume_prefix"] >= 1, "short prompt must prefix-resume"
+    assert m["router_resume_recompute"] >= 1, "long prompt must recompute"
+    for h, want in zip(hs, ref):
+        assert h.status == "done"
+        np.testing.assert_array_equal(np.asarray(h.req.out), want)
+
+
+def test_handle_iterator_survives_migration():
+    """An iterator opened BEFORE the kill keeps streaming across it:
+    full no-failure sequence, no repeats, no exception — the caller
+    cannot observe that a replica died."""
+    cfg, _, params = _setup("llama3.2-1b")
+    scfg = _scfg()
+    prompts = _prompts(cfg.vocab_size, (5, 7, 9))
+    ref = _reference(cfg, scfg, params, prompts, max_new=10)
+
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=2))
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=10))
+          for i, p in enumerate(prompts)]
+    streams = [[] for _ in hs]
+    its = [h.tokens() for h in hs]
+    # interleave: pull a few tokens from each handle, then kill
+    for _ in range(3):
+        for toks, it in zip(streams, its):
+            toks.append(next(it))
+    fleet.kill_replica(0)
+    for toks, it in zip(streams, its):
+        toks.extend(it)  # drain to completion through the SAME iterator
+    for toks, want in zip(streams, ref):
+        np.testing.assert_array_equal(np.asarray(toks, np.int32), want)
+
+
+def test_queued_and_mid_prefill_requests_replay():
+    """Requests the dead replica had not started decoding (router-queued
+    or mid-prefill on the replica) replay via normal batched admission on
+    survivors — same tokens, counted as replays not resumes."""
+    cfg, _, params = _setup("llama3.2-1b")
+    scfg = _scfg(prefill_chunk=4, max_prefill_per_step=1)
+    # long prompts so prefill takes several steps; more requests than
+    # fleet slots so some stay router-queued at the kill
+    prompts = _prompts(cfg.vocab_size, (16, 16, 16, 16, 16, 16))
+    ref = _reference(cfg, scfg, params, prompts, max_new=6)
+
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=2))
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=6))
+          for i, p in enumerate(prompts)]
+    fleet.step()  # dispatch + first prefill chunk only
+    assert any(h.status == "prefill" for h in hs)
+    assert not any(h.status == "decoding" for h in hs)
+    fleet.kill_replica(1)
+    fleet.run_to_completion(max_steps=500)
+    m = fleet.fleet_metrics()
+    assert m["router_migrated"] >= 1
+    assert m["router_resume_prefix"] == 0 and m["router_resume_recompute"] == 0
+    assert m["router_replayed"] >= 1
+    for h, want in zip(hs, ref):
+        assert h.status == "done"
+        np.testing.assert_array_equal(np.asarray(h.req.out), want)
+
+
+# -- warm scale-up ------------------------------------------------------------
+
+
+def test_spawn_shares_warm_state_no_resweep():
+    """Satellite 6: replica 2..N of identical config reuse replica 1's
+    census / CompiledPlans / quantized weights / autotune winners —
+    spawning does zero sweeps, zero weight-quantize calls, and shares the
+    SAME CompiledPlans object (one pooled ``misses`` counter)."""
+    cfg, _, params = _setup("llama3.2-1b")
+    scfg = _scfg(ft_mode="entangle", ft_scope="all", blocks="auto")
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=1))
+    e0 = fleet.replicas[0].transport.engine
+    assert e0.plans is not None
+
+    sweeps0 = autotune.stats()["sweeps"]
+    wq0 = quantize.TRACE_STATS["weight_quantize_calls"]
+    rep1 = fleet._spawn()
+    assert autotune.stats()["sweeps"] == sweeps0, "spawn re-swept autotune"
+    assert quantize.TRACE_STATS["weight_quantize_calls"] == wq0, \
+        "spawn re-quantized protected weights"
+    e1 = rep1.transport.engine
+    assert e1.plans is e0.plans
+    assert e1.ft_params is e0.ft_params
+    assert e1.protected_census is e0.protected_census
+    assert e1.plans.misses == 0
+
+    # ...and the spawned replica actually serves: run a wave across both
+    prompts = _prompts(cfg.vocab_size, (5, 6, 7, 8))
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=4))
+          for i, p in enumerate(prompts)]
+    fleet.run_to_completion(max_steps=300)
+    assert all(h.status == "done" for h in hs)
+    assert e0.plans.misses == 0
+
+
+def test_warm_state_rejects_config_mismatch():
+    """A warm dict from a differently-configured engine must be refused —
+    silently serving another program set's plans would be memory-unsafe
+    at the kernel level."""
+    cfg, _, params = _setup("llama3.2-1b")
+    eng = ServeEngine(cfg, _scfg(), params)
+    other = dataclasses.replace(_scfg(), max_batch=8)
+    with pytest.raises(ValueError, match="differently-configured"):
+        ServeEngine(cfg, other, params, warm=eng.warm_state())
+
+
+# -- lifecycle ----------------------------------------------------------------
+
+
+def test_replica_lifecycle_and_drain_retirement():
+    """STARTING promotes on the first heartbeat; a DRAINING replica takes
+    no new dispatches, finishes what it holds, then retires DEAD with
+    ``failed=False`` (graceful, distinct from fail-stop)."""
+    cfg, _, params = _setup("llama3.2-1b")
+    fleet = Fleet(cfg, _scfg(), params, FleetConfig(replicas=2))
+    assert all(r.state == STARTING for r in fleet.replicas.values())
+    h0 = fleet.submit(Request(rid=0, prompt=_prompts(cfg.vocab_size, (6,))[0],
+                              max_new=6))
+    fleet.step()
+    assert all(r.state == HEALTHY for r in fleet.replicas.values())
+
+    # drain whichever replica holds the request
+    holder = fleet.router.records[id(h0.req)].replica
+    fleet.replicas[holder].state = DRAINING
+    h1 = fleet.submit(Request(rid=1, prompt=_prompts(cfg.vocab_size, (6,))[0],
+                              max_new=6))
+    fleet.step()
+    assert fleet.router.records[id(h1.req)].replica != holder, \
+        "DRAINING replica accepted new work"
+    fleet.run_to_completion(max_steps=300)
+    assert h0.status == "done" and h1.status == "done"
+    assert fleet.replicas[holder].state == DEAD
+    assert not fleet.replicas[holder].failed
+    assert fleet.fleet_metrics()["retired"] == 1
+
+
+def test_dead_transport_refuses_everything():
+    cfg, _, params = _setup("llama3.2-1b")
+    fleet = Fleet(cfg, _scfg(), params, FleetConfig(replicas=1))
+    tr = fleet.replicas[0].transport
+    tr.kill()
+    for op in (lambda: tr.step(), lambda: tr.heartbeat(), lambda: tr.idle(),
+               lambda: tr.metrics(), lambda: tr.warm_state(),
+               lambda: tr.submit(Request(rid=9, prompt=np.zeros(4, np.int32)))):
+        with pytest.raises(ReplicaDead):
+            op()
+
+
+def test_kill_last_replica_recovers_via_autoscaling():
+    """Killing the only live replica is a full outage: requests wait in
+    the router queue until the scaling policy revives the pool, then
+    complete with the no-failure tokens."""
+    cfg, _, params = _setup("llama3.2-1b")
+    scfg = _scfg()
+    prompts = _prompts(cfg.vocab_size, (5, 9))
+    ref = _reference(cfg, scfg, params, prompts, max_new=6)
+    pol = ScalingPolicy(min_replicas=1, max_replicas=2, scale_up_depth=99,
+                        decide_every=1)
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=1, policy=pol))
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=6))
+          for i, p in enumerate(prompts)]
+    for _ in range(3):
+        fleet.step()
+    fleet.kill_replica(0)
+    fleet.run_to_completion(max_steps=300)
+    m = fleet.fleet_metrics()
+    assert m["failed"] == 1 and m["spawned"] >= 2
+    for h, want in zip(hs, ref):
+        assert h.status == "done"
+        np.testing.assert_array_equal(np.asarray(h.req.out), want)
+
+
+# -- autoscaling --------------------------------------------------------------
+
+
+def test_scaling_policy_decisions():
+    pol = ScalingPolicy(min_replicas=1, max_replicas=4, scale_up_depth=4,
+                        scale_down_util=0.25)
+    assert pol.decide(queue_depth=0, healthy=0, utils=[]) == 1  # below min
+    assert pol.decide(queue_depth=9, healthy=2, utils=[1.0, 1.0]) == 1
+    assert pol.decide(queue_depth=8, healthy=2, utils=[1.0, 1.0]) == 0
+    assert pol.decide(queue_depth=0, healthy=2, utils=[0.1, 0.2]) == -1
+    assert pol.decide(queue_depth=0, healthy=2, utils=[0.1, 0.9]) == 0
+    assert pol.decide(queue_depth=0, healthy=1, utils=[0.0]) == 0  # at min
+    assert pol.decide(queue_depth=99, healthy=4, utils=[1.0] * 4) == 0  # at max
+    with pytest.raises(ValueError, match="min_replicas"):
+        ScalingPolicy(min_replicas=0)
+    with pytest.raises(ValueError, match="max_replicas"):
+        ScalingPolicy(min_replicas=3, max_replicas=2)
+
+
+def test_fleet_scales_up_then_drains_idle_replica():
+    """Deep queue spawns a (warm) replica; when the burst drains and
+    utilization collapses, the policy retires one back toward min."""
+    cfg, _, params = _setup("llama3.2-1b")
+    scfg = _scfg(token_budget=16)
+    pol = ScalingPolicy(min_replicas=1, max_replicas=2, scale_up_depth=2,
+                        scale_down_util=0.25, decide_every=2)
+    fleet = Fleet(cfg, scfg, params, FleetConfig(replicas=1, policy=pol))
+    prompts = _prompts(cfg.vocab_size, (8,) * 10)
+    hs = [fleet.submit(Request(rid=i, prompt=p, max_new=6))
+          for i, p in enumerate(prompts)]
+    fleet.run_to_completion(max_steps=500)
+    m = fleet.fleet_metrics()
+    assert m["scale_ups"] >= 1
+    assert all(h.status == "done" for h in hs)
+    # burst is over: keep stepping idle — low utilization drains back
+    for _ in range(3 * pol.decide_every):
+        fleet.step()
+    m = fleet.fleet_metrics()
+    assert m["scale_downs"] >= 1
+    assert len([r for r in fleet.replicas.values()
+                if r.state in (HEALTHY, DRAINING)]) >= pol.min_replicas

@@ -31,6 +31,14 @@ def _argv(*extra):
     (["--arrival-rate", "-1.5"], "--arrival-rate"),
     (["--deadline-ms", "0"], "--deadline-ms"),
     (["--deadline-ms", "-250"], "--deadline-ms"),
+    (["--replicas", "0"], "--replicas"),
+    (["--kill-replica-at", "5"], "--replicas >= 2"),  # default pool of 1
+    (["--replicas", "4", "--kill-replica-at", "20000"], "drain bound"),
+    (["--replicas", "4", "--kill-replica-at", "5", "--kill-replica", "7"],
+     "initial pool"),
+    (["--replicas", "2", "--kill-replica", "1"], "--kill-replica-at"),
+    (["--replicas", "4", "--max-replicas", "2"], "--max-replicas"),
+    (["--scale-up-depth", "0"], "--scale-up-depth"),
 ])
 def test_bad_args_fail_at_parse_time(monkeypatch, capsys, extra, msg):
     monkeypatch.setattr(sys, "argv", _argv(*extra))
@@ -64,6 +72,21 @@ def test_token_budget_accepted_at_parse_time(monkeypatch, capsys):
         launch_serve.main()
     assert e.value.code == 2
     assert "arrival-rate" in capsys.readouterr().err
+
+
+def test_fleet_flags_accepted_at_parse_time(monkeypatch, capsys):
+    """A valid fleet configuration — pool of 4, kill schedule inside the
+    drain bound, autoscaling bounds above the pool — parses cleanly: the
+    parser takes it and dies on the NEXT invalid flag, proving every
+    fleet cross-flag contract passed."""
+    monkeypatch.setattr(sys, "argv", _argv(
+        "--replicas", "4", "--kill-replica-at", "12", "--kill-replica", "2",
+        "--max-replicas", "6", "--scale-up-depth", "3",
+        "--prefill-chunk", "-1"))
+    with pytest.raises(SystemExit) as e:
+        launch_serve.main()
+    assert e.value.code == 2
+    assert "prefill-chunk" in capsys.readouterr().err
 
 
 def test_new_scopes_accepted_at_parse_time(monkeypatch, capsys):
